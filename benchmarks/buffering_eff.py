@@ -1,0 +1,66 @@
+"""Buffering-mechanism effectiveness (paper Fig. 16): with streaming on, the
+live working set shrinks (paper: −37 % heap) for a small step-time overhead
+(paper: +8 %).
+
+Here: the same train step compiled with and without microbatch streaming;
+memory = XLA's temp-buffer estimate from memory_analysis(), time = measured
+CPU wall clock."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.executor import plan_and_compile
+from repro.core.ir import SystemCatalog
+from repro.models import build_model
+from repro.models.lm import CATALOG
+from repro.train.optim import cosine_schedule, make_optimizer
+from repro.train.train_step import init_state, make_train_step
+
+from .common import emit, time_fn
+
+SYS = SystemCatalog()
+
+
+def main():
+    cfg = get_smoke_config("qwen3-0.6b").replace(
+        dtype="float32", n_layers=4, d_model=128, heads=8, kv_heads=4,
+        head_dim=16, d_ff=512)
+    model = build_model(cfg)
+    b, s = 32, 128
+    plan = model.build_plan(b, s, mode="train")
+    fwd = plan_and_compile(plan, CATALOG, SYS, buffering=True,
+                           global_batch=b)
+    opt = make_optimizer("adamw", cosine_schedule(1e-3, 2, 100))
+    params, _ = model.init_params(jax.random.key(0))
+    state = init_state(params, opt)
+    rng = np.random.RandomState(0)
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab, (b, s)), jnp.int32)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+
+    rows, res = [], {}
+    for mode, nmb in (("blocking", 1),
+                      ("buffered", fwd.buffering.num_microbatches)):
+        step = make_train_step(fwd, opt, num_microbatches=nmb,
+                               grad_dtype="float32")
+        jstep = jax.jit(step)
+        comp = jstep.lower(jax.eval_shape(lambda: state),
+                           {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                            for k, v in batch.items()}).compile()
+        temp = comp.memory_analysis().temp_size_in_bytes
+        sec = time_fn(jstep, state, batch, warmup=1, iters=3)
+        res[mode] = (temp, sec)
+        rows.append((f"buffering/{mode}", sec * 1e6,
+                     f"microbatches={nmb} temp_bytes={temp}"))
+    dm = 1 - res["buffered"][0] / res["blocking"][0]
+    dt = res["buffered"][1] / res["blocking"][1] - 1
+    rows.append(("buffering/effect", 0.0,
+                 f"temp_mem_reduction={dm * 100:.1f}% "
+                 f"time_overhead={dt * 100:+.1f}% "
+                 f"(paper: 37% heap reduction, +8% time)"))
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

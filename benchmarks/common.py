@@ -1,0 +1,25 @@
+"""Shared benchmark utilities."""
+import time
+
+import jax
+
+
+def time_fn(fn, *args, warmup=2, iters=5):
+    """Median wall time of a jitted callable, in seconds."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(rows):
+    """Print ``name,us_per_call,derived`` CSV rows."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

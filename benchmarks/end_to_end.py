@@ -1,0 +1,95 @@
+"""End-to-end efficiency (paper Fig. 12/13).
+
+The paper compares SingleThread / DataParallel / AWESOME wall-clock on two
+workloads.  The analogue here, on one CPU core:
+
+  * naive       ≙ SingleThread — no rewrites (unfused q/k/v + full SDPA),
+                  first-candidate selection, no partitioning pass;
+  * dataparallel≙ + §5.2 partitioned parallelism — structural on 1 device
+                  (its pod-scale effect is the dry-run/roofline table);
+  * awesome     ≙ + fusion rewrites + learned-cost selection (+ buffering).
+
+Two workloads mirror PoliSci (mixed pipeline, moderate seq) and NewsAnalysis
+(long-sequence analytics where the cost model's banded-attention choice is
+the big win), each swept over input sizes like the paper's newsS / newsR.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.cost_model import CostModel
+from repro.core.executor import plan_and_compile
+from repro.core.ir import SystemCatalog
+from repro.models import build_model
+from repro.models.lm import CATALOG
+
+from .common import emit, time_fn
+
+SYS = SystemCatalog()
+
+# the paper's workflow: calibrate on this machine, select with the learned
+# model (falls back to the analytic roofline model when not yet calibrated)
+_COEFFS = "experiments/cost_coeffs.json"
+
+
+def _cost_model():
+    if os.path.exists(_COEFFS):
+        return CostModel.load(_COEFFS)
+    return None
+
+
+MODES = {
+    "naive": dict(rewrite_pipeline=("decompose",), data_parallel=False,
+                  allow_pallas=False),
+    "dataparallel": dict(rewrite_pipeline=("decompose",),
+                         data_parallel=True, allow_pallas=False),
+    "awesome": dict(data_parallel=True, allow_pallas=False),
+}
+
+
+def _run(arch, seq, batch=2, window=None):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    if window:
+        cfg = cfg.replace(window=window, local_ratio=5)
+    model = build_model(cfg)
+    plan = model.build_plan(batch, seq, mode="train")
+    params, _ = model.init_params(jax.random.key(0))
+    rng = np.random.RandomState(0)
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab, (batch, seq)), jnp.int32)
+    batch_d = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+
+    rows = []
+    base_us = None
+    cm = _cost_model()
+    for mode, kw in MODES.items():
+        fwd = plan_and_compile(plan, CATALOG, SYS,
+                               cost_model=cm if mode == "awesome" else None,
+                               **kw)
+        f = jax.jit(lambda p, b: jax.grad(
+            lambda pp: fwd(pp, b))(p)["final_norm"]["scale"][0])
+        sec = time_fn(f, params, batch_d, warmup=1, iters=3)
+        us = sec * 1e6
+        if mode == "naive":
+            base_us = us
+        rows.append((f"end_to_end/{arch}/seq{seq}/{mode}", us,
+                     f"speedup_vs_naive={base_us / us:.2f}x"))
+    return rows
+
+
+def main():
+    rows = []
+    # PoliSci analogue: moderate seq, dense pipeline
+    for seq in (64, 128):
+        rows += _run("qwen3-0.6b", seq)
+    # NewsAnalysis analogue: long-seq where banded attention wins
+    for seq in (256, 512):
+        rows += _run("gemma3-27b", seq, window=32)
+    emit(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,103 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: re-lower the three chosen cells under each
+candidate change and report the roofline-term deltas.
+
+Cells (see DESIGN.md):
+  1. llama4-maverick-400b × train_4k   — most collective-bound
+  2. gemma3-27b × prefill_32k          — technique-representative
+  3. qwen3-0.6b × decode_32k           — worst memory-bound fraction
+plus the chunked-engine fix for zamba2/rwkv6 train (worst absolute cells).
+
+    PYTHONPATH=src python -m benchmarks.perf_iters [--cell N]
+"""
+import argparse
+import json
+
+from repro.launch.dryrun import lower_cell
+from repro.launch.mesh import make_production_mesh
+from repro.core.ir import HardwareSpec
+
+HW = HardwareSpec()
+
+CELLS = {
+    "llama4_train": ("llama4-maverick-400b-a17b", "train_4k", [
+        ("rowgrouped_a2a", {}),
+        ("final_mb8", {"num_microbatches": 8}),
+        # refuted variants kept for the record (see EXPERIMENTS.md §Perf):
+        # expert_nofsdp (unpinned -> 5x replicated compute; pinned -> temp
+        # blow-up; the big AR is the Megatron TP activation all-reduce, not
+        # expert-weight FSDP), kv/no_fsdp combinations likewise.
+    ]),
+    "gemma3_prefill": ("gemma3-27b", "prefill_32k", [
+        ("baseline", {}),
+        ("sharded_store", {}),           # code change vs round-1 baseline
+        ("no_fsdp_inference", {"inference_rules": True}),
+        ("no_fsdp_bf16",
+         {"inference_rules": True,
+          "cfg_overrides": {"param_dtype": "bfloat16"}}),
+    ]),
+    "qwen3_decode": ("qwen3-0.6b", "decode_32k", [
+        ("baseline", {}),
+        ("kv_seq_sharded", {"kv_shard_seq": True}),      # refuted
+        ("kv_dim_sharded", {"kv_shard_dim": True}),      # refuted
+        ("kv_repeat_tp16", {"kv_repeat_tp": 16}),
+        ("int8_kv", {"quantize_kv": True}),
+        ("int8_kv_seq_sharded",
+         {"quantize_kv": True, "kv_shard_seq": True}),   # final config
+    ]),
+    "zamba2_train_engine": ("zamba2-7b", "train_4k", [
+        ("chunked_engine", {}),     # code change: ssd_chunked is now the
+                                    # XLA candidate (old baseline in log)
+    ]),
+    "rwkv6_train_engine": ("rwkv6-3b", "train_4k", [
+        ("chunked_engine", {}),
+    ]),
+    "gemma3_long_ring": ("gemma3-27b", "long_500k", [
+        ("baseline_full_cache", {}),
+        ("ring_local_cache", {"ring_local": True}),
+    ]),
+}
+
+
+def terms(rec):
+    return {
+        "t_compute": rec["flops"] / HW.peak_flops,
+        "t_memory": rec["hbm_bytes"] / HW.hbm_bw,
+        "t_collective": rec["wire_bytes"] / HW.ici_bw,
+        "temp_gb": (rec["memory"].get("temp_bytes") or 0) / 1e9,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--out", default="experiments/perf_iters")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    mesh = make_production_mesh()
+    for cell, (arch, shape, variants) in CELLS.items():
+        if args.cell and args.cell != cell:
+            continue
+        print(f"=== {cell}: {arch} × {shape} ===", flush=True)
+        for name, opts in variants:
+            path = os.path.join(args.out, f"{cell}__{name}.json")
+            try:
+                rec = lower_cell(arch, shape, mesh, opts=opts)
+                t = terms(rec)
+                rec["terms"] = t
+                rec["variant"] = name
+                with open(path, "w") as fh:
+                    json.dump(rec, fh, indent=1)
+                dom = max(t, key=lambda k: t[k] if k != "temp_gb" else -1)
+                print(f"  {name:28s} tc={t['t_compute']:.3g}s "
+                      f"tm={t['t_memory']:.3g}s tx={t['t_collective']:.3g}s "
+                      f"temp={t['temp_gb']:.1f}GB  dom={dom}", flush=True)
+            except Exception as e:
+                print(f"  {name:28s} FAIL: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline markdown tables from the
+dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.report > experiments/tables.md
+"""
+import glob
+import json
+import os
+
+from .roofline import HW, load_rows, model_flops
+
+
+def dryrun_table(mesh_tag):
+    rows = []
+    for path in sorted(glob.glob(f"experiments/dryrun/*__{mesh_tag}.json")):
+        r = json.load(open(path))
+        if r.get("status") != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | |")
+            continue
+        mem = r["memory"]
+        temp = (mem.get("temp_bytes") or 0) / 1e9
+        arg = (mem.get("argument_bytes") or 0) / 1e9
+        coll = r["collectives"]
+        sched = " ".join(f"{k.split('-')[-1][:4]}:{v['count']}"
+                         for k, v in coll.items() if v["count"])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['flops']:.2e} | "
+            f"{r['hbm_bytes']:.2e} | {r['wire_bytes']:.2e} | "
+            f"{arg:.1f}+{temp:.1f} | {sched} |")
+    head = (f"\n### {mesh_tag} ({'512' if mesh_tag == 'multipod' else '256'}"
+            " chips)\n\n"
+            "| arch | shape | FLOPs/dev | HBM B/dev | wire B/dev | "
+            "mem arg+temp GB | collective schedule (counts) |\n"
+            "|---|---|---|---|---|---|---|")
+    return "\n".join([head] + rows)
+
+
+def roofline_table():
+    rows = load_rows()
+    out = ["| arch | shape | t_comp s | t_mem s | t_coll s | dominant | "
+           "MODEL_FLOPS | useful ratio | roofline frac | next lever |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    levers = {
+        "compute": "remat policy / fused kernels",
+        "memory": "Pallas recurrent kernels / cache layout / microbatching",
+        "collective": "TP-AR (bf16 on TPU halves) / sharding rules",
+    }
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | | |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3g} | "
+            f"{r['t_memory']:.3g} | {r['t_collective']:.3g} | "
+            f"{r['dominant']} | {r['model_flops']:.2e} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{levers[r['dominant']]} |")
+    return "\n".join(out)
+
+
+def main():
+    print("## §Dry-run tables\n")
+    print(dryrun_table("singlepod"))
+    print()
+    print(dryrun_table("multipod"))
+    print("\n## §Roofline table (single-pod)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""§Roofline: per-(arch × shape × mesh) roofline terms from the dry-run
+artifacts (experiments/dryrun/*.json).
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s          (197e12 bf16)
+  memory     = HLO_bytes_per_device / HBM_bw               (819e9 B/s)
+  collective = wire_bytes_per_device / ICI_bw              (50e9 B/s)
+
+plus MODEL_FLOPS = 6·N·D (train) or 2·N_active·D (fwd) and the useful-compute
+ratio MODEL_FLOPS / (HLO_FLOPs × devices)."""
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.core.ir import HardwareSpec
+
+HW = HardwareSpec()
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count() if cfg.family == "moe" \
+        else cfg.param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def _useful_decode_bytes(arch: str, shape) -> float:
+    """Params (bf16) + KV/recurrent state bytes — the unavoidable per-token
+    HBM traffic of a decode step."""
+    import jax
+    from repro.models import build_model
+    from repro.models.decode import init_cache
+
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    cache = init_cache(model, shape.global_batch, shape.seq_len,
+                       abstract=True)
+    cache_bytes = sum(
+        float(np_prod(l.shape)) * jax.numpy.dtype(l.dtype).itemsize
+        for l in jax.tree.leaves(cache))
+    return cfg.param_count() * 2.0 + cache_bytes
+
+
+def np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= int(s)
+    return out
+
+
+def load_rows(dryrun_dir="experiments/dryrun", mesh_tag="singlepod"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir,
+                                              f"*__{mesh_tag}.json"))):
+        rec = json.load(open(path))
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": "fail"})
+            continue
+        dev = rec["devices"]
+        t_c = rec["flops"] / HW.peak_flops
+        t_m = rec["hbm_bytes"] / HW.hbm_bw
+        t_x = rec["wire_bytes"] / HW.ici_bw
+        dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+        mf = model_flops(rec["arch"], rec["shape"])
+        ratio = mf / max(rec["flops"] * dev, 1.0)
+        bound = max(t_c, t_m, t_x)
+        shape = SHAPES[rec["shape"]]
+        if shape.kind == "decode":
+            # decode is memory-bound by physics: the roofline fraction is
+            # MBU-style — useful bytes (params + KV cache, each read once
+            # per token) over the HBM bytes the compiled step actually moves
+            useful = _useful_decode_bytes(rec["arch"], shape) / dev
+            frac = min(1.0, useful / max(rec["hbm_bytes"], 1.0))
+        else:
+            # train/prefill: MFU-style — useful model flops vs what the
+            # dominant term allows at peak
+            frac = (mf / dev / HW.peak_flops) / bound if bound else 0.0
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+            "devices": dev, "t_compute": t_c, "t_memory": t_m,
+            "t_collective": t_x, "dominant": dom,
+            "model_flops": mf, "useful_ratio": ratio,
+            "roofline_frac": frac,
+            "temp_gb": (rec["memory"].get("temp_bytes") or 0) / 1e9,
+            "selected": rec.get("selected", []),
+        })
+    return rows
+
+
+def main():
+    rows = load_rows()
+    out = []
+    for r in rows:
+        if r["status"] != "ok":
+            out.append((f"roofline/{r['arch']}/{r['shape']}", 0.0, "FAIL"))
+            continue
+        out.append((
+            f"roofline/{r['arch']}/{r['shape']}",
+            max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e6,
+            f"dom={r['dominant']} frac={r['roofline_frac']:.3f} "
+            f"useful={r['useful_ratio']:.2f} "
+            f"tc={r['t_compute']:.2e} tm={r['t_memory']:.2e} "
+            f"tx={r['t_collective']:.2e} temp={r['temp_gb']:.1f}GB"))
+    for name, us, d in out:
+        print(f"{name},{us:.1f},{d}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

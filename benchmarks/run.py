@@ -1,0 +1,43 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints ``name,us_per_call,derived`` CSV."""
+import argparse
+import sys
+import traceback
+
+SUITES = (
+    ("end_to_end", "Fig. 12/13 — SingleThread/DataParallel/AWESOME"),
+    ("cost_model_eff", "Fig. 14/15 — candidate plans vs cost-model choice"),
+    ("fusion_eff", "Fig. 5/15 — map fusion"),
+    ("buffering_eff", "Fig. 16 — buffering memory/time"),
+    ("calibration_curves", "Fig. 10/11 + Table 4 — calibration + fit"),
+    ("pipeline_vs_dp", "§5.4/App. C — pipeline+DP vs DP (negative result)"),
+    ("roofline", "§Roofline — dry-run derived terms"),
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name, desc in SUITES:
+        if args.only and args.only != mod_name:
+            continue
+        print(f"# {mod_name}: {desc}", flush=True)
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["main"])
+            mod.main()
+        except Exception as e:
+            failures.append(mod_name)
+            traceback.print_exc()
+            print(f"{mod_name}/ERROR,0.0,{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

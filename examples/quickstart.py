@@ -1,0 +1,52 @@
+"""Quickstart: define a model config, let the AWESOME planner pick physical
+plans, and take a few training steps on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core.executor import plan_and_compile
+from repro.core.ir import SystemCatalog
+from repro.data.pipeline import DataConfig, synth_batch
+from repro.models import build_model
+from repro.models.lm import CATALOG
+from repro.train.optim import cosine_schedule, make_optimizer
+from repro.train.train_step import init_state, make_train_step
+
+
+def main():
+    cfg = get_smoke_config("gemma3-27b").replace(dtype="float32")
+    model = build_model(cfg)
+    b, s = 4, 32
+
+    # 1. the workload's logical plan (ADIL analysis block)
+    plan = model.build_plan(b, s, mode="train")
+    print(f"logical plan: {len(plan)} nodes "
+          f"(+{sum(len(n.subplan) for n in plan.topo() if n.subplan)} in "
+          f"scan subplans)")
+
+    # 2. rewrite -> candidates -> cost-model selection -> data parallelism
+    fwd = plan_and_compile(plan, CATALOG, SystemCatalog(),
+                           allow_pallas=True)
+    for r in fwd.report:
+        print(f"virtual node [{r['pattern']}] -> {r['chosen']} "
+              f"(costs: { {k: f'{v:.2e}' for k, v in r['costs'].items()} })")
+
+    # 3. train
+    opt = make_optimizer("adamw", cosine_schedule(3e-3, 5, 100))
+    step = jax.jit(make_train_step(fwd, opt, grad_dtype="float32"))
+    params, _ = model.init_params(jax.random.key(0))
+    state = init_state(params, opt)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=s, global_batch=b)
+    for i in range(20):
+        batch = {k: jnp.asarray(v) for k, v in synth_batch(dc, i).items()}
+        state, m = step(state, batch)
+        if i % 5 == 0:
+            print(f"step {i:3d}  loss {float(m['loss']):.4f}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

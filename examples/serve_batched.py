@@ -1,0 +1,19 @@
+"""Batched serving example: prefill a batch of prompts, decode with KV
+caches (ring-buffer caches for gemma3's sliding-window layers).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch import serve as serve_mod
+
+
+def main():
+    print("== gemma3 (local:global attention, ring-buffer local caches) ==")
+    serve_mod.main(["--arch", "gemma3-27b", "--smoke", "--batch", "2",
+                    "--prompt-len", "12", "--gen", "12", "--ring-local"])
+    print("\n== rwkv6 (attention-free, O(1) state) ==")
+    serve_mod.main(["--arch", "rwkv6-3b", "--smoke", "--batch", "2",
+                    "--prompt-len", "12", "--gen", "12"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""ADIL-style analysis front end (paper §2).
+
+The paper's ADIL is a textual dataflow language; its JAX-native analogue is
+a builder that gives the same *semantics* — assignment statements over typed
+variables, strict compile-time validation, higher-order map/filter/reduce,
+and `store` effects — as an embedded DSL whose product is a validated
+logical :class:`~repro.core.ir.Plan` ready for the AWESOME pipeline.
+
+    with Analysis("NewsAnalysis", catalog) as a:
+        toks = a.input("tokens", TensorT((4, 64), "int32", ("batch","seq")))
+        h = a.op("embed", toks, vocab=512, embed=64, pp=("embed",))
+        h = a.op("attention", h, heads=4, kv_heads=2, head_dim=16,
+                 embed=64, pp=("attn",))
+        a.store(h)
+    fn = a.compile(syscat)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+from .executor import PlannedFunction, plan_and_compile
+from .ir import (FunctionCatalog, Plan, SystemCatalog, Type, ValidationError,
+                 infer_types)
+
+
+@dataclass(frozen=True)
+class Var:
+    """A typed ADIL variable (an SSA name into the plan)."""
+
+    name: str
+    analysis: "Analysis"
+
+    @property
+    def type(self) -> Type:
+        return self.analysis.plan.types[self.name]
+
+    def __repr__(self):
+        t = self.analysis.plan.types.get(self.name)
+        return f"Var({self.name}: {t!r})"
+
+
+class Analysis:
+    """One `create analysis ... as {{ ... }}` block."""
+
+    def __init__(self, name: str, catalog: FunctionCatalog):
+        self.plan = Plan(name)
+        self.catalog = catalog
+        self._stores: list = []
+
+    # -- statements ----------------------------------------------------------
+    def input(self, name: str, typ: Type) -> Var:
+        self.plan.add_input(name, typ)
+        return Var(name, self)
+
+    def op(self, op_name: str, *inputs, subplan: Optional[Plan] = None,
+           **attrs) -> Var:
+        ids = [v.name if isinstance(v, Var) else v for v in inputs]
+        nid = self.plan.add(op_name, ids, attrs, subplan)
+        # validate eagerly — every assignment type-checks at once (§3)
+        infer_types(self.plan, self.catalog)
+        return Var(nid, self)
+
+    def map(self, coll: Var, body_plan: Plan) -> Var:
+        return self.op("map", coll, subplan=body_plan)
+
+    def filter(self, coll: Var, predicate) -> Var:
+        return self.op("filter", coll, predicate=predicate)
+
+    def reduce(self, coll: Var, fn) -> Var:
+        return self.op("reduce", coll, fn=fn)
+
+    def store(self, var: Var, **attrs) -> Var:
+        nid = self.plan.add("store", [var.name], attrs)
+        infer_types(self.plan, self.catalog)
+        self._stores.append(nid)
+        return Var(nid, self)
+
+    # -- context manager sugar -------------------------------------------------
+    def __enter__(self):
+        return self
+
+    def __exit__(self, et, ev, tb):
+        if et is None:
+            if not self._stores:
+                raise ValidationError(
+                    f"analysis {self.plan.name!r} has no store statements")
+            self.plan.set_outputs(*self._stores)
+        return False
+
+    # -- compilation through the AWESOME pipeline ------------------------------
+    def compile(self, syscat: SystemCatalog, **kw) -> PlannedFunction:
+        if not self.plan.outputs:
+            self.plan.set_outputs(*self._stores)
+        return plan_and_compile(self.plan, self.catalog, syscat, **kw)

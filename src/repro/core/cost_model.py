@@ -1,0 +1,388 @@
+"""Learned cost model (paper §6).
+
+The paper trains, per physical operator, a linear regression over the
+degree-2 polynomial expansion of raw features (Eq. 2), estimates a candidate
+sub-plan's cost as the **sum** of its operators' costs (Eq. 1 — valid because
+AWESOME applies no task parallelism; same for us, a candidate chain executes
+sequentially inside the jitted step), and at run time — once input sizes are
+known — scores each virtual node's candidates and selects the argmin (§6.3).
+
+Raw features here are the TPU analogues of the paper's table sizes / node
+counts / keyword-list sizes: token counts, operand widths, and the three
+roofline terms (per-device FLOPs / HBM bytes / interconnect bytes scaled by
+the hardware peaks from the system catalog).  Before any calibration the
+model falls back to the *analytic* roofline sum — which is itself an instance
+of Eq. 2 with known weights (w=1 on the three roofline features) — so the
+planner is always total.  Calibration (``calibrate.py``) refits the weights
+from measured timings, exactly the paper's §6.2 loop.
+"""
+from __future__ import annotations
+
+import json
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from .ir import ScalarT, SystemCatalog, TensorT, TupleT, dtype_bytes
+from .physical import PhysPlan, Candidate
+
+# --------------------------------------------------------------------------
+# Raw feature extraction (paper §6.2 "Operators and features")
+# --------------------------------------------------------------------------
+
+FEATURE_NAMES = ("f_compute", "f_memory", "f_network", "tokens_m", "width_k")
+
+_ESTIMATORS: dict = {}
+
+
+def estimator(*impls):
+    def deco(fn):
+        for i in impls:
+            _ESTIMATORS[i] = fn
+        return fn
+    return deco
+
+
+def _tensor_like(t):
+    if isinstance(t, TupleT):
+        return _tensor_like(t.elems[0])
+    return t if isinstance(t, TensorT) else None
+
+
+def _tokens(t):
+    tt = _tensor_like(t)
+    if tt is None:
+        return 1
+    n = 1
+    for name in ("batch", "seq"):
+        if tt.has_dim(name):
+            n *= tt.dim(name)
+    return n
+
+
+def _sum_bytes(types):
+    out = 0
+    for t in types:
+        if isinstance(t, TupleT):
+            out += _sum_bytes(t.elems)
+        elif isinstance(t, TensorT):
+            out += t.bytesize()
+    return out
+
+
+@dataclass
+class OpCost:
+    """Raw flops / bytes / collective-bytes for one op instance, device-local."""
+
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+
+
+def _proj_cost(in_t, d_out_total, syscat, tp_sharded=True):
+    t = _tensor_like(in_t)
+    toks = _tokens(t)
+    d_in = t.shape[-1] if t else 1
+    dp = syscat.axis_size("data") * syscat.axis_size("pod")
+    tp = syscat.axis_size("model") if tp_sharded else 1
+    flops = 2.0 * toks * d_in * d_out_total / (dp * tp)
+    bts = (toks * d_in * dtype_bytes(t.dtype) / dp
+           + d_in * d_out_total * 4 / tp
+           + toks * d_out_total * dtype_bytes(t.dtype) / (dp * tp))
+    return OpCost(flops, bts, 0.0)
+
+
+@estimator("q_proj_xla", "k_proj_xla", "v_proj_xla")
+def _e_proj(in_types, attrs, syscat):
+    d_out = attrs["heads"] * attrs["head_dim"]
+    return _proj_cost(in_types[0], d_out, syscat)
+
+
+@estimator("qkv_proj_fused")
+def _e_qkv(in_types, attrs, syscat):
+    d_out = (attrs["heads"] + 2 * attrs["kv_heads"]) * attrs["head_dim"]
+    c = _proj_cost(in_types[0], d_out, syscat)
+    # fused: one pass over the activations instead of three
+    t = _tensor_like(in_types[0])
+    c.bytes -= 2 * _tokens(t) * t.shape[-1] * dtype_bytes(t.dtype) / (
+        syscat.axis_size("data") * syscat.axis_size("pod"))
+    return c
+
+
+@estimator("out_proj_xla")
+def _e_outp(in_types, attrs, syscat):
+    t = _tensor_like(in_types[0])
+    d_in = t.shape[-1] * t.shape[-2] if t.rank >= 2 else t.shape[-1]
+    return _proj_cost(in_types[0], attrs["embed"], syscat)
+
+
+def _attn_dims(in_types, attrs):
+    t = _tensor_like(in_types[0])
+    b = t.dim("batch") if t.has_dim("batch") else 1
+    s = t.dim("seq") if t.has_dim("seq") else 1
+    return b, s, attrs["heads"], attrs["head_dim"]
+
+
+@estimator("sdpa_xla")
+def _e_sdpa(in_types, attrs, syscat):
+    b, s, h, d = _attn_dims(in_types, attrs)
+    kv = s if "kv_seq" not in attrs else attrs["kv_seq"]
+    causal = 0.5 if attrs.get("causal", True) and kv == s else 1.0
+    dp = syscat.axis_size("data") * syscat.axis_size("pod")
+    tp = syscat.axis_size("model")
+    flops = 4.0 * b * s * kv * h * d * causal / (dp * tp)
+    # full materialized scores: S×KV logits written+read in fp32
+    bts = (b * h * s * kv * 8 * causal / (dp * tp)
+           + 2 * b * s * h * d * 2 / (dp * tp)
+           + 2 * b * kv * attrs["kv_heads"] * d * 2 / (dp * tp))
+    return OpCost(flops, bts, 0.0)
+
+
+@estimator("sdpa_banded_xla")
+def _e_banded(in_types, attrs, syscat):
+    b, s, h, d = _attn_dims(in_types, attrs)
+    w = min(attrs.get("window") or s, s)
+    dp = syscat.axis_size("data") * syscat.axis_size("pod")
+    tp = syscat.axis_size("model")
+    flops = 4.0 * b * s * w * h * d / (dp * tp)
+    bts = (b * h * s * w * 8 / (dp * tp) + 4 * b * s * h * d * 2 / (dp * tp))
+    return OpCost(flops, bts, 0.0)
+
+
+@estimator("attn_flash_pallas")
+def _e_flash(in_types, attrs, syscat):
+    c = _e_sdpa(in_types, attrs, syscat)
+    # online softmax: no materialized S×KV logits; only q/k/v/o HBM traffic
+    b, s, h, d = _attn_dims(in_types, attrs)
+    kv = s if "kv_seq" not in attrs else attrs["kv_seq"]
+    dp = syscat.axis_size("data") * syscat.axis_size("pod")
+    tp = syscat.axis_size("model")
+    c.bytes = (2 * b * s * h * d * 2 + 2 * b * kv * attrs["kv_heads"] * d * 2) \
+        / (dp * tp)
+    return c
+
+
+@estimator("mlp_fused_xla", "ffn_up_xla", "ffn_gate_xla", "ffn_down_xla")
+def _e_mlp(in_types, attrs, syscat):
+    t = _tensor_like(in_types[0])
+    toks = _tokens(t)
+    d = t.shape[-1]
+    f = attrs.get("ffn", attrs.get("embed", d))
+    mult = 3.0 if "mlp_fused" in str(attrs.get("pattern", "")) or \
+        attrs.get("gated", False) else 1.0
+    dp = syscat.axis_size("data") * syscat.axis_size("pod")
+    tp = syscat.axis_size("model")
+    flops = 2.0 * toks * d * f * mult / (dp * tp)
+    bts = (toks * d * dtype_bytes(t.dtype) / dp + d * f * mult * 4 / tp)
+    return OpCost(flops, bts, 0.0)
+
+
+@estimator("moe_dense_onehot")
+def _e_moe_dense(in_types, attrs, syscat):
+    t = _tensor_like(in_types[0])
+    toks = _tokens(t)
+    d = t.shape[-1]
+    f, e, k = attrs["ffn"], attrs["experts"], attrs["top_k"]
+    cf = attrs.get("capacity_factor", 2.0)
+    cap = max(1, int(toks * k * cf / e))
+    dp = syscat.axis_size("data") * syscat.axis_size("pod")
+    tp = syscat.axis_size("model")
+    expert_flops = 2.0 * e * cap * 3 * d * f / (dp * tp)
+    dispatch_flops = 2.0 * 2 * toks * e * cap * 1 / dp  # dispatch+combine einsum
+    # all-to-all: tokens cross the model axis to reach their experts
+    a2a = toks * d * 2 * 2 / dp
+    return OpCost(expert_flops + dispatch_flops,
+                  (toks * d * 2 + e * 3 * d * f * 4 / tp) / dp, a2a)
+
+
+@estimator("moe_dropping")
+def _e_moe_drop(in_types, attrs, syscat):
+    # capacity-1.0 dispatch: overflow tokens drop, halving expert flops vs the
+    # cf=2.0 dense dispatch (a speed/quality tradeoff the config must opt into)
+    a = dict(attrs)
+    a["capacity_factor"] = attrs.get("capacity_factor_dropped", 1.0)
+    return _e_moe_dense(in_types, a, syscat)
+
+
+@estimator("moe_gmm_pallas")
+def _e_moe_gmm(in_types, attrs, syscat):
+    t = _tensor_like(in_types[0])
+    toks = _tokens(t)
+    d = t.shape[-1]
+    f, e, k = attrs["ffn"], attrs["experts"], attrs["top_k"]
+    dp = syscat.axis_size("data") * syscat.axis_size("pod")
+    tp = syscat.axis_size("model")
+    # dropless grouped matmul: exactly tokens·k expert rows, no padding
+    flops = 2.0 * toks * k * 3 * d * f / (dp * tp)
+    a2a = toks * d * 2 * 2 / dp
+    return OpCost(flops, (toks * d * 2 + e * 3 * d * f * 4 / tp) / dp, a2a)
+
+
+@estimator("wkv6_scan_xla", "wkv6_pallas", "ssd_chunked_xla", "ssd_pallas")
+def _e_recurrent(in_types, attrs, syscat):
+    t = _tensor_like(in_types[0])
+    toks = _tokens(t)
+    h, d = attrs["heads"], attrs["head_dim"]
+    n = attrs.get("state", d)
+    dp = syscat.axis_size("data") * syscat.axis_size("pod")
+    tp = syscat.axis_size("model")
+    flops = 2.0 * toks * h * d * n * 3 / (dp * tp)
+    bts = toks * h * d * 2 * 4 / (dp * tp)
+    if attrs.get("_impl_pallas"):
+        bts /= 2  # fused state in VMEM
+    return OpCost(flops, bts, 0.0)
+
+
+@estimator("embed_gather")
+def _e_embed(in_types, attrs, syscat):
+    t = _tensor_like(in_types[0])
+    toks = _tokens(t) or t.size()
+    dp = syscat.axis_size("data") * syscat.axis_size("pod")
+    return OpCost(0.0, toks * attrs["embed"] * 2 / dp, 0.0)
+
+
+@estimator("unembed_matmul")
+def _e_unembed(in_types, attrs, syscat):
+    return _proj_cost(in_types[0], attrs["vocab"], syscat)
+
+
+def op_cost(impl: str, in_types, attrs, syscat: SystemCatalog) -> OpCost:
+    fn = _ESTIMATORS.get(impl)
+    if fn is None:
+        return OpCost(0.0, _sum_bytes(in_types) /
+                      max(1, syscat.axis_size("data") * syscat.axis_size("pod")),
+                      0.0)
+    a = dict(attrs)
+    if impl.endswith("_pallas"):
+        a["_impl_pallas"] = True
+    return fn(in_types, a, syscat)
+
+
+def raw_features(impl, in_types, attrs, syscat) -> dict:
+    """The paper's raw feature vector f1..fn for one operator instance."""
+    c = op_cost(impl, in_types, attrs, syscat)
+    hw = syscat.hardware
+    t = _tensor_like(in_types[0]) if in_types else None
+    return {
+        "f_compute": c.flops / hw.peak_flops,
+        "f_memory": c.bytes / hw.hbm_bw,
+        "f_network": c.coll_bytes / hw.ici_bw,
+        "tokens_m": (_tokens(t) if t is not None else 0) / 1e6,
+        "width_k": (t.shape[-1] if t is not None and t.rank else 0) / 1e3,
+    }
+
+
+# --------------------------------------------------------------------------
+# Eq. 2 — degree-2 polynomial regression per operator
+# --------------------------------------------------------------------------
+
+
+def poly2(x: np.ndarray) -> np.ndarray:
+    """[1, xi..., xi^2..., xi*xj...] exactly as Eq. 2."""
+    n = x.shape[-1]
+    feats = [np.ones(x.shape[:-1] + (1,)), x, x * x]
+    cross = [x[..., i:i + 1] * x[..., j:j + 1]
+             for i in range(n) for j in range(i + 1, n)]
+    return np.concatenate(feats + cross, axis=-1)
+
+
+@dataclass
+class CostModel:
+    """Per-operator learned weights; falls back to analytic roofline."""
+
+    weights: dict = field(default_factory=dict)  # impl -> np.ndarray
+    feature_names: tuple = FEATURE_NAMES
+
+    # -- Eq. 2 -------------------------------------------------------------
+    def op_seconds(self, impl, in_types, attrs, syscat) -> float:
+        f = raw_features(impl, in_types, attrs, syscat)
+        if impl in self.weights:
+            x = np.array([f[k] for k in self.feature_names])
+            return float(poly2(x[None, :])[0] @ self.weights[impl])
+        # analytic fallback: roofline additive model (known-weight Eq. 2)
+        return f["f_compute"] + f["f_memory"] + f["f_network"]
+
+    # -- Eq. 1 -------------------------------------------------------------
+    def chain_seconds(self, impls, in_types, attrs, syscat) -> float:
+        return sum(self.op_seconds(i, in_types, attrs, syscat) for i in impls)
+
+    # -- §6.2 fit ------------------------------------------------------------
+    def fit(self, samples, ridge: float = 1e-8):
+        """samples: iterable of (impl, feature-dict, measured_seconds)."""
+        by_impl: dict = {}
+        for impl, f, t in samples:
+            by_impl.setdefault(impl, []).append((f, t))
+        for impl, rows in by_impl.items():
+            X = np.stack([np.array([f[k] for k in self.feature_names])
+                          for f, _ in rows])
+            y = np.array([t for _, t in rows])
+            P = poly2(X)
+            A = P.T @ P + ridge * np.eye(P.shape[1])
+            self.weights[impl] = np.linalg.solve(A, P.T @ y)
+        return self
+
+    def predict_samples(self, samples):
+        out = []
+        for impl, f, _ in samples:
+            x = np.array([f[k] for k in self.feature_names])
+            if impl in self.weights:
+                out.append(float(poly2(x[None, :])[0] @ self.weights[impl]))
+            else:
+                out.append(f["f_compute"] + f["f_memory"] + f["f_network"])
+        return np.array(out)
+
+    # -- persistence ---------------------------------------------------------
+    def save(self, path):
+        with open(path, "w") as fh:
+            json.dump({k: v.tolist() for k, v in self.weights.items()}, fh)
+
+    @classmethod
+    def load(cls, path):
+        with open(path) as fh:
+            w = json.load(fh)
+        return cls({k: np.array(v) for k, v in w.items()})
+
+
+# --------------------------------------------------------------------------
+# §6.3 — run-time candidate selection at each virtual node
+# --------------------------------------------------------------------------
+
+
+def select_candidates(pp: PhysPlan, syscat: SystemCatalog,
+                      model: Optional[CostModel] = None,
+                      allow_pallas: bool = False) -> tuple:
+    """Score every virtual node's candidates (Eq. 1 over the chain) and pick
+    the argmin.  Returns (choices dict incl. nested subplans, report list)."""
+    model = model or CostModel()
+    choices: dict = {}
+    report = []
+
+    def visit(plan: PhysPlan):
+        for n in plan.topo():
+            if n.subplan is not None:
+                visit(n.subplan)
+            if not n.virtual:
+                continue
+            in_types = [plan.types.get(i) or plan.inputs.get(i)
+                        for i in n.inputs]
+            scored = []
+            for cand in plan.pm[n.id]:
+                if cand.requires_backend == "pallas" and not allow_pallas:
+                    continue
+                sec = model.chain_seconds(cand.impls, in_types, n.attrs, syscat)
+                scored.append((sec, cand))
+            if not scored:
+                raise RuntimeError(f"no available candidate for {n.id}")
+            scored.sort(key=lambda x: x[0])
+            choices[n.id] = scored[0][1]
+            report.append({
+                "virtual": n.id,
+                "pattern": n.attrs.get("pattern"),
+                "chosen": scored[0][1].name,
+                "costs": {c.name: s for s, c in scored},
+            })
+
+    visit(pp)
+    return choices, report

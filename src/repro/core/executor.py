@@ -1,0 +1,549 @@
+"""Physical-plan executor: walks the chosen physical DAG and emits JAX.
+
+The executor is the AWESOME "execution stage": it receives the optimized
+logical plan, generates candidate physical plans (physical.py), asks the
+learned cost model to pick each virtual node's winner (§6.3), applies the
+partitioned-data-parallelism insertion (§5.2), and then interprets the
+resulting DAG as a pure JAX function — jit-able, differentiable, and
+shardable on a mesh.
+
+Param binding: nodes carry a ``pp`` attr (param path into the model's param
+pytree).  ``scan_layers_xla`` executes its subplan under ``jax.lax.scan``
+over the stacked per-layer params (the paper's Map node, with map-fusion
+applied at the logical level), with optional rematerialization policy.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import parallel as par
+from .buffering import BufferingDecision, plan_buffering
+from .cost_model import CostModel, select_candidates
+from .ir import FunctionCatalog, Plan, SystemCatalog
+from .physical import PhysPlan, generate_candidates, materialize_choice
+from .rewrite import rewrite
+from ..layers import attention as A
+from ..layers import embedding as E
+from ..layers import mamba as M
+from ..layers import mlp as F
+from ..layers import moe as X
+from ..layers import rwkv as R
+from ..layers.common import rmsnorm
+
+P = jax.sharding.PartitionSpec
+
+
+# --------------------------------------------------------------------------
+# sharding rules: semantic dim name -> mesh axes
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShardingRules:
+    """MaxText-style logical-axis rules.  ``param`` maps weight dim names,
+    ``act`` maps activation dim names."""
+
+    act: tuple = (
+        ("batch", ("pod", "data")),
+        ("heads", ("model",)),
+        ("kv_heads", ("model",)),
+        ("ffn", ("model",)),
+        ("vocab", ("model",)),
+        ("experts", ("model",)),
+    )
+    param: tuple = (
+        ("embed", ("data",)),          # FSDP / ZeRO-3: shard embed over data
+        ("vocab", ("model",)),
+        ("ffn", ("model",)),
+        ("heads_flat", ("model",)),
+        ("kv_flat", ("model",)),
+        ("experts", ("model",)),
+        ("inner", ("model",)),
+        ("inner_cat", ("model",)),
+        ("inner_cat2", ("model",)),
+    )
+    # expert weights already divide 16× over `model` via EP; FSDP-sharding
+    # their embed dim over `data` additionally makes every expert matmul a
+    # partial-sum + all-reduce of the (E, tokens, ffn) output (measured
+    # 1.26e12 B/device on llama4×train_4k).  True ⇒ replicate expert weights
+    # over data, killing that all-reduce.
+    no_fsdp_experts: bool = False
+
+    def _lookup(self, table, dim, mesh):
+        for d, axes in table:
+            if d == dim:
+                ax = tuple(a for a in axes if a in mesh.axis_names)
+                if len(ax) == 1:
+                    return ax[0]
+                return ax if ax else None
+        return None
+
+    def _spec(self, table, dims, mesh, *, is_param=False) -> P:
+        # each mesh axis may appear at most once per spec: first dim wins
+        used: set = set()
+        out = []
+        skip_fsdp = (is_param and self.no_fsdp_experts
+                     and "experts" in dims)
+        for d in dims:
+            if skip_fsdp and d == "embed":
+                out.append(None)
+                continue
+            ax = self._lookup(table, d, mesh)
+            axes = (ax,) if isinstance(ax, str) else (ax or ())
+            if any(a in used for a in axes):
+                out.append(None)
+                continue
+            used.update(axes)
+            out.append(ax)
+        return P(*out)
+
+    def act_spec(self, dims, mesh) -> P:
+        return self._spec(self.act, dims, mesh)
+
+    def param_spec(self, dims, mesh) -> P:
+        return self._spec(self.param, dims, mesh, is_param=True)
+
+
+def params_sharding(specs_tree, mesh, rules: ShardingRules):
+    """Map a specs pytree (tuples of dim names) to NamedShardings."""
+    def one(spec):
+        return jax.sharding.NamedSharding(mesh, rules.param_spec(spec, mesh))
+    return jax.tree.map(one, specs_tree,
+                        is_leaf=lambda s: isinstance(s, tuple) and all(
+                            isinstance(x, str) for x in s))
+
+
+# --------------------------------------------------------------------------
+# execution context
+# --------------------------------------------------------------------------
+
+@dataclass
+class ExecContext:
+    root: Any                       # full param pytree
+    scope: Any                      # current scope (layer slice under scan)
+    aux: dict = field(default_factory=dict)   # positions, masks, memory, ...
+    mesh: Optional[Any] = None
+    rules: ShardingRules = ShardingRules()
+    interpret: bool = True          # pallas interpret mode (CPU container)
+
+    def params_for(self, node):
+        path = node.attrs.get("pp")
+        if path is None:
+            return self.scope
+        base = self.root if node.attrs.get("shared") else self.scope
+        for k in path:
+            base = base[k]
+        return base
+
+    def constrain(self, x, dims):
+        if self.mesh is None or not hasattr(x, "ndim"):
+            return x
+        if len(dims) != x.ndim:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh,
+                                          self.rules.act_spec(dims, self.mesh)))
+
+
+# --------------------------------------------------------------------------
+# impl registry
+# --------------------------------------------------------------------------
+
+IMPLS: dict = {}
+
+
+def impl(*names):
+    def deco(fn):
+        for n in names:
+            IMPLS[n] = fn
+        return fn
+    return deco
+
+
+@impl("identity", "store")
+def _i_identity(ctx, args, node):
+    return args[0]
+
+
+@impl("const")
+def _i_const(ctx, args, node):
+    return node.attrs["value"]
+
+
+@impl("partition")
+def _i_partition(ctx, args, node):
+    x = args[0]
+    if ctx.mesh is None or not hasattr(x, "ndim"):
+        return x
+    dims = [None] * x.ndim
+    dims[node.attrs.get("dim_index", 0)] = node.attrs.get("dim", "batch")
+    spec = [None] * x.ndim
+    spec[node.attrs.get("dim_index", 0)] = tuple(
+        a for a in ("pod", "data") if a in ctx.mesh.axis_names) or None
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, P(*spec)))
+
+
+@impl("merge")
+def _i_merge(ctx, args, node):
+    x = args[0]
+    if ctx.mesh is None or not hasattr(x, "ndim"):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(ctx.mesh, P(*([None] * x.ndim))))
+
+
+@impl("embed_gather")
+def _i_embed(ctx, args, node):
+    p = ctx.params_for(node)
+    out = E.embed(p, args[0], scale=node.attrs.get("scale", False))
+    out = out.astype(node.attrs.get("dtype", out.dtype))
+    return ctx.constrain(out, ("batch", None, None))
+
+
+@impl("rmsnorm_xla")
+def _i_rmsnorm(ctx, args, node):
+    p = ctx.params_for(node)
+    return rmsnorm(args[0], p["scale"])
+
+
+@impl("residual_add_xla")
+def _i_resid(ctx, args, node):
+    return args[0] + args[1]
+
+
+def _attn_cfg(node):
+    a = node.attrs
+    return a["heads"], a["kv_heads"], a["head_dim"]
+
+
+@impl("q_proj_xla")
+def _i_qproj(ctx, args, node):
+    h, k, d = _attn_cfg(node)
+    return A.project_q(ctx.params_for(node), args[0], h, d)
+
+
+@impl("k_proj_xla")
+def _i_kproj(ctx, args, node):
+    h, k, d = _attn_cfg(node)
+    return A.project_kv(ctx.params_for(node), args[0], k, d)[0]
+
+
+@impl("v_proj_xla")
+def _i_vproj(ctx, args, node):
+    h, k, d = _attn_cfg(node)
+    return A.project_kv(ctx.params_for(node), args[0], k, d)[1]
+
+
+@impl("pack_qkv_xla")
+def _i_pack(ctx, args, node):
+    return tuple(args)
+
+
+@impl("qkv_proj_fused")
+def _i_qkv_fused(ctx, args, node):
+    h, k, d = _attn_cfg(node)
+    q, kk, vv = A.project_qkv_fused(ctx.params_for(node), args[0], h, k, d)
+    model_size = (ctx.mesh.shape.get("model", 1)
+                  if ctx.mesh is not None else 1)
+    if h % max(model_size, 1) == 0:
+        q = ctx.constrain(q, ("batch", None, "heads", None))
+    if k % max(model_size, 1) == 0:
+        # GQA: constrain kv heads only when divisible; otherwise leave the
+        # layout to propagation (kv replicates across excess model shards)
+        kk = ctx.constrain(kk, ("batch", None, "kv_heads", None))
+        vv = ctx.constrain(vv, ("batch", None, "kv_heads", None))
+    return (q, kk, vv)
+
+
+def _prep(ctx, node, q, k):
+    p = ctx.params_for(node)
+    pos = ctx.aux.get("positions")
+    if pos is None:
+        pos = jnp.arange(q.shape[1])[None, :]
+    return A.qk_prep(p, q, k, pos, qk_norm=node.attrs.get("qk_norm", False),
+                     use_rope=node.attrs.get("rope", True),
+                     rope_theta=node.attrs.get("rope_theta", 10000.0))
+
+
+@impl("sdpa_xla")
+def _i_sdpa(ctx, args, node):
+    q, k, v = args[0]
+    q, k = _prep(ctx, node, q, k)
+    return A.sdpa_full(q, k, v, causal=node.attrs.get("causal", True),
+                       window=node.attrs.get("window", 0) or 0)
+
+
+@impl("sdpa_banded_xla")
+def _i_banded(ctx, args, node):
+    q, k, v = args[0]
+    q, k = _prep(ctx, node, q, k)
+    return A.sdpa_banded(q, k, v, window=node.attrs.get("window", 0) or 0,
+                         causal=node.attrs.get("causal", True))
+
+
+@impl("attn_flash_pallas")
+def _i_flash(ctx, args, node):
+    q, k, v = args[0]
+    q, k = _prep(ctx, node, q, k)
+    return A.sdpa_flash(q, k, v, causal=node.attrs.get("causal", True),
+                        window=node.attrs.get("window", 0) or 0,
+                        interpret=ctx.interpret)
+
+
+@impl("out_proj_xla")
+def _i_outproj(ctx, args, node):
+    out = A.out_project(ctx.params_for(node), args[0])
+    return ctx.constrain(out, ("batch", None, None))
+
+
+@impl("cross_attention_xla")
+def _i_xattn(ctx, args, node):
+    x, mem = args
+    p = ctx.params_for(node)
+    h, k, d = _attn_cfg(node)
+    q = A.project_q(p, x, h, d)
+    kk, vv = A.project_kv(p, mem, k, d)
+    out = A.sdpa_full(q, kk, vv, causal=False)
+    return A.out_project(p, out)
+
+
+@impl("ffn_up_xla")
+def _i_ffn_up(ctx, args, node):
+    return F.ffn_up(ctx.params_for(node), args[0])
+
+
+@impl("ffn_gate_xla")
+def _i_ffn_gate(ctx, args, node):
+    return F.ffn_gate(ctx.params_for(node), args[0])
+
+
+@impl("ffn_glu_xla")
+def _i_ffn_glu(ctx, args, node):
+    return F.ffn_glu(args[0], args[1], node.attrs.get("act", "silu"))
+
+
+@impl("ffn_act_xla")
+def _i_ffn_act(ctx, args, node):
+    return F.ffn_act(args[0], node.attrs.get("act", "gelu"))
+
+
+@impl("ffn_down_xla")
+def _i_ffn_down(ctx, args, node):
+    out = F.ffn_down(ctx.params_for(node), args[0])
+    return ctx.constrain(out, ("batch", None, None))
+
+
+@impl("mlp_fused_xla")
+def _i_mlp(ctx, args, node):
+    out = F.mlp_fused(ctx.params_for(node), args[0],
+                      gated=node.attrs.get("gated", True),
+                      act=node.attrs.get("act"))
+    return ctx.constrain(out, ("batch", None, None))
+
+
+@impl("moe_dense_onehot")
+def _i_moe_dense(ctx, args, node):
+    a = node.attrs
+    return X.moe_dense(ctx.params_for(node), args[0], top_k=a["top_k"],
+                       experts=a["experts"], act=a.get("act", "silu"),
+                       capacity_factor=a.get("capacity_factor", 2.0),
+                       constrain=ctx.constrain if a.get("pin_moe") else None)
+
+
+@impl("moe_dropping")
+def _i_moe_drop(ctx, args, node):
+    a = node.attrs
+    return X.moe_dropping(ctx.params_for(node), args[0], top_k=a["top_k"],
+                          experts=a["experts"], act=a.get("act", "silu"),
+                          constrain=ctx.constrain if a.get("pin_moe") else None)
+
+
+@impl("moe_gmm_pallas")
+def _i_moe_gmm(ctx, args, node):
+    a = node.attrs
+    return X.moe_gmm(ctx.params_for(node), args[0], top_k=a["top_k"],
+                     experts=a["experts"], act=a.get("act", "silu"),
+                     interpret=ctx.interpret,
+                     constrain=ctx.constrain if a.get("pin_moe") else None)
+
+
+@impl("wkv6_scan_xla")
+def _i_wkv_xla(ctx, args, node):
+    a = node.attrs
+    return R.rwkv_time_mix(ctx.params_for(node), args[0], heads=a["heads"],
+                           head_dim=a["head_dim"], use_kernel=False)
+
+
+@impl("wkv6_pallas")
+def _i_wkv_pl(ctx, args, node):
+    a = node.attrs
+    return R.rwkv_time_mix(ctx.params_for(node), args[0], heads=a["heads"],
+                           head_dim=a["head_dim"], use_kernel=True,
+                           interpret=ctx.interpret)
+
+
+@impl("ssd_chunked_xla")
+def _i_ssd_xla(ctx, args, node):
+    a = node.attrs
+    cfg = {"embed": a["embed"], "state": a["state"],
+           "expand": a.get("expand", 2), "head_dim": a["head_dim"]}
+    return M.mamba2_block(ctx.params_for(node), args[0], cfg,
+                          use_kernel=False)
+
+
+@impl("ssd_pallas")
+def _i_ssd_pl(ctx, args, node):
+    a = node.attrs
+    cfg = {"embed": a["embed"], "state": a["state"],
+           "expand": a.get("expand", 2), "head_dim": a["head_dim"]}
+    return M.mamba2_block(ctx.params_for(node), args[0], cfg,
+                          use_kernel=True, interpret=ctx.interpret)
+
+
+@impl("rwkv_channel_mix")
+def _i_rwkv_cm(ctx, args, node):
+    return R.rwkv_channel_mix(ctx.params_for(node), args[0])
+
+
+@impl("unembed_matmul")
+def _i_unembed(ctx, args, node):
+    out = E.unembed(ctx.params_for(node), args[0])
+    true_v = node.attrs.get("true_vocab")
+    if true_v and true_v < out.shape[-1]:
+        out = E.mask_padded_logits(out, true_v)
+    return ctx.constrain(out, ("batch", None, "vocab"))
+
+
+@impl("softmax_xent_xla")
+def _i_xent(ctx, args, node):
+    return E.softmax_xent(args[0], args[1])
+
+
+@impl("concat_seq")
+def _i_concat_seq(ctx, args, node):
+    a, b = args
+    return jnp.concatenate([a.astype(b.dtype), b], axis=node.attrs.get("axis", 1))
+
+
+@impl("scan_layers_xla")
+def _i_scan(ctx, args, node):
+    carry0 = args[0]
+    extras = args[1:]                      # broadcast inputs (enc-dec memory)
+    p_stack = ctx.params_for(node)
+    sub = node.subplan
+    in_names = list(sub.inputs.keys())
+    extra_env = dict(zip(in_names[1:], extras))
+    remat = node.attrs.get("remat", "none")
+
+    def body(carry, layer_p):
+        ctx2 = replace(ctx, scope=layer_p)
+        outs = run_plan(sub, ctx2, {in_names[0]: carry, **extra_env})
+        return outs[0], None
+
+    if remat and remat != "none":
+        policy = {
+            "full": None,
+            "dots": jax.checkpoint_policies.checkpoint_dots,
+            "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        }.get(remat)
+        body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+
+    y, _ = jax.lax.scan(body, carry0, p_stack,
+                        unroll=node.attrs.get("unroll", 1))
+    return y
+
+
+@impl("map")
+def _i_map(ctx, args, node):
+    sub = node.subplan
+    (in_name,) = sub.inputs.keys()
+    return [run_plan(sub, ctx, {in_name: v})[0] for v in args[0]]
+
+
+@impl("reduce")
+def _i_reduce(ctx, args, node):
+    fn = node.attrs["fn"]
+    vals = args[0]
+    acc = vals[0]
+    for v in vals[1:]:
+        acc = fn(acc, v) if callable(fn) else acc + v
+    return acc
+
+
+@impl("filter")
+def _i_filter(ctx, args, node):
+    pred = node.attrs["predicate"]
+    return [v for v in args[0] if pred(v)]
+
+
+# --------------------------------------------------------------------------
+# plan execution
+# --------------------------------------------------------------------------
+
+def run_plan(pplan: PhysPlan, ctx: ExecContext, values: dict) -> tuple:
+    env = dict(values)
+    for n in pplan.topo():
+        fn = IMPLS.get(n.impl)
+        if fn is None:
+            raise NotImplementedError(f"no impl for {n.impl!r}")
+        env[n.id] = fn(ctx, [env[i] for i in n.inputs], n)
+    return tuple(env[o] for o in pplan.outputs)
+
+
+# --------------------------------------------------------------------------
+# end-to-end: logical plan -> planned jittable function
+# --------------------------------------------------------------------------
+
+@dataclass
+class PlannedFunction:
+    """The product of the full AWESOME pipeline for one workload."""
+
+    logical: Plan
+    pplan: PhysPlan                  # with virtual nodes (pre-choice)
+    concrete: PhysPlan               # chosen + data-parallelized
+    choices: dict
+    report: list
+    buffering: BufferingDecision
+    syscat: SystemCatalog
+    rules: ShardingRules
+    mesh: Optional[Any] = None
+    interpret: bool = True
+
+    def __call__(self, params, inputs: dict, aux: Optional[dict] = None):
+        ctx = ExecContext(root=params, scope=params, aux=aux or {},
+                          mesh=self.mesh, rules=self.rules,
+                          interpret=self.interpret)
+        outs = run_plan(self.concrete, ctx, inputs)
+        return outs if len(outs) > 1 else outs[0]
+
+
+def plan_and_compile(logical: Plan, catalog: FunctionCatalog,
+                     syscat: SystemCatalog, *,
+                     mesh=None, rules: ShardingRules = ShardingRules(),
+                     cost_model: Optional[CostModel] = None,
+                     allow_pallas: bool = False,
+                     data_parallel: bool = True,
+                     buffering: bool = False,
+                     global_batch: int = 1,
+                     rewrite_pipeline=None,
+                     interpret: bool = True) -> PlannedFunction:
+    """The full Algorithm-1 pipeline: rewrite → candidates → (data
+    parallelism) → (buffering) → cost-model choice → concrete plan."""
+    from .rewrite import DEFAULT_PIPELINE
+    logical_opt = rewrite(logical, catalog,
+                          rewrite_pipeline or DEFAULT_PIPELINE)
+    pp = generate_candidates(logical_opt, allow_pallas=allow_pallas)
+    choices, report = select_candidates(pp, syscat, cost_model,
+                                        allow_pallas=allow_pallas)
+    concrete = materialize_choice(pp, choices)
+    if data_parallel:
+        concrete = par.add_data_parallelism(concrete)
+    buf = plan_buffering(concrete, enabled=buffering,
+                         global_batch=global_batch)
+    return PlannedFunction(logical_opt, pp, concrete, choices, report, buf,
+                           syscat, rules, mesh, interpret)

@@ -1,0 +1,600 @@
+"""Typed logical IR for AWESOME-JAX (paper §2–§3).
+
+The paper's ADIL is a strongly-typed dataflow language: a workload is a DAG of
+assignment statements whose RHS expressions are constants, queries, function
+calls, or higher-order map/filter/reduce expressions.  Validation happens
+*before* execution against three sources of truth:
+
+  * the **system catalog**   — metadata of external stores      (here: mesh +
+    hardware description + parameter collections),
+  * the **function catalog** — signatures of registered ops     (here:
+    ``OpSignature`` registry),
+  * the **variable metadata map** — inferred per-variable types (here:
+    ``Plan.types``; populated by :func:`infer_types`).
+
+Types carry *semantic dimension names* (``batch``/``seq``/``embed``/…) in
+addition to shape+dtype; these names drive sharding rules, the ``capOn``
+data-parallel capability checks (§5.2), and cost-model features (§6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass, field, replace
+from typing import Any, Callable, Iterable, Mapping, Optional, Sequence
+
+# --------------------------------------------------------------------------
+# Types (paper §2.1 — ADIL data types)
+# --------------------------------------------------------------------------
+
+
+class Type:
+    """Base class for ADIL-style types."""
+
+
+@dataclass(frozen=True)
+class TensorT(Type):
+    """A dense tensor with semantic dimension names.
+
+    ``dims`` plays the role of the paper's per-type metadata (Table 1): it is
+    the Relation *schema* / Matrix *row–column map* analogue, and is what the
+    planner consults when deciding how an operator may be partitioned.
+    """
+
+    shape: tuple
+    dtype: str = "float32"
+    dims: tuple = ()  # semantic names, len == len(shape) (or () if unknown)
+
+    def __post_init__(self):
+        if self.dims and len(self.dims) != len(self.shape):
+            raise ValidationError(
+                f"dims {self.dims} incompatible with shape {self.shape}"
+            )
+
+    @property
+    def rank(self) -> int:
+        return len(self.shape)
+
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= int(s)
+        return n
+
+    def bytesize(self) -> int:
+        return self.size() * dtype_bytes(self.dtype)
+
+    def dim(self, name: str) -> int:
+        """Size of the named dimension (ValidationError if absent)."""
+        if name not in self.dims:
+            raise ValidationError(f"no dim {name!r} in {self}")
+        return int(self.shape[self.dims.index(name)])
+
+    def has_dim(self, name: str) -> bool:
+        return name in self.dims
+
+    def __repr__(self):
+        inner = ", ".join(
+            f"{d}={s}" if d else str(s)
+            for d, s in itertools.zip_longest(self.dims, self.shape, fillvalue="")
+        )
+        return f"TensorT[{self.dtype}]({inner})"
+
+
+@dataclass(frozen=True)
+class ListT(Type):
+    """Homogeneous collection (paper: List) — e.g. per-layer or per-topic."""
+
+    elem: Type
+    size: int
+
+    def __repr__(self):
+        return f"ListT({self.elem!r} x {self.size})"
+
+
+@dataclass(frozen=True)
+class TupleT(Type):
+    """Heterogeneous finite collection (paper: Tuple)."""
+
+    elems: tuple
+
+    def __repr__(self):
+        return f"TupleT{self.elems!r}"
+
+
+@dataclass(frozen=True)
+class ScalarT(Type):
+    dtype: str = "float32"
+
+    def __repr__(self):
+        return f"ScalarT[{self.dtype}]"
+
+
+_DTYPE_BYTES = {
+    "float64": 8, "int64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2,
+    "int8": 1, "uint8": 1, "bool": 1,
+    "float8_e4m3fn": 1, "float8_e5m2": 1,
+}
+
+
+def dtype_bytes(dtype: str) -> int:
+    try:
+        return _DTYPE_BYTES[str(dtype)]
+    except KeyError:
+        raise ValidationError(f"unknown dtype {dtype!r}")
+
+
+class ValidationError(Exception):
+    """Raised by compile-time validation (paper design decision 5)."""
+
+
+# --------------------------------------------------------------------------
+# Logical operators and plans (paper §4)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class Node:
+    """One logical operator in the plan DAG.
+
+    ``subplan`` holds the sub-operator of a higher-order node (the paper's
+    Map/Filter consume a sub-plan via the dashed "sub-operator" edge in
+    Fig. 4); for us the main higher-order node is ``scan_layers``.
+    """
+
+    id: str
+    op: str
+    inputs: tuple = ()           # ids of producer nodes
+    attrs: dict = field(default_factory=dict)
+    subplan: Optional["Plan"] = None
+
+    def signature_key(self):
+        """Hashable identity used by redundancy elimination (§4.2.2)."""
+        items = tuple(sorted((k, _freeze(v)) for k, v in self.attrs.items()))
+        sub = self.subplan.structure_key() if self.subplan is not None else None
+        return (self.op, self.inputs, items, sub)
+
+
+def _freeze(v):
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, set):
+        return tuple(sorted(_freeze(x) for x in v))
+    if callable(v):
+        return getattr(v, "__name__", repr(v))
+    return v
+
+
+@dataclass
+class Plan:
+    """A logical plan: DAG of nodes, in topological insertion order."""
+
+    name: str = "plan"
+    nodes: dict = field(default_factory=dict)       # id -> Node
+    inputs: dict = field(default_factory=dict)      # id -> Type   (plan inputs)
+    outputs: tuple = ()                              # output node ids
+    types: dict = field(default_factory=dict)       # id -> Type   (metadata map)
+    _ctr: int = 0
+
+    # -- construction ------------------------------------------------------
+    def add_input(self, name: str, typ: Type) -> str:
+        if name in self.nodes or name in self.inputs:
+            raise ValidationError(f"duplicate input {name!r}")
+        self.inputs[name] = typ
+        self.types[name] = typ
+        return name
+
+    def add(self, op: str, inputs: Sequence[str] = (), attrs: dict | None = None,
+            subplan: Optional["Plan"] = None, id: str | None = None) -> str:
+        nid = id or f"{op}_{self._ctr}"
+        self._ctr += 1
+        if nid in self.nodes:
+            raise ValidationError(f"duplicate node id {nid!r}")
+        for i in inputs:
+            if i not in self.nodes and i not in self.inputs:
+                raise ValidationError(f"node {nid!r}: unknown input {i!r}")
+        self.nodes[nid] = Node(nid, op, tuple(inputs), dict(attrs or {}), subplan)
+        return nid
+
+    def set_outputs(self, *ids: str):
+        for i in ids:
+            if i not in self.nodes and i not in self.inputs:
+                raise ValidationError(f"unknown output {i!r}")
+        self.outputs = tuple(ids)
+
+    # -- views -------------------------------------------------------------
+    def topo(self) -> Iterable[Node]:
+        """Nodes in topological order (insertion order is topological)."""
+        return list(self.nodes.values())
+
+    def consumers(self) -> dict:
+        out: dict = {i: [] for i in list(self.inputs) + list(self.nodes)}
+        for n in self.nodes.values():
+            for i in n.inputs:
+                out[i].append(n.id)
+        return out
+
+    def type_of(self, nid: str) -> Type:
+        if nid not in self.types:
+            raise ValidationError(f"type of {nid!r} not inferred yet")
+        return self.types[nid]
+
+    def structure_key(self):
+        return tuple(n.signature_key() for n in self.topo()) + (self.outputs,)
+
+    def copy(self) -> "Plan":
+        p = Plan(self.name, {}, dict(self.inputs), self.outputs,
+                 dict(self.types), self._ctr)
+        p.nodes = {k: Node(v.id, v.op, v.inputs, dict(v.attrs),
+                           v.subplan.copy() if v.subplan else None)
+                   for k, v in self.nodes.items()}
+        return p
+
+    def __len__(self):
+        return len(self.nodes)
+
+
+# --------------------------------------------------------------------------
+# Function catalog (paper §3.1.2)
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class OpSignature:
+    """Registered operator: arity/attr validation + output-type inference.
+
+    ``infer``     : (input_types, attrs) -> Type         (raises ValidationError)
+    ``n_inputs``  : exact arity, or (min, max) tuple, or None (any)
+    """
+
+    name: str
+    infer: Callable
+    n_inputs: Any = None
+    required_attrs: tuple = ()
+    doc: str = ""
+
+
+class FunctionCatalog:
+    def __init__(self):
+        self._sigs: dict = {}
+
+    def register(self, sig: OpSignature):
+        if sig.name in self._sigs:
+            raise ValidationError(f"op {sig.name!r} already registered")
+        self._sigs[sig.name] = sig
+
+    def op(self, name: str, n_inputs=None, required_attrs=(), doc=""):
+        """Decorator form: ``@catalog.op("matmul", n_inputs=2)``."""
+
+        def deco(fn):
+            self.register(OpSignature(name, fn, n_inputs, tuple(required_attrs), doc))
+            return fn
+
+        return deco
+
+    def get(self, name: str) -> OpSignature:
+        if name not in self._sigs:
+            raise ValidationError(f"unknown op {name!r} (function catalog)")
+        return self._sigs[name]
+
+    def __contains__(self, name: str):
+        return name in self._sigs
+
+    def names(self):
+        return sorted(self._sigs)
+
+
+# --------------------------------------------------------------------------
+# Validation + metadata inference (paper §3)
+# --------------------------------------------------------------------------
+
+
+def infer_types(plan: Plan, catalog: FunctionCatalog) -> Plan:
+    """Validate the plan and populate its variable-metadata map.
+
+    Mirrors §3: every statement is validated against the function catalog and
+    the already-inferred variable metadata; inference proceeds innermost-first
+    for higher-order nodes (their ``subplan`` is inferred before the node's
+    own output type).
+    """
+    plan.types = dict(plan.inputs)
+    for node in plan.topo():
+        sig = catalog.get(node.op)
+        # arity check
+        if sig.n_inputs is not None:
+            lo, hi = (sig.n_inputs, sig.n_inputs) if isinstance(sig.n_inputs, int) \
+                else sig.n_inputs
+            if not (lo <= len(node.inputs) <= hi):
+                raise ValidationError(
+                    f"{node.id}: op {node.op!r} expects {sig.n_inputs} inputs, "
+                    f"got {len(node.inputs)}")
+        for a in sig.required_attrs:
+            if a not in node.attrs:
+                raise ValidationError(f"{node.id}: missing attr {a!r}")
+        in_types = [plan.types[i] for i in node.inputs]
+        # innermost-first for higher-order nodes (§3.1.4)
+        if node.subplan is not None:
+            infer_types(node.subplan, catalog)
+        try:
+            out = sig.infer(in_types, dict(node.attrs), node.subplan)
+        except ValidationError:
+            raise
+        except Exception as e:  # surface inference bugs as validation errors
+            raise ValidationError(f"{node.id} ({node.op}): {e}") from e
+        plan.types[node.id] = out
+    for o in plan.outputs:
+        if o not in plan.types:
+            raise ValidationError(f"output {o!r} has no type")
+    return plan
+
+
+# --------------------------------------------------------------------------
+# Shared inference helpers used by the standard catalog
+# --------------------------------------------------------------------------
+
+
+def expect_tensor(t: Type, what: str = "input") -> TensorT:
+    if not isinstance(t, TensorT):
+        raise ValidationError(f"{what}: expected TensorT, got {t!r}")
+    return t
+
+
+def promote_dtype(a: str, b: str) -> str:
+    order = ["bool", "int8", "int16", "int32", "int64",
+             "bfloat16", "float16", "float32", "float64"]
+    ia, ib = order.index(str(a)), order.index(str(b))
+    return order[max(ia, ib)]
+
+
+def standard_catalog() -> FunctionCatalog:
+    """The registered-op library (paper Table 2 analogue for the tensor world)."""
+    cat = FunctionCatalog()
+
+    @cat.op("const", n_inputs=0, required_attrs=("type",))
+    def _const(ins, attrs, sub):
+        return attrs["type"]
+
+    @cat.op("embed", n_inputs=1, required_attrs=("vocab", "embed"))
+    def _embed(ins, attrs, sub):
+        t = expect_tensor(ins[0], "embed ids")
+        if not str(t.dtype).startswith("int"):
+            raise ValidationError(f"embed: ids must be integer, got {t.dtype}")
+        return TensorT(t.shape + (attrs["embed"],),
+                       attrs.get("dtype", "bfloat16"), t.dims + ("embed",))
+
+    @cat.op("rmsnorm", n_inputs=1)
+    def _rmsnorm(ins, attrs, sub):
+        return expect_tensor(ins[0])
+
+    @cat.op("residual_add", n_inputs=2)
+    def _resid(ins, attrs, sub):
+        a, b = expect_tensor(ins[0]), expect_tensor(ins[1])
+        if a.shape != b.shape:
+            raise ValidationError(f"residual_add: {a.shape} vs {b.shape}")
+        return replace(a, dtype=promote_dtype(a.dtype, b.dtype))
+
+    @cat.op("attention", n_inputs=1,
+            required_attrs=("heads", "kv_heads", "head_dim"))
+    def _attention(ins, attrs, sub):
+        t = expect_tensor(ins[0])
+        if not t.has_dim("seq"):
+            raise ValidationError("attention input needs a 'seq' dim")
+        return t
+
+    @cat.op("cross_attention", n_inputs=2,
+            required_attrs=("heads", "kv_heads", "head_dim"))
+    def _xattention(ins, attrs, sub):
+        t = expect_tensor(ins[0])
+        m = expect_tensor(ins[1], "memory")
+        if t.dim("embed") != m.dim("embed"):
+            # cross-attn projects from memory width; allow mismatch via attr
+            if "memory_embed" not in attrs:
+                raise ValidationError("cross_attention: embed mismatch")
+        return t
+
+    @cat.op("mlp", n_inputs=1, required_attrs=("ffn",))
+    def _mlp(ins, attrs, sub):
+        return expect_tensor(ins[0])
+
+    @cat.op("moe", n_inputs=1, required_attrs=("ffn", "experts", "top_k"))
+    def _moe(ins, attrs, sub):
+        return expect_tensor(ins[0])
+
+    @cat.op("wkv6", n_inputs=1, required_attrs=("heads", "head_dim"))
+    def _wkv6(ins, attrs, sub):
+        return expect_tensor(ins[0])
+
+    @cat.op("ssd", n_inputs=1, required_attrs=("heads", "head_dim", "state"))
+    def _ssd(ins, attrs, sub):
+        return expect_tensor(ins[0])
+
+    @cat.op("rwkv_channel_mix", n_inputs=1, required_attrs=("ffn",))
+    def _rwkv_cm(ins, attrs, sub):
+        return expect_tensor(ins[0])
+
+    @cat.op("unembed", n_inputs=1, required_attrs=("vocab",))
+    def _unembed(ins, attrs, sub):
+        t = expect_tensor(ins[0])
+        if not t.has_dim("embed"):
+            raise ValidationError("unembed input needs an 'embed' dim")
+        i = t.dims.index("embed")
+        shape = t.shape[:i] + (attrs["vocab"],) + t.shape[i + 1:]
+        dims = t.dims[:i] + ("vocab",) + t.dims[i + 1:]
+        return TensorT(shape, "float32", dims)
+
+    @cat.op("softmax_xent", n_inputs=2)
+    def _xent(ins, attrs, sub):
+        logits = expect_tensor(ins[0], "logits")
+        labels = expect_tensor(ins[1], "labels")
+        if logits.shape[:-1] != labels.shape:
+            raise ValidationError(
+                f"softmax_xent: logits {logits.shape} vs labels {labels.shape}")
+        return ScalarT("float32")
+
+    @cat.op("scan_layers", n_inputs=(1, 2), required_attrs=("n_layers",))
+    def _scan(ins, attrs, sub):
+        # higher-order: validates like the paper's Map — the subplan is typed
+        # with the carry as its input; output type == carry type.
+        t = expect_tensor(ins[0])
+        if sub is None:
+            raise ValidationError("scan_layers needs a subplan")
+        if len(sub.outputs) != 1:
+            raise ValidationError("scan_layers subplan must have 1 output")
+        out_t = sub.types.get(sub.outputs[0])
+        if out_t is not None and isinstance(out_t, TensorT) and out_t.shape != t.shape:
+            raise ValidationError(
+                f"scan_layers: carry {t.shape} != subplan out {out_t.shape}")
+        return t
+
+    @cat.op("map", n_inputs=1)
+    def _map(ins, attrs, sub):
+        lt = ins[0]
+        if not isinstance(lt, ListT):
+            raise ValidationError(f"map input must be ListT, got {lt!r}")
+        if sub is None or len(sub.outputs) != 1:
+            raise ValidationError("map needs a single-output subplan")
+        return ListT(sub.types[sub.outputs[0]], lt.size)
+
+    @cat.op("filter", n_inputs=1, required_attrs=("predicate",))
+    def _filter(ins, attrs, sub):
+        lt = ins[0]
+        if not isinstance(lt, ListT):
+            raise ValidationError(f"filter input must be ListT, got {lt!r}")
+        return lt  # size is an upper bound; paper keeps Size metadata fuzzy here
+
+    @cat.op("reduce", n_inputs=1, required_attrs=("fn",))
+    def _reduce(ins, attrs, sub):
+        lt = ins[0]
+        if not isinstance(lt, ListT):
+            raise ValidationError(f"reduce input must be ListT, got {lt!r}")
+        return lt.elem
+
+    @cat.op("store", n_inputs=1)
+    def _store(ins, attrs, sub):
+        return ins[0]
+
+    @cat.op("concat_seq", n_inputs=2)
+    def _concat_seq(ins, attrs, sub):
+        a, b = expect_tensor(ins[0]), expect_tensor(ins[1])
+        if not (a.has_dim("seq") and b.has_dim("seq")):
+            raise ValidationError("concat_seq operands need 'seq' dims")
+        if a.shape[-1] != b.shape[-1]:
+            raise ValidationError(f"concat_seq: {a.shape} vs {b.shape}")
+        i = a.dims.index("seq")
+        shape = a.shape[:i] + (a.dim("seq") + b.dim("seq"),) + a.shape[i + 1:]
+        return TensorT(shape, promote_dtype(a.dtype, b.dtype), a.dims)
+
+    # decomposed primitives (targets of §4.2.1 function decomposition)
+    @cat.op("qkv_proj", n_inputs=1, required_attrs=("heads", "kv_heads", "head_dim"))
+    def _qkv(ins, attrs, sub):
+        t = expect_tensor(ins[0])
+        h, k, d = attrs["heads"], attrs["kv_heads"], attrs["head_dim"]
+        return TupleT((
+            TensorT(t.shape[:-1] + (h, d), t.dtype, t.dims[:-1] + ("heads", "head_dim")),
+            TensorT(t.shape[:-1] + (k, d), t.dtype, t.dims[:-1] + ("kv_heads", "head_dim")),
+            TensorT(t.shape[:-1] + (k, d), t.dtype, t.dims[:-1] + ("kv_heads", "head_dim")),
+        ))
+
+    @cat.op("sdpa", n_inputs=1, required_attrs=("heads", "kv_heads", "head_dim"))
+    def _sdpa(ins, attrs, sub):
+        tt = ins[0]
+        if not isinstance(tt, TupleT) or len(tt.elems) != 3:
+            raise ValidationError("sdpa expects (q, k, v) TupleT")
+        return tt.elems[0]
+
+    @cat.op("out_proj", n_inputs=1, required_attrs=("embed",))
+    def _outp(ins, attrs, sub):
+        t = expect_tensor(ins[0])
+        return TensorT(t.shape[:-2] + (attrs["embed"],), t.dtype,
+                       t.dims[:-2] + ("embed",))
+
+    def _head_proj(kind):
+        def infer(ins, attrs, sub):
+            t = expect_tensor(ins[0])
+            h = attrs["heads"] if kind == "q" else attrs["kv_heads"]
+            d = attrs["head_dim"]
+            dim = "heads" if kind == "q" else "kv_heads"
+            return TensorT(t.shape[:-1] + (h, d), t.dtype,
+                           t.dims[:-1] + (dim, "head_dim"))
+        return infer
+
+    for _k in ("q", "k", "v"):
+        cat.register(OpSignature(f"{_k}_proj", _head_proj(_k), 1,
+                                 ("heads", "kv_heads", "head_dim")))
+
+    @cat.op("pack_qkv", n_inputs=3)
+    def _pack_qkv(ins, attrs, sub):
+        return TupleT(tuple(ins))
+
+    @cat.op("ffn_up", n_inputs=1, required_attrs=("ffn",))
+    def _ffn_up(ins, attrs, sub):
+        t = expect_tensor(ins[0])
+        return TensorT(t.shape[:-1] + (attrs["ffn"],), t.dtype,
+                       t.dims[:-1] + ("ffn",))
+
+    @cat.op("ffn_gate", n_inputs=1, required_attrs=("ffn",))
+    def _ffn_gate(ins, attrs, sub):
+        t = expect_tensor(ins[0])
+        return TensorT(t.shape[:-1] + (attrs["ffn"],), t.dtype,
+                       t.dims[:-1] + ("ffn",))
+
+    @cat.op("ffn_glu", n_inputs=2)
+    def _ffn_glu(ins, attrs, sub):
+        a, b = expect_tensor(ins[0]), expect_tensor(ins[1])
+        if a.shape != b.shape:
+            raise ValidationError(f"ffn_glu: {a.shape} vs {b.shape}")
+        return a
+
+    @cat.op("ffn_act", n_inputs=1)
+    def _ffn_act(ins, attrs, sub):
+        return expect_tensor(ins[0])
+
+    @cat.op("ffn_down", n_inputs=1, required_attrs=("embed",))
+    def _ffn_down(ins, attrs, sub):
+        t = expect_tensor(ins[0])
+        return TensorT(t.shape[:-1] + (attrs["embed"],), t.dtype,
+                       t.dims[:-1] + ("embed",))
+
+    return cat
+
+
+# --------------------------------------------------------------------------
+# System catalog (paper §2.2): hardware + mesh description
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class HardwareSpec:
+    """Per-chip peaks for the target part (defaults: TPU v5e)."""
+
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12       # bf16 FLOP/s
+    hbm_bw: float = 819e9            # bytes/s
+    ici_bw: float = 50e9             # bytes/s per link
+    hbm_bytes: float = 16e9
+    vmem_bytes: float = 128 * 2 ** 20
+
+
+@dataclass(frozen=True)
+class SystemCatalog:
+    """Registered 'stores' — here the mesh axes + hardware description."""
+
+    hardware: HardwareSpec = HardwareSpec()
+    mesh_axes: tuple = ("data", "model")
+    mesh_shape: tuple = (1, 1)
+
+    @property
+    def n_devices(self) -> int:
+        n = 1
+        for s in self.mesh_shape:
+            n *= s
+        return n
+
+    def axis_size(self, name: str) -> int:
+        if name not in self.mesh_axes:
+            return 1
+        return self.mesh_shape[self.mesh_axes.index(name)]

@@ -1,0 +1,414 @@
+"""Physical planning (paper §5, Algorithms 1–2).
+
+The logical plan is transformed into *candidate physical plans*:
+
+  * an **ordered pattern set** maps logical sub-DAGs to sets of physical
+    sub-plans, matched largest-first (Def. 5.1, Alg. 2 line 2);
+  * a pattern with exactly one candidate is substituted in place
+    (Alg. 2 lines 6–7);
+  * a pattern with several candidates becomes a **virtual node** whose
+    candidate sub-plans live in the ``PM`` map (Alg. 2 lines 8–9) and whose
+    winner is chosen by the learned cost model once input sizes are known
+    (trace time, §6.3).
+
+Every physical operator carries the paper's capability annotations
+(Table 3 / Table 5): data-parallel capability ``ST``/``PR``/``EX`` with a
+``capOn`` input dimension, and buffering capability ``SI``/``SO``/``B``/``SS``.
+``EX`` operators (Pallas kernels — our "external engines") are excluded from
+the partitioning rewrites, exactly as the paper excludes external-library
+operators from its data-parallelism optimization.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+from .ir import Plan, Node, TensorT, TupleT, ValidationError
+
+# --------------------------------------------------------------------------
+# Physical operator definitions (capability catalog — paper Table 3/5)
+# --------------------------------------------------------------------------
+
+ST, PR, EX = "ST", "PR", "EX"          # data-parallel capability
+SI, SO, B, SS = "SI", "SO", "B", "SS"  # buffering capability
+
+
+@dataclass(frozen=True)
+class PhysicalOpDef:
+    name: str
+    dp_cap: str = PR
+    buf_cap: str = SS
+    cap_on: Optional[str] = "batch"   # semantic dim the op partitions/streams on
+    backend: str = "xla"              # "xla" | "pallas"
+    cap_all: bool = False             # PR on *every* input (elementwise joins)
+
+
+PHYS_OPS: dict = {}
+
+
+def defop(name, dp_cap=PR, buf_cap=SS, cap_on="batch", backend="xla",
+          cap_all=False):
+    PHYS_OPS[name] = PhysicalOpDef(name, dp_cap, buf_cap, cap_on, backend,
+                                   cap_all)
+    return PHYS_OPS[name]
+
+
+# --- query-analogue ops (data movement / bookkeeping)
+defop("identity")
+defop("partition", dp_cap=ST, buf_cap=SO, cap_on=None)   # §5.2 Partition step
+defop("merge", dp_cap=ST, buf_cap=SI, cap_on=None)       # §5.2 Merge step
+defop("const", dp_cap=ST, buf_cap=SO, cap_on=None)
+# store is PR: a sharded sink — each host persists its own shard (sharded
+# checkpointing), so no Merge is forced before it.  (Treating store as ST,
+# per the paper's Table 5, all-gathered full 32k-prefill logits to every
+# device: +1.17e12 wire bytes on gemma3-27b×prefill_32k.  See §Perf.)
+defop("store", dp_cap=PR, buf_cap=SI)
+
+# --- embedding / head
+defop("embed_gather")                                     # PR over batch
+defop("unembed_matmul", buf_cap=SS)
+defop("softmax_xent_xla", buf_cap=SI, cap_all=True)       # logits+labels sharded
+
+# --- norms / elementwise
+defop("rmsnorm_xla")
+defop("residual_add_xla", cap_all=True)
+defop("concat_seq", cap_all=True)
+
+# --- attention family
+defop("q_proj_xla"); defop("k_proj_xla"); defop("v_proj_xla")
+defop("qkv_proj_fused")                                   # fused projection
+defop("pack_qkv_xla", cap_all=True)
+defop("sdpa_xla")                                         # full masked attention
+defop("sdpa_banded_xla")                                  # O(S·W) local window
+defop("attn_flash_pallas", dp_cap=EX, buf_cap=SS, backend="pallas")
+defop("out_proj_xla")
+defop("cross_attention_xla")
+
+# --- mlp family
+defop("ffn_up_xla"); defop("ffn_gate_xla")
+defop("ffn_glu_xla", cap_all=True)
+defop("ffn_act_xla"); defop("ffn_down_xla")
+defop("mlp_fused_xla")                                    # single fused GLU block
+
+# --- MoE family
+defop("moe_dense_onehot")                                 # dense dispatch einsum
+defop("moe_dropping")                                     # capacity-dropped dispatch
+defop("moe_gmm_pallas", dp_cap=EX, buf_cap=SS, backend="pallas")
+
+# --- recurrent families
+defop("rwkv_channel_mix")
+defop("wkv6_scan_xla", buf_cap=SS)
+defop("wkv6_pallas", dp_cap=EX, buf_cap=SS, backend="pallas")
+defop("ssd_chunked_xla", buf_cap=SS)
+defop("ssd_pallas", dp_cap=EX, buf_cap=SS, backend="pallas")
+
+# --- higher order
+defop("scan_layers_xla", buf_cap=B, cap_on="batch")
+
+
+# --------------------------------------------------------------------------
+# Physical plan structure
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class PhysNode:
+    id: str
+    impl: str                      # PHYS_OPS key, or "virtual"
+    inputs: tuple = ()
+    attrs: dict = field(default_factory=dict)
+    subplan: Optional["PhysPlan"] = None   # for scan_layers
+    virtual: bool = False
+
+    @property
+    def opdef(self) -> PhysicalOpDef:
+        return PHYS_OPS[self.impl]
+
+
+@dataclass
+class Candidate:
+    """One candidate physical sub-plan for a virtual node: a linear chain of
+    impls applied in order (first consumes the virtual node's inputs)."""
+
+    name: str
+    impls: tuple                   # impl names, applied in sequence
+    requires_backend: str = "xla"  # "xla" | "pallas"
+    when: Optional[Callable] = None  # (logical nodes) -> bool availability
+
+
+@dataclass
+class PhysPlan:
+    name: str = "pplan"
+    nodes: dict = field(default_factory=dict)
+    inputs: dict = field(default_factory=dict)
+    outputs: tuple = ()
+    types: dict = field(default_factory=dict)
+    pm: dict = field(default_factory=dict)   # virtual node id -> [Candidate]
+    logical_of: dict = field(default_factory=dict)  # phys id -> [logical Node]
+    _ctr: int = 0
+
+    def add(self, impl, inputs=(), attrs=None, subplan=None, id=None,
+            virtual=False):
+        nid = id or f"{impl}_{self._ctr}"
+        self._ctr += 1
+        if nid in self.nodes:
+            raise ValidationError(f"duplicate phys node {nid}")
+        self.nodes[nid] = PhysNode(nid, impl, tuple(inputs), dict(attrs or {}),
+                                   subplan, virtual)
+        return nid
+
+    def topo(self):
+        return list(self.nodes.values())
+
+    def consumers(self):
+        out = {i: [] for i in list(self.inputs) + list(self.nodes)}
+        for n in self.nodes.values():
+            for i in n.inputs:
+                out[i].append(n.id)
+        return out
+
+
+# --------------------------------------------------------------------------
+# Pattern set (Def. 5.1) — ordered by size, largest first
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class Pattern:
+    name: str
+    seq: tuple                     # logical op-name chain to match
+    candidates: tuple              # tuple[Candidate]; len==1 → direct replace
+
+    @property
+    def size(self):
+        return len(self.seq)
+
+
+def _has_window(nodes):
+    return any(n.attrs.get("window") for n in nodes)
+
+
+DEFAULT_PATTERNS = (
+    # fused attention: the map-fusion product (Fig. 7's larger-pattern win)
+    Pattern(
+        "fused_attention", ("qkv_proj", "sdpa", "out_proj"),
+        (
+            Candidate("attn_xla", ("qkv_proj_fused", "sdpa_xla", "out_proj_xla")),
+            Candidate("attn_flash",
+                      ("qkv_proj_fused", "attn_flash_pallas", "out_proj_xla"),
+                      requires_backend="pallas"),
+            Candidate("attn_banded",
+                      ("qkv_proj_fused", "sdpa_banded_xla", "out_proj_xla"),
+                      when=_has_window),
+        ),
+    ),
+    # unfused attention still plannable (pre-fusion plans work, just worse)
+    Pattern(
+        "sdpa_only", ("sdpa",),
+        (
+            Candidate("sdpa_xla", ("sdpa_xla",)),
+            Candidate("sdpa_flash", ("attn_flash_pallas",),
+                      requires_backend="pallas"),
+            Candidate("sdpa_banded", ("sdpa_banded_xla",), when=_has_window),
+        ),
+    ),
+    Pattern(
+        "moe_block", ("moe",),
+        (
+            Candidate("moe_dense", ("moe_dense_onehot",)),
+            Candidate("moe_drop", ("moe_dropping",)),
+            Candidate("moe_gmm", ("moe_gmm_pallas",), requires_backend="pallas"),
+        ),
+    ),
+    Pattern(
+        "wkv6_block", ("wkv6",),
+        (
+            Candidate("wkv6_xla", ("wkv6_scan_xla",)),
+            Candidate("wkv6_pallas", ("wkv6_pallas",), requires_backend="pallas"),
+        ),
+    ),
+    Pattern(
+        "ssd_block", ("ssd",),
+        (
+            Candidate("ssd_xla", ("ssd_chunked_xla",)),
+            Candidate("ssd_pallas", ("ssd_pallas",), requires_backend="pallas"),
+        ),
+    ),
+)
+
+# single-candidate direct mappings (Alg. 2 lines 6–7)
+DIRECT_IMPL = {
+    "const": "const",
+    "embed": "embed_gather",
+    "rmsnorm": "rmsnorm_xla",
+    "residual_add": "residual_add_xla",
+    "unembed": "unembed_matmul",
+    "softmax_xent": "softmax_xent_xla",
+    "q_proj": "q_proj_xla",
+    "k_proj": "k_proj_xla",
+    "v_proj": "v_proj_xla",
+    "pack_qkv": "pack_qkv_xla",
+    "qkv_proj": "qkv_proj_fused",
+    "out_proj": "out_proj_xla",
+    "ffn_up": "ffn_up_xla",
+    "ffn_gate": "ffn_gate_xla",
+    "ffn_glu": "ffn_glu_xla",
+    "ffn_act": "ffn_act_xla",
+    "ffn_down": "ffn_down_xla",
+    "mlp": "mlp_fused_xla",
+    "rwkv_channel_mix": "rwkv_channel_mix",
+    "concat_seq": "concat_seq",
+    "cross_attention": "cross_attention_xla",
+    "attention": None,   # must be decomposed first; see rewrite.decompose
+    "store": "store",
+}
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2 — candidate physical plan generation
+# --------------------------------------------------------------------------
+
+
+def _find_chain_matches(plan: Plan, seq, claimed):
+    """Find non-overlapping linear chains matching ``seq`` where interior
+    nodes have a single consumer (so substitution is sound)."""
+    cons = plan.consumers()
+    matches = []
+    for n in plan.topo():
+        if n.op != seq[0] or n.id in claimed:
+            continue
+        chain = [n]
+        ok = True
+        cur = n
+        for want in seq[1:]:
+            nxt_ids = cons[cur.id]
+            if len(nxt_ids) != 1:
+                ok = False
+                break
+            nxt = plan.nodes[nxt_ids[0]]
+            if nxt.op != want or nxt.id in claimed:
+                ok = False
+                break
+            chain.append(nxt)
+            cur = nxt
+        if ok:
+            matches.append(chain)
+            claimed.update(c.id for c in chain)
+    return matches
+
+
+def generate_candidates(plan: Plan, patterns=DEFAULT_PATTERNS,
+                        allow_pallas: bool = False) -> PhysPlan:
+    """Alg. 2: largest-first pattern matching over the optimized logical plan.
+
+    ``allow_pallas`` gates EX/pallas candidates (on CPU dry-runs the Pallas
+    engines are unavailable; the paper likewise excludes EX engines from
+    optimization choices it cannot calibrate).
+    """
+    ordered = sorted(patterns, key=lambda p: -p.size)
+    claimed: set = set()
+    pat_of: dict = {}           # head node id -> (Pattern, chain)
+    for pat in ordered:
+        for chain in _find_chain_matches(plan, pat.seq, claimed):
+            pat_of[chain[0].id] = (pat, chain)
+
+    pp = PhysPlan(plan.name, {}, dict(plan.inputs), (), dict(plan.types))
+    remap: dict = {i: i for i in plan.inputs}
+    in_chain: dict = {}
+    for head, (pat, chain) in pat_of.items():
+        for c in chain:
+            in_chain[c.id] = head
+
+    emitted: set = set()
+    remap_target: dict = {}
+    for node in plan.topo():
+        if node.id in in_chain:
+            head = in_chain[node.id]
+            if head in emitted:
+                remap[node.id] = remap_target[head]
+                continue
+            pat, chain = pat_of[head]
+            cands = [c for c in pat.candidates
+                     if (allow_pallas or c.requires_backend != "pallas")
+                     and (c.when is None or c.when(chain))]
+            attrs = {}
+            for c in chain:
+                attrs.update(c.attrs)
+            attrs["pattern"] = pat.name
+            attrs.setdefault("pp", chain[0].attrs.get("pp"))
+            ext_inputs = [remap[i] for i in chain[0].inputs]
+            out_t = plan.types.get(chain[-1].id)
+            if len(cands) == 1:
+                # single candidate → direct replacement (Alg.2 lines 6–7)
+                nid = _emit_chain(pp, cands[0], ext_inputs, attrs, chain)
+            else:
+                nid = pp.add("identity", ext_inputs, attrs,
+                             id=f"virt_{plan.name}_{pat.name}_{chain[0].id}",
+                             virtual=True)
+                pp.pm[nid] = cands
+                pp.logical_of[nid] = chain
+            pp.types[nid] = out_t
+            emitted.add(head)
+            remap_target[head] = nid
+            for c in chain:
+                remap[c.id] = nid
+            continue
+
+        impl = DIRECT_IMPL.get(node.op)
+        sub = None
+        if node.op == "scan_layers":
+            impl = "scan_layers_xla"
+            sub = generate_candidates(node.subplan, patterns, allow_pallas)
+        elif node.op in ("map", "filter", "reduce"):
+            impl = node.op  # handled natively by the executor
+            if node.subplan is not None:
+                sub = generate_candidates(node.subplan, patterns, allow_pallas)
+            if impl not in PHYS_OPS:
+                defop(impl, dp_cap=PR, buf_cap=SS, cap_on="elem")
+        if impl is None:
+            raise ValidationError(
+                f"no physical impl for logical op {node.op!r} "
+                f"(did you run rewrite.decompose?)")
+        nid = pp.add(impl, [remap[i] for i in node.inputs], dict(node.attrs),
+                     sub, id=node.id)
+        pp.types[nid] = plan.types.get(node.id)
+        pp.logical_of[nid] = [node]
+        remap[node.id] = nid
+
+    pp.outputs = tuple(remap[o] for o in plan.outputs)
+    return pp
+
+
+def _emit_chain(pp: PhysPlan, cand: Candidate, ext_inputs, attrs, chain):
+    prev = None
+    nid = None
+    for j, impl in enumerate(cand.impls):
+        ins = ext_inputs if j == 0 else [prev]
+        nid = pp.add(impl, ins, dict(attrs),
+                     id=f"{chain[0].id}__{cand.name}_{j}")
+        pp.logical_of[nid] = chain if j == 0 else []
+        prev = nid
+    return nid
+
+
+def materialize_choice(pp: PhysPlan, choices: dict) -> PhysPlan:
+    """Replace each virtual node with its chosen candidate chain (§6.3:
+    'the best sub-plan with the lowest cost will be selected')."""
+    out = PhysPlan(pp.name, {}, dict(pp.inputs), (), dict(pp.types))
+    remap = {i: i for i in pp.inputs}
+    for n in pp.topo():
+        sub = n.subplan
+        if sub is not None:
+            sub = materialize_choice(sub, choices)
+        if n.virtual:
+            cand = choices[n.id]
+            nid = _emit_chain(out, cand, [remap[i] for i in n.inputs],
+                              dict(n.attrs), [n])
+            out.types[nid] = pp.types.get(n.id)
+        else:
+            nid = out.add(n.impl, [remap[i] for i in n.inputs], dict(n.attrs),
+                          sub, id=n.id)
+            out.types[nid] = pp.types.get(n.id)
+        remap[n.id] = nid
+    out.outputs = tuple(remap[o] for o in pp.outputs)
+    return out

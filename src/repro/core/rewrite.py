@@ -1,0 +1,320 @@
+"""Logical-plan rewriting (paper §4.2).
+
+Three rule families, ported from the paper:
+
+  1. **Function decomposition** (§4.2.1) — coarse analytical functions are
+     decomposed into primitive operators (NER → CoreNLP annotator chain in the
+     paper; here ``attention`` → q/k/v projections + sdpa + out-proj and
+     ``mlp`` → up/gate/act/down), exposing a deeper level of optimization.
+  2. **Redundancy elimination** (§4.2.2) — identical operators on identical
+     inputs execute once (CSE).  The paper's motivating case — Preprocess and
+     NER sharing a tokenize/ssplit/pos/lemma prefix — maps to shared
+     projection/norm prefixes after decomposition.
+  3. **Operator fusion** (§4.2.3) — chains of per-element operators fuse so
+     that (a) intermediates are never materialized, and (b) *larger logical
+     patterns* exist for the physical planner to match, which unlocks better
+     fused physical candidates (the paper's Fig. 5/7 argument).  Here:
+     q/k/v-projection fusion, GLU-FFN refusion, and scan(=Map)-fusion of
+     consecutive ``scan_layers`` nodes.
+
+All passes re-run :func:`infer_types` afterwards, so a rewritten plan is
+always re-validated (the paper re-checks metadata after every rewrite).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+from .ir import FunctionCatalog, Node, Plan, ValidationError, infer_types
+
+# --------------------------------------------------------------------------
+# 1. function decomposition
+# --------------------------------------------------------------------------
+
+# op -> builder(plan_like, node) -> (new chain of (op, attrs)) replacing node.
+# Chains are linear: first element consumes node.inputs, last produces output.
+
+
+def _carry(node: Node) -> dict:
+    """Attrs every decomposed sub-op inherits (param path, sharing)."""
+    out = {}
+    for k in ("pp", "shared"):
+        if k in node.attrs:
+            out[k] = node.attrs[k]
+    return out
+
+
+def _decompose_attention(node: Node):
+    a = node.attrs
+    base = _carry(node)
+    proj = {**base, **{k: a[k] for k in ("heads", "kv_heads", "head_dim")}}
+    sdpa = dict(proj)
+    for k in ("causal", "window", "qk_norm", "rope", "rope_theta", "sink"):
+        if k in a:
+            sdpa[k] = a[k]
+    return [
+        ("q_proj", proj), ("k_proj", proj), ("v_proj", proj),
+        ("pack_qkv", dict(base)),
+        ("sdpa", sdpa),
+        ("out_proj", {**base, "embed": a["embed"]}),
+    ]
+
+
+def _decompose_mlp(node: Node):
+    a = node.attrs
+    base = _carry(node)
+    if a.get("gated", True):
+        return [
+            ("ffn_up", {**base, "ffn": a["ffn"]}),
+            ("ffn_gate", {**base, "ffn": a["ffn"]}),
+            ("ffn_glu", {**base, "act": a.get("act", "silu")}),
+            ("ffn_down", {**base, "embed": a["embed"]}),
+        ]
+    return [
+        ("ffn_up", {**base, "ffn": a["ffn"]}),
+        ("ffn_act", {**base, "act": a.get("act", "gelu")}),
+        ("ffn_down", {**base, "embed": a["embed"]}),
+    ]
+
+
+_DECOMPOSE: dict = {"attention": _decompose_attention, "mlp": _decompose_mlp}
+
+# wiring templates: how the produced ops connect (index into produced list,
+# -1 == the original node's input).  Linear chains need no template; these two
+# have fan-in joins.
+_WIRING = {
+    "attention": {
+        0: (-1,), 1: (-1,), 2: (-1,),        # q,k,v proj from the input
+        3: (0, 1, 2),                          # pack_qkv(q, k, v)
+        4: (3,),                               # sdpa
+        5: (4,),                               # out_proj
+    },
+    # mlp is wired explicitly in ``decompose`` (gated vs ungated fan-in).
+}
+
+
+def decompose(plan: Plan, catalog: FunctionCatalog) -> Plan:
+    """Apply function-decomposition rules (recursively into subplans)."""
+    out = Plan(plan.name, {}, dict(plan.inputs), plan.outputs, {}, plan._ctr)
+    remap: dict = {i: i for i in plan.inputs}
+
+    for node in plan.topo():
+        sub = node.subplan
+        if sub is not None:
+            sub = decompose(sub, catalog)
+        if node.op not in _DECOMPOSE:
+            nid = out.add(node.op, [remap[i] for i in node.inputs],
+                          dict(node.attrs), sub, id=node.id)
+            remap[node.id] = nid
+            continue
+
+        chain = _DECOMPOSE[node.op](node)
+        src = remap[node.inputs[0]]
+        produced = []
+        if node.op == "attention":
+            wiring = _WIRING["attention"]
+            for idx, (op, attrs) in enumerate(chain):
+                ins = [src if j == -1 else produced[j] for j in wiring[idx]]
+                produced.append(out.add(op, ins, attrs))
+        else:  # mlp: explicit wiring
+            a = node.attrs
+            up = out.add(chain[0][0], [src], chain[0][1])
+            produced.append(up)
+            if a.get("gated", True):
+                gate = out.add("ffn_gate", [src], chain[1][1])
+                glu = out.add("ffn_glu", [up, gate], chain[2][1])
+                produced += [gate, glu]
+                last_in = glu
+                down_attrs = chain[3][1]
+            else:
+                act = out.add("ffn_act", [up], chain[1][1])
+                produced.append(act)
+                last_in = act
+                down_attrs = chain[2][1]
+            produced.append(out.add("ffn_down", [last_in], down_attrs))
+        remap[node.id] = produced[-1]
+
+    out.outputs = tuple(remap[o] for o in plan.outputs)
+    return infer_types(out, catalog)
+
+
+# --------------------------------------------------------------------------
+# 2. redundancy elimination (CSE)
+# --------------------------------------------------------------------------
+
+
+def eliminate_redundancy(plan: Plan, catalog: FunctionCatalog) -> Plan:
+    """§4.2.2: identical (op, inputs, attrs) nodes are merged, recursively."""
+    out = Plan(plan.name, {}, dict(plan.inputs), plan.outputs, {}, plan._ctr)
+    remap: dict = {i: i for i in plan.inputs}
+    seen: dict = {}
+
+    for node in plan.topo():
+        sub = node.subplan
+        if sub is not None:
+            sub = eliminate_redundancy(sub, catalog)
+        ins = tuple(remap[i] for i in node.inputs)
+        key = (node.op, ins,
+               tuple(sorted((k, _hashable(v)) for k, v in node.attrs.items())),
+               sub.structure_key() if sub is not None else None)
+        if key in seen and node.op != "store":  # stores are effects; keep them
+            remap[node.id] = seen[key]
+            continue
+        nid = out.add(node.op, list(ins), dict(node.attrs), sub, id=node.id)
+        seen[key] = nid
+        remap[node.id] = nid
+
+    out.outputs = tuple(remap[o] for o in plan.outputs)
+    return infer_types(out, catalog)
+
+
+def _hashable(v):
+    if isinstance(v, dict):
+        return tuple(sorted((k, _hashable(x)) for k, x in v.items()))
+    if isinstance(v, (list, tuple)):
+        return tuple(_hashable(x) for x in v)
+    if callable(v):
+        return getattr(v, "__name__", repr(v))
+    return v
+
+
+# --------------------------------------------------------------------------
+# 3. operator fusion
+# --------------------------------------------------------------------------
+
+
+def fuse_qkv(plan: Plan, catalog: FunctionCatalog) -> Plan:
+    """Fuse sibling q/k/v projections on the same input into one ``qkv_proj``.
+
+    This is the tensor analogue of the paper's NLP-annotator pipeline fusion:
+    three per-token projections sharing one input become a single fused
+    operator whose output tuple feeds sdpa, and the *fused* pattern
+    (qkv_proj→sdpa→out_proj) is what the physical pattern set matches to
+    flash-attention candidates (Fig. 7's "larger pattern ⇒ better plans").
+    """
+    out = Plan(plan.name, {}, dict(plan.inputs), plan.outputs, {}, plan._ctr)
+    remap: dict = {i: i for i in plan.inputs}
+    nodes = list(plan.topo())
+    consumed: set = set()
+
+    by_input: dict = {}
+    for n in nodes:
+        if n.op in ("q_proj", "k_proj", "v_proj"):
+            by_input.setdefault((n.inputs[0], _attr_key(n.attrs)), {})[n.op] = n
+
+    fused_for: dict = {}  # pack_qkv node id -> fused qkv node will replace it
+    for (src, _), group in by_input.items():
+        if set(group) == {"q_proj", "k_proj", "v_proj"}:
+            cons = plan.consumers()
+            packs = [c for c in cons[group["q_proj"].id]
+                     if plan.nodes[c].op == "pack_qkv"]
+            for p in packs:
+                pn = plan.nodes[p]
+                if (pn.inputs == (group["q_proj"].id, group["k_proj"].id,
+                                  group["v_proj"].id)):
+                    fused_for[p] = (src, dict(group["q_proj"].attrs))
+                    consumed.update(g.id for g in group.values())
+
+    for n in nodes:
+        sub = n.subplan
+        if sub is not None:
+            sub = fuse_qkv(sub, catalog)
+        if n.id in consumed:
+            continue
+        if n.id in fused_for:
+            src, attrs = fused_for[n.id]
+            nid = out.add("qkv_proj", [remap[src]], attrs, id=n.id + "_fused")
+            remap[n.id] = nid
+            continue
+        nid = out.add(n.op, [remap[i] for i in n.inputs], dict(n.attrs), sub,
+                      id=n.id)
+        remap[n.id] = nid
+
+    out.outputs = tuple(remap[o] for o in plan.outputs)
+    return infer_types(out, catalog)
+
+
+def fuse_scans(plan: Plan, catalog: FunctionCatalog) -> Plan:
+    """Map-fusion (§4.2.3) for ``scan_layers``: consecutive scans with the same
+    trip count fuse into one scan whose subplan is the concatenation.  The
+    intermediate carry between the two scans is never materialized per-layer,
+    and XLA sees one loop instead of two (smaller HLO, better overlap)."""
+    out = Plan(plan.name, {}, dict(plan.inputs), plan.outputs, {}, plan._ctr)
+    remap: dict = {i: i for i in plan.inputs}
+    nodes = list(plan.topo())
+    cons = plan.consumers()
+    skip: set = set()
+
+    i = 0
+    by_id = {n.id: n for n in nodes}
+    for n in nodes:
+        if n.id in skip:
+            continue
+        sub = n.subplan
+        if (n.op == "scan_layers" and len(cons[n.id]) == 1):
+            nxt = by_id.get(cons[n.id][0])
+            if (nxt is not None and nxt.op == "scan_layers"
+                    and nxt.inputs == (n.id,)
+                    and nxt.attrs.get("n_layers") == n.attrs.get("n_layers")
+                    and n.attrs.get("param_group") == nxt.attrs.get("param_group")):
+                merged = _concat_subplans(n.subplan, nxt.subplan)
+                attrs = dict(n.attrs)
+                attrs["fused_from"] = (n.id, nxt.id)
+                nid = out.add("scan_layers", [remap[n.inputs[0]]], attrs,
+                              merged, id=n.id + "+" + nxt.id)
+                remap[n.id] = nid
+                remap[nxt.id] = nid
+                skip.add(nxt.id)
+                continue
+        if sub is not None:
+            sub = fuse_scans(sub, catalog)
+        nid = out.add(n.op, [remap[i2] for i2 in n.inputs], dict(n.attrs), sub,
+                      id=n.id)
+        remap[n.id] = nid
+
+    out.outputs = tuple(remap[o] for o in plan.outputs)
+    return infer_types(out, catalog)
+
+
+def _concat_subplans(a: Plan, b: Plan) -> Plan:
+    """Concatenate two single-input/single-output subplans: b(a(x))."""
+    assert len(a.inputs) == 1 and len(b.inputs) == 1
+    out = a.copy()
+    out.name = f"{a.name}+{b.name}"
+    (a_out,) = a.outputs
+    (b_in,) = b.inputs
+    remap = {b_in: a_out}
+    for n in b.topo():
+        nid = out.add(n.op, [remap.get(i, i) for i in n.inputs], dict(n.attrs),
+                      n.subplan.copy() if n.subplan else None,
+                      id="b_" + n.id)
+        remap[n.id] = nid
+    out.outputs = (remap[b.outputs[0]],)
+    return out
+
+
+def _attr_key(attrs):
+    return tuple(sorted((k, _hashable(v)) for k, v in attrs.items()))
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+
+DEFAULT_PIPELINE = ("decompose", "cse", "fuse_qkv", "fuse_scans", "cse")
+
+_PASSES: dict = {
+    "decompose": decompose,
+    "cse": eliminate_redundancy,
+    "fuse_qkv": fuse_qkv,
+    "fuse_scans": fuse_scans,
+}
+
+
+def rewrite(plan: Plan, catalog: FunctionCatalog,
+            pipeline=DEFAULT_PIPELINE) -> Plan:
+    """Run the logical-rewrite pipeline (the paper's Fig. 6 sequencing:
+    decompose → merge redundancy → fuse)."""
+    infer_types(plan, catalog)
+    for name in pipeline:
+        plan = _PASSES[name](plan, catalog)
+    return plan

@@ -1,0 +1,136 @@
+"""Blocked online-softmax attention kernel (TPU target, Pallas).
+
+TPU adaptation notes (vs. the CUDA flash-attention blocking):
+  * the grid's innermost dimension iterates **sequentially** on a TPU core, so
+    the running max / normalizer / accumulator live in VMEM *scratch* that
+    persists across kv-block iterations — no atomics, no shared-memory
+    reduction tree;
+  * block shapes are MXU/VREG aligned: kv and head dims use 128-lane tiles,
+    q-block rows use multiples of 8 (fp32 sublane);
+  * causal + sliding-window masks are applied in-kernel with 2-D iota; a
+    whole-block skip for fully-future blocks is expressed with ``pl.when``.
+
+Layout: q (B, H, Sq, D), k/v (B, K, Skv, D) — heads-major so one (batch,
+q-head) pair maps to one grid row and GQA becomes an index-map division.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 sm_scale: float, causal: bool, window: int,
+                 block_q: int, block_k: int, kv_len: int, q_len: int):
+    qb = pl.program_id(1)
+    kb = pl.program_id(2)
+    n_kb = pl.num_programs(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # token coordinates of this (q-block, kv-block) tile
+    q_ids = qb * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_ids = kb * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    q_pos = q_ids + (kv_len - q_len)      # align ends (decode: q_len < kv_len)
+
+    mask = (k_ids < kv_len) & (q_ids < q_len)
+    if causal:
+        mask = mask & (k_ids <= q_pos)
+    if window and window > 0:
+        mask = mask & (k_ids > q_pos - window)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)             # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)             # (block_k, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                           # (block_q, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    if causal:
+        # skip blocks whose every key is in the strict future of every query
+        last_q_pos = qb * block_q + block_q - 1 + (kv_len - q_len)
+        pl.when(kb * block_k <= last_q_pos)(_compute)
+    else:
+        _compute()
+
+    @pl.when(kb == n_kb - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)              # fully-masked rows
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sm_scale", "causal", "window", "block_q", "block_k",
+                     "interpret"))
+def flash_attention_hmajor(q, k, v, *, sm_scale=None, causal=True, window=0,
+                           block_q=128, block_k=128, interpret=False):
+    """q: (B, H, Sq, D); k, v: (B, K, Skv, D), block-aligned (see ops.py)."""
+    b, h, sq, d = q.shape
+    _, kh, skv, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv)
+    scale = float(sm_scale) if sm_scale is not None else d ** -0.5
+    groups = h // kh
+
+    qr = q.reshape(b * h, sq, d)
+    kr = k.reshape(b * kh, skv, d)
+    vr = v.reshape(b * kh, skv, d)
+
+    grid = (b * h, sq // block_q, skv // block_k)
+
+    def q_map(bh, qb, kb):
+        return (bh, qb, 0)
+
+    def kv_map(bh, qb, kb):
+        # GQA: q-head bh reads kv head (bh % h) // groups of batch bh // h
+        return ((bh // h) * kh + (bh % h) // groups, kb, 0)
+
+    kernel = functools.partial(
+        _attn_kernel, sm_scale=scale, causal=causal, window=int(window or 0),
+        block_q=block_q, block_k=block_k, kv_len=skv, q_len=sq)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), q_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+            pl.BlockSpec((1, block_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),    # running normalizer
+            pltpu.VMEM((block_q, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, d)

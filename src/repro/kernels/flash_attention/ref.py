@@ -1,0 +1,49 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Semantics shared with the kernel:
+  * GQA: q has H heads, k/v have K ≤ H heads; q head h reads kv head
+    ``h * K // H``.
+  * ``causal=True`` applies a lower-triangular mask offset so the last query
+    attends to the last key (supports q_len < kv_len for decode).
+  * ``window > 0`` additionally restricts each query to the ``window`` most
+    recent keys (local / sliding-window attention, gemma3-style).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_mask(q_len: int, kv_len: int, *, causal: bool, window: int):
+    qi = jnp.arange(q_len)[:, None] + (kv_len - q_len)  # align ends
+    ki = jnp.arange(kv_len)[None, :]
+    mask = jnp.ones((q_len, kv_len), dtype=bool)
+    if causal:
+        mask &= ki <= qi
+    if window and window > 0:
+        mask &= ki > qi - window
+    return mask
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                  sm_scale: float | None = None, kv_len_mask=None):
+    """q: (B, Sq, H, D); k, v: (B, Skv, K, D).  Returns (B, Sq, H, D)."""
+    b, sq, h, d = q.shape
+    _, skv, kh, _ = k.shape
+    assert h % kh == 0, (h, kh)
+    groups = h // kh
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+
+    kr = jnp.repeat(k, groups, axis=2)
+    vr = jnp.repeat(v, groups, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+    mask = attention_mask(sq, skv, causal=causal, window=window)
+    if kv_len_mask is not None:  # (B, Skv) valid-key mask (decode caches)
+        mask = mask[None, None] & kv_len_mask[:, None, None, :]
+    else:
+        mask = mask[None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,60 @@
+"""Grouped expert matmul kernel (TPU target, Pallas).
+
+TPU adaptation of megablocks-style grouped GEMM: after capacity dispatch the
+token tensor is (E, C, D) and each expert's weight (D, F) is selected by the
+leading grid dimension — so expert weights stream HBM→VMEM once per expert
+while C×D token tiles and a fp32 accumulator tile stay VMEM-resident.  Tiles
+are MXU-aligned (128×128 default); the contraction (k) dimension is the
+innermost, sequential grid axis accumulating into scratch, the canonical TPU
+matmul pipeline shape.
+
+x: (E, C, D) @ w: (E, D, F) -> (E, C, F)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_scr):
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        x_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(kb == pl.num_programs(3) - 1)
+    def _fin():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_c", "block_f", "block_d",
+                                    "interpret"))
+def gmm(x, w, *, block_c=128, block_f=128, block_d=128, interpret=False):
+    e, c, d = x.shape
+    _, _, f = w.shape
+    bc, bd, bf = min(block_c, c), min(block_d, d), min(block_f, f)
+    assert c % bc == 0 and d % bd == 0 and f % bf == 0, (c, d, f)
+
+    grid = (e, c // bc, f // bf, d // bd)
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bc, bd), lambda e_, cb, fb, kb: (e_, cb, kb)),
+            pl.BlockSpec((1, bd, bf), lambda e_, cb, fb, kb: (e_, kb, fb)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, bf), lambda e_, cb, fb, kb: (e_, cb, fb)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the grouped expert matmul: per-expert token blocks
+(after capacity dispatch) times per-expert weights.
+
+x: (E, C, D) tokens grouped by expert (capacity-padded),
+w: (E, D, F) expert weights  ->  (E, C, F).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gmm_reference(x, w):
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

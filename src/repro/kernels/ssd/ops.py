@@ -1,0 +1,54 @@
+"""Public jit'd wrapper for the SSD kernel: framework layout (B, T, H, P) /
+(B, T, H) / (B, T, H, N); pads T to chunk multiples with a=1, b=0 (state
+preserved, no spurious contributions)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .ref import ssd_reference
+from .ssd import ssd_hmajor
+
+
+def ssd(x, a, b, c, *, chunk=128, interpret=True):
+    """Differentiable (custom_vjp; backward = oracle VJP)."""
+    return _diffable(chunk, bool(interpret))(x, a, b, c)
+
+
+@functools.lru_cache(maxsize=None)
+def _diffable(chunk, interpret):
+    @jax.custom_vjp
+    def f(x, a, b, c):
+        return _forward(x, a, b, c, chunk=chunk, interpret=interpret)
+
+    def fwd(x, a, b, c):
+        return f(x, a, b, c), (x, a, b, c)
+
+    def bwd(res, g):
+        x, a, b, c = res
+        _, vjp = jax.vjp(lambda *args: ssd_reference(*args)[0], x, a, b, c)
+        return vjp(g)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def _forward(x, a, b, c, *, chunk=128, interpret=True):
+    bs, t, h, p = x.shape
+    n = b.shape[-1]
+    ch = min(chunk, max(8, t))
+    rem = (-t) % ch
+    if rem:
+        x = jnp.pad(x, [(0, 0), (0, rem), (0, 0), (0, 0)])
+        a = jnp.pad(a, [(0, 0), (0, rem), (0, 0)], constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, rem), (0, 0), (0, 0)])
+        c = jnp.pad(c, [(0, 0), (0, rem), (0, 0), (0, 0)])
+    tt = t + rem
+    xh = x.transpose(0, 2, 1, 3).reshape(bs * h, tt, p)
+    ah = a.transpose(0, 2, 1).reshape(bs * h, tt, 1)
+    bh_ = b.transpose(0, 2, 1, 3).reshape(bs * h, tt, n)
+    ch_ = c.transpose(0, 2, 1, 3).reshape(bs * h, tt, n)
+    y = ssd_hmajor(xh, ah, bh_, ch_, chunk=ch, interpret=interpret)
+    return y.reshape(bs, h, tt, p).transpose(0, 2, 1, 3)[:, :t]

@@ -1,0 +1,87 @@
+"""Pure-jnp oracle for the Mamba2 SSD (state-space dual) recurrence.
+
+Per head: state H ∈ R^{N×P}; per step scalar decay a_t ∈ (0,1) (head-shared),
+input projection b_t ∈ R^N, output projection c_t ∈ R^N, token x_t ∈ R^P:
+
+    H_t = a_t·H_{t-1} + b_t ⊗ x_t
+    y_t = c_t · H_t  (+ D·x_t skip handled by the caller)
+
+Shapes: x (B, T, H, P), a (B, T, H), b/c (B, T, H, N).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_reference(x, a, b, c, initial_state=None):
+    bs, t, h, p = x.shape
+    n = b.shape[-1]
+    x32, a32, b32, c32 = (v.astype(jnp.float32) for v in (x, a, b, c))
+
+    if initial_state is None:
+        s0 = jnp.zeros((bs, h, n, p), jnp.float32)
+    else:
+        s0 = initial_state.astype(jnp.float32)
+
+    def step(s, xs):
+        xt, at, bt, ct = xs                       # (B,H,P), (B,H), (B,H,N)
+        s = at[..., None, None] * s + bt[..., :, None] * xt[..., None, :]
+        y = jnp.einsum("bhn,bhnp->bhp", ct, s)
+        return s, y
+
+    xs = (jnp.moveaxis(x32, 1, 0), jnp.moveaxis(a32, 1, 0),
+          jnp.moveaxis(b32, 1, 0), jnp.moveaxis(c32, 1, 0))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), s_fin
+
+
+def ssd_chunked(x, a, b, c, *, chunk=128):
+    """Chunked SSD in pure jnp — the same intra/inter-chunk matmul
+    re-expression as the Pallas kernel (HBM-friendly: state materializes
+    once per chunk, not per timestep), scanning over chunks.
+
+    This is the XLA *engine candidate* for the ssd pattern; the sequential
+    scan above is the oracle."""
+    bs, t, h, p = x.shape
+    n = b.shape[-1]
+    ch = min(chunk, t)
+    rem = (-t) % ch
+    if rem:
+        x = jnp.pad(x, [(0, 0), (0, rem), (0, 0), (0, 0)])
+        a = jnp.pad(a, [(0, 0), (0, rem), (0, 0)], constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, rem), (0, 0), (0, 0)])
+        c = jnp.pad(c, [(0, 0), (0, rem), (0, 0), (0, 0)])
+    tt = t + rem
+    nc = tt // ch
+
+    def to_chunks(v):
+        return jnp.moveaxis(
+            v.reshape(bs, nc, ch, h, *v.shape[3:]), 1, 0)  # (NC,B,L,H,...)
+
+    xc = to_chunks(x.astype(jnp.float32))
+    ac = to_chunks(a[..., None].astype(jnp.float32))[..., 0]   # (NC,B,L,H)
+    bc = to_chunks(b.astype(jnp.float32))
+    cc = to_chunks(c.astype(jnp.float32))
+
+    tri = jnp.tril(jnp.ones((ch, ch), bool))
+
+    def chunk_step(h_in, xs):
+        xk, ak, bk, ck = xs                       # (B,L,H,...) per chunk
+        log_a = jnp.log(jnp.maximum(ak, 1e-37))   # (B,L,H)
+        cum = jnp.cumsum(log_a, axis=1)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,L,L,H)
+        l_decay = jnp.where(tri[None, :, :, None], jnp.exp(seg), 0.0)
+        g = jnp.einsum("blhn,bshn->blsh", ck, bk)              # (B,L,L,H)
+        y_intra = jnp.einsum("blsh,bshp->blhp", g * l_decay, xk)
+        cum_a = jnp.exp(cum)                                   # (B,L,H)
+        y_inter = jnp.einsum("blhn,bhnp->blhp", ck * cum_a[..., None], h_in)
+        w = jnp.exp(cum[:, -1:, :] - cum)                      # (B,L,H)
+        h_out = (jnp.exp(cum[:, -1, :])[..., None, None] * h_in
+                 + jnp.einsum("blhn,blhp->bhnp", bk * w[..., None], xk))
+        return h_out, y_intra + y_inter
+
+    s0 = jnp.zeros((bs, h, n, p), jnp.float32)
+    s_fin, ys = jax.lax.scan(chunk_step, s0, (xc, ac, bc, cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bs, tt, h, p)[:, :t]
+    return y.astype(x.dtype), s_fin

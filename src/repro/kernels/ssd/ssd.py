@@ -1,0 +1,89 @@
+"""Mamba2 SSD chunked-scan kernel (TPU target, Pallas).
+
+TPU adaptation of the SSD algorithm (Dao & Gu 2024): the recurrence is
+re-expressed per chunk of length L as dense matmuls that run on the MXU —
+
+  intra-chunk:  Y_intra = ((C Bᵀ) ⊙ L_decay) X          (L×L by L×P matmul)
+  inter-chunk:  Y_inter = cum_a ⊙ (C H_in)               (L×N by N×P matmul)
+  state update: H_out   = (Π a)·H_in + (B ⊙ w)ᵀ X        (N×L by L×P matmul)
+
+where ``L_decay[t,s] = Π_{r=s+1..t} a_r`` and ``w_s = Π_{r>s} a_r``.  The
+chunk grid dimension iterates sequentially on the core, carrying H in fp32
+VMEM scratch.  All tiles are VMEM-resident; L is chosen so (L×L + L×P + N×P)
+fp32 fits comfortably (default L=128 ⇒ ≤ 192 KiB for P=N=128).
+
+Layout: x (B·H, T, P), a (B·H, T, 1), b/c (B·H, T, N).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, h_scr, *, chunk: int):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)              # (L, P)
+    a = a_ref[0].astype(jnp.float32)              # (L, 1)
+    b = b_ref[0].astype(jnp.float32)              # (L, N)
+    c = c_ref[0].astype(jnp.float32)              # (L, N)
+
+    log_a = jnp.log(jnp.maximum(a, 1e-37))        # (L, 1)
+    cum = jnp.cumsum(log_a, axis=0)               # log Π_{r<=t} a_r
+    # L_decay[t,s] = exp(cum[t] - cum[s]) for s<=t (includes a_t..a_{s+1})
+    seg = cum - cum.T                              # (L, L) log decay
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l_decay = jnp.where(tri, jnp.exp(seg), 0.0)
+
+    g = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (L, L)
+    y_intra = (g * l_decay) @ x                                  # (L, P)
+
+    h_in = h_scr[...]                              # (N, P)
+    cum_a = jnp.exp(cum)                           # (L, 1) Π_{r<=t} a_r
+    y_inter = (c * cum_a) @ h_in                   # (L, P)
+
+    # state: H_out = (Π a)·H_in + Σ_s (Π_{r>s} a_r)·b_s ⊗ x_s
+    total = jnp.exp(cum[-1:])                      # (1, 1)
+    w = jnp.exp(cum[-1:] - cum)                    # (L, 1)  Π_{r>s} a_r
+    h_scr[...] = total * h_in + jax.lax.dot_general(
+        b * w, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (N, P)
+
+    y_ref[0] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_hmajor(x, a, b, c, *, chunk=128, interpret=False):
+    """x: (BH, T, P); a: (BH, T, 1); b, c: (BH, T, N) -> y (BH, T, P)."""
+    bh, t, p = x.shape
+    n = b.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    grid = (bh, t // chunk)
+
+    def smap(i, cb):
+        return (i, cb, 0)
+
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), smap),
+            pl.BlockSpec((1, chunk, 1), smap),
+            pl.BlockSpec((1, chunk, n), smap),
+            pl.BlockSpec((1, chunk, n), smap),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), smap),
+        out_shape=jax.ShapeDtypeStruct((bh, t, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, a, b, c)

@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence.
+
+Per head with head dim D, fp32 state S ∈ R^{D×D}:
+
+    y_t = r_t · (diag(u)·(k_t ⊗ v_t) + S_{t-1})
+    S_t = diag(w_t)·S_{t-1} + k_t ⊗ v_t
+
+with data-dependent decay ``w_t ∈ (0,1)`` (the Finch contribution) and the
+learned per-head bonus ``u``.  Shapes: r/k/v/w (B, T, H, D), u (H, D).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_reference(r, k, v, w, u, initial_state=None):
+    b, t, h, d = r.shape
+    r32, k32, v32, w32 = (x.astype(jnp.float32) for x in (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+
+    if initial_state is None:
+        s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    else:
+        s0 = initial_state.astype(jnp.float32)
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs                      # (B, H, D)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B, H, D, D)
+        y = jnp.einsum("bhi,bhij->bhj", rt, u32[None, :, :, None] * kv + s)
+        s = wt[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(x, 1, 0) for x in (r32, k32, v32, w32))
+    s_fin, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                   # (B, T, H, D)
+    return y.astype(r.dtype), s_fin
+
+
+def wkv6_chunked(r, k, v, w, u, *, chunk=32, clamp=60.0):
+    """Chunked WKV6 in pure jnp — the XLA engine candidate.
+
+    The per-timestep scan materializes the D×D state T times (HBM-bound at
+    training scale); this form scans over chunks of length L, expressing the
+    intra-chunk interaction as an (L,L) per-head matmul with channel-wise
+    decay folded into the operands:
+
+        A[t,s] = (r_t ⊙ e^{cw_{t-1}}) · (k_s ⊙ e^{-cw_s}),  s < t
+
+    where cw is the in-chunk cumulative log-decay.  cw ≤ 0, so the r-side
+    exponent never overflows; the k-side exponent is clamped at ``clamp``
+    (contributions that decayed by e^-60 are zero in fp32 anyway).
+    """
+    b, t, h, d = r.shape
+    ch = min(chunk, t)
+    rem = (-t) % ch
+    if rem:
+        pad = [(0, 0), (0, rem), (0, 0), (0, 0)]
+        r = jnp.pad(r, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+        w = jnp.pad(w, pad, constant_values=1.0)
+    tt = t + rem
+    nc = tt // ch
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.astype(jnp.float32).reshape(b, nc, ch, h, d),
+                            1, 0)                       # (NC,B,L,H,D)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w))
+    u32 = u.astype(jnp.float32)
+    tri = jnp.tril(jnp.ones((ch, ch), bool), k=-1)      # strict lower
+
+    def chunk_step(s_in, xs):
+        rk, kk, vk, wk = xs                             # (B,L,H,D)
+        logw = jnp.log(jnp.maximum(wk, 1e-37))
+        cw = jnp.cumsum(logw, axis=1)                   # (B,L,H,D) ≤ 0
+        cw_prev = cw - logw
+        q_in = rk * jnp.exp(cw_prev)                    # decayed queries
+        k_out = kk * jnp.exp(jnp.minimum(-cw, clamp))   # boosted keys
+        a = jnp.einsum("blhd,bshd->bhls", q_in, k_out)
+        a = jnp.where(tri[None, None], a, 0.0)
+        y = jnp.einsum("bhls,bshd->blhd", a, vk)
+        # current-step bonus
+        diag = jnp.einsum("blhd,hd,blhd->blh", rk, u32, kk)
+        y = y + diag[..., None] * vk
+        # inter-chunk carry
+        y = y + jnp.einsum("blhd,bhde->blhe", q_in, s_in)
+        # state update (exponents ≤ 0)
+        decay_to_end = jnp.exp(cw[:, -1:] - cw)         # (B,L,H,D)
+        s_out = (jnp.exp(cw[:, -1])[..., None] * s_in
+                 + jnp.einsum("blhd,blhe->bhde", kk * decay_to_end, vk))
+        return s_out, y
+
+    s0 = jnp.zeros((b, h, d, d), jnp.float32)
+    s_fin, ys = jax.lax.scan(chunk_step, s0, (rc, kc, vc, wc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, tt, h, d)[:, :t]
+    return y.astype(r.dtype), s_fin

@@ -1,0 +1,85 @@
+"""RWKV6 WKV recurrence kernel (TPU target, Pallas).
+
+TPU adaptation: the recurrence is sequential in t, so the kernel keeps the
+per-(batch·head) state matrix S ∈ R^{D×D} in fp32 VMEM **scratch** that
+persists across the chunk grid dimension (sequential on a TPU core).  Inside
+a chunk the timestep loop runs over VMEM-resident (chunk, D) tiles; the
+rank-1 update k_t⊗v_t and the row-vector product r_t·S are VPU outer/inner
+products (D=64 for rwkv6-3b — one VREG row), so the MXU is deliberately not
+used: arithmetic intensity of WKV is O(1) per state element and the op is
+bandwidth-bound; the win over the XLA scan is keeping S resident instead of
+round-tripping it through HBM every step.
+
+Layout: r/k/v/w (B, H, T, D) heads-major; u (H, D).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, s_scr, *,
+                 chunk: int):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    u = u_ref[0].astype(jnp.float32)              # (1, D) row
+
+    def step(t, _):
+        rt = r_ref[0, pl.ds(t, 1), :].astype(jnp.float32)   # (1, D)
+        kt = k_ref[0, pl.ds(t, 1), :].astype(jnp.float32)
+        vt = v_ref[0, pl.ds(t, 1), :].astype(jnp.float32)
+        wt = w_ref[0, pl.ds(t, 1), :].astype(jnp.float32)
+        kv = kt.T @ vt                                       # (D, D) rank-1
+        s = s_scr[...]
+        y = rt @ (u.T * kv + s)                              # (1, D)
+        s_scr[...] = wt.T * s + kv
+        y_ref[0, pl.ds(t, 1), :] = y.astype(y_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, chunk, step, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def wkv6_hmajor(r, k, v, w, u, *, chunk=128, interpret=False):
+    """r/k/v/w: (B, H, T, D); u: (H, D) -> y (B, H, T, D)."""
+    b, h, t, d = r.shape
+    assert t % chunk == 0, (t, chunk)
+    rr = r.reshape(b * h, t, d)
+    kk = k.reshape(b * h, t, d)
+    vv = v.reshape(b * h, t, d)
+    ww = w.reshape(b * h, t, d)
+    uu = jnp.broadcast_to(u[None], (b, h, d)).reshape(b * h, 1, d)
+
+    grid = (b * h, t // chunk)
+
+    def seq_map(bh, cb):
+        return (bh, cb, 0)
+
+    def u_map(bh, cb):
+        return (bh, 0, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_wkv6_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, d), seq_map),
+            pl.BlockSpec((1, chunk, d), seq_map),
+            pl.BlockSpec((1, chunk, d), seq_map),
+            pl.BlockSpec((1, chunk, d), seq_map),
+            pl.BlockSpec((1, 1, d), u_map),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, d), seq_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, t, d), r.dtype),
+        scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
+        interpret=interpret,
+    )(rr, kk, vv, ww, uu)
+    return out.reshape(b, h, t, d)

@@ -1,0 +1,55 @@
+"""Elastic scaling: re-mesh a training job onto whatever devices remain.
+
+On a real cluster the coordinator detects a lost slice, restarts the job on
+N' < N hosts, and this module rebuilds the largest valid (data, model) mesh
+from the surviving devices and restores the latest checkpoint *resharded*
+onto it (checkpoint.py accepts a different-mesh sharding at restore).
+
+The policy: keep the model axis as large as memory requires (params must
+fit), give the rest to data; batch is re-divided across the new data axis
+(global batch and the deterministic data stream are unchanged, so training
+continues bit-for-bit in sample order).
+
+    mesh = remesh(jax.devices(), min_model=16)
+    state = restore_checkpoint(latest, template,
+                               shardings=state_shardings(mesh, model, opt))
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def largest_mesh_shape(n_devices: int, *, min_model: int = 1,
+                       prefer_model: int = 16) -> tuple:
+    """(data, model) with data*model == largest usable count ≤ n_devices."""
+    model = min(prefer_model, n_devices)
+    while model >= min_model:
+        data = n_devices // model
+        if data >= 1 and data * model <= n_devices:
+            return (data, model)
+        model //= 2
+    raise ValueError(f"cannot build a mesh from {n_devices} devices "
+                     f"with min_model={min_model}")
+
+
+def remesh(devices=None, *, min_model: int = 1, prefer_model: int = 16):
+    devices = devices if devices is not None else jax.devices()
+    data, model = largest_mesh_shape(len(devices), min_model=min_model,
+                                     prefer_model=prefer_model)
+    used = devices[:data * model]
+    import numpy as np
+    arr = np.array(used).reshape(data, model)
+    return jax.sharding.Mesh(arr, ("data", "model"))
+
+
+def min_model_axis(param_bytes: float, hbm_bytes: float = 16e9,
+                   overhead: float = 3.0) -> int:
+    """Smallest power-of-two model axis so params (+optimizer overhead)
+    fit per device."""
+    need = param_bytes * overhead / hbm_bytes
+    m = 1
+    while m < need:
+        m *= 2
+    return m

@@ -1,0 +1,234 @@
+"""Whole-module analysis of post-SPMD HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once** (scan-over-
+layers would be undercounted by n_layers×), so we analyze the HLO text
+ourselves:
+
+  * computations are parsed into blocks; the call graph (``calls=``,
+    ``to_apply=``, ``condition=%c, body=%b`` with the
+    ``known_trip_count`` backend config) propagates an execution-count
+    multiplier from ENTRY;
+  * **flops** = Σ over dot ops of 2·numel(result)·prod(lhs contracting
+    dims) × multiplier (elementwise/transcendental flops are ignored — on
+    matmul-dominated training steps they are ≤1–2 %);
+  * **collective bytes** = Σ result bytes of all-gather / all-reduce /
+    reduce-scatter / all-to-all / collective-permute × multiplier; wire
+    bytes apply the ring-algorithm factor (2× for all-reduce);
+  * **hbm bytes** ≈ 2 × Σ result bytes of *materializing* instructions in
+    non-fusion computations (×2 models write + subsequent read).
+    Non-materializing ops are excluded: ``tuple`` / ``get-tuple-element`` /
+    ``parameter`` / ``bitcast`` / ``while`` / ``conditional`` results are
+    aliases, and ``dynamic-update-slice`` is counted at the size of its
+    *update* operand (in-place on hardware), not the full buffer — without
+    these exclusions a scan-over-layers step double-counts its entire carry
+    (params + KV caches) once per layer.
+
+All shapes in the SPMD module are already per-device.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "token": 0, "opaque": 0}
+
+_COMP_HEAD = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR = re.compile(r"^\s+(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_WHILE = re.compile(
+    r"while\(.*?condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP = re.compile(r'known_trip_count..\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_DOT = re.compile(
+    r"dot\(\s*%?([\w.\-]+)\s*,\s*%?([\w.\-]+)\s*\).*?"
+    r"lhs_contracting_dims=\{([\d,]*)\}")
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_NO_MATERIALIZE = {"tuple", "get-tuple-element", "parameter", "bitcast",
+                   "while", "conditional", "constant", "after-all",
+                   "optimization-barrier"}
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _operands(body: str):
+    """Operand names of an instruction body like 'opcode(%a, %b, ...)'."""
+    inner = body.split("(", 1)[1] if "(" in body else ""
+    depth, out, cur = 1, [], ""
+    for ch in inner:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        cur += ch
+    m = _OPERANDS_RE.findall(cur)
+    return m
+_ALG_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shapes_of(type_str):
+    """All array shapes in a result type (handles tuples)."""
+    out = []
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out.append((dt, n, n * _DTYPE_BYTES[dt]))
+    return out
+
+
+@dataclass
+class Computation:
+    name: str
+    entry: bool = False
+    instrs: list = field(default_factory=list)    # (iname, rest_of_line)
+    calls: list = field(default_factory=list)     # (callee, mult, kind)
+    fusion_internal: bool = False
+
+
+def _parse(text: str) -> dict:
+    comps: dict = {}
+    cur = None
+    for line in text.splitlines():
+        if not line.startswith(" "):
+            m = _COMP_HEAD.match(line)
+            if m:
+                cur = Computation(m.group(2), entry=bool(m.group(1)))
+                comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        mi = _INSTR.match(line)
+        if mi:
+            cur.instrs.append((mi.group(1), mi.group(2)))
+    # call edges
+    for c in comps.values():
+        for _, rest in c.instrs:
+            mw = _WHILE.search(rest)
+            if mw:
+                cond, body = mw.groups()
+                mt = _TRIP.search(rest)
+                trip = int(mt.group(1)) if mt else 1
+                c.calls.append((body, trip, "while_body"))
+                c.calls.append((cond, trip + 1, "while_cond"))
+                continue
+            mb = _BRANCHES.search(rest)
+            if mb:
+                for b in mb.group(1).split(","):
+                    b = b.strip().lstrip("%")
+                    if b:
+                        c.calls.append((b, 1, "branch"))
+            for callee in _CALLS.findall(rest):
+                kind = "fusion" if "fusion(" in rest or "kind=" in rest \
+                    else "call"
+                c.calls.append((callee, 1, kind))
+    # mark fusion-internal computations (their buffers don't materialize)
+    for c in comps.values():
+        for callee, _, kind in c.calls:
+            if kind == "fusion" and callee in comps:
+                comps[callee].fusion_internal = True
+    return comps
+
+
+def _multipliers(comps: dict) -> dict:
+    mult = {name: 0.0 for name in comps}
+    entry = next((c for c in comps.values() if c.entry), None)
+    if entry is None:  # fall back: largest computation
+        entry = max(comps.values(), key=lambda c: len(c.instrs))
+    stack = [(entry.name, 1.0)]
+    while stack:
+        name, m = stack.pop()
+        if name not in comps:
+            continue
+        mult[name] += m
+        for callee, k, kind in comps[name].calls:
+            stack.append((callee, m * k))
+    return mult
+
+
+def _type_prefix(rest: str) -> str:
+    """The result-type prefix of an instruction body (handles tuples)."""
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rest[:i + 1]
+        return rest
+    return rest.split(" ", 1)[0]
+
+
+def analyze_hlo(text: str) -> dict:
+    comps = _parse(text)
+    mult = _multipliers(comps)
+
+    # instruction-name -> result type string (for dot operand lookup)
+    shape_of: dict = {}
+    for c in comps.values():
+        for iname, rest in c.instrs:
+            shape_of[iname] = _type_prefix(rest)
+
+    flops = 0.0
+    coll = {k: {"count": 0, "bytes": 0.0} for k in _COLL_KINDS}
+    hbm_write = 0.0
+
+    for c in comps.values():
+        m = mult.get(c.name, 0.0)
+        if m == 0.0:
+            continue
+        for iname, rest in c.instrs:
+            type_part = _type_prefix(rest)
+            # dots
+            md = _DOT.search(rest)
+            if md:
+                lhs, _, cdims = md.groups()
+                out_shapes = _shapes_of(type_part)
+                out_n = out_shapes[0][1] if out_shapes else 0
+                lhs_shapes = _SHAPE.findall(shape_of.get(lhs, ""))
+                k = 1
+                if lhs_shapes:
+                    dims = [int(d) for d in lhs_shapes[0][1].split(",") if d]
+                    for ci in cdims.split(","):
+                        if ci and int(ci) < len(dims):
+                            k *= dims[int(ci)]
+                flops += m * 2.0 * out_n * k
+            # collectives
+            for kind in _COLL_KINDS:
+                if f" {kind}(" in rest or rest.startswith(f"{kind}("):
+                    sz = sum(b for _, _, b in _shapes_of(type_part))
+                    coll[kind]["count"] += int(m)
+                    coll[kind]["bytes"] += m * sz
+                    break
+            # hbm writes: materialized buffers in non-fusion comps
+            if not c.fusion_internal:
+                body = rest[len(type_part):].lstrip()
+                opcode = body.split("(", 1)[0].strip().split(" ")[-1]
+                if opcode in _NO_MATERIALIZE:
+                    continue
+                if opcode == "dynamic-update-slice":
+                    ops_ = _operands(body)
+                    upd = shape_of.get(ops_[1], "") if len(ops_) > 1 else ""
+                    hbm_write += m * sum(b for _, _, b in _shapes_of(upd))
+                    continue
+                hbm_write += m * sum(b for _, _, b in _shapes_of(type_part))
+
+    wire = sum(v["bytes"] * _ALG_FACTOR[k] for k, v in coll.items())
+    return {
+        "flops": flops,
+        "hbm_bytes": 2.0 * hbm_write,
+        "collectives": {k: v for k, v in coll.items()},
+        "wire_bytes": wire,
+        "n_computations": len(comps),
+    }

@@ -1,0 +1,95 @@
+"""Production mesh construction + sharding helpers.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state).  Single-pod: (data=16, model=16) = 256 chips (one v5e
+pod); multi-pod: (pod=2, data=16, model=16) = 512 chips.  The ``pod`` axis
+composes with ``data`` for gradient reduction (DP spans pod×data) and is the
+axis along which the design scales to N pods.
+"""
+from __future__ import annotations
+
+import jax
+
+from ..core.executor import ShardingRules, params_sharding
+from ..core.ir import SystemCatalog
+
+P = jax.sharding.PartitionSpec
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_cpu_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over however many (host-platform) devices exist."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def syscat_for_mesh(mesh) -> SystemCatalog:
+    return SystemCatalog(mesh_axes=tuple(mesh.axis_names),
+                         mesh_shape=tuple(mesh.shape[a]
+                                          for a in mesh.axis_names))
+
+
+def data_spec(mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def input_shardings(mesh, input_specs: dict) -> dict:
+    """Batch-leading inputs shard over (pod, data)."""
+    out = {}
+    for name, sds in input_specs.items():
+        spec = [None] * len(sds.shape)
+        if len(sds.shape) >= 1:
+            spec[0] = tuple(a for a in ("pod", "data")
+                            if a in mesh.axis_names) or None
+        out[name] = jax.sharding.NamedSharding(mesh, P(*spec))
+    return out
+
+
+def state_shardings(mesh, model, optimizer, rules=None):
+    """NamedShardings for the full TrainState (params + optimizer slots).
+
+    m/v mirror param sharding; Adafactor's factored slots drop the last
+    (vr) / second-to-last (vc) dim of the padded param spec; scalars
+    replicate."""
+    from ..train.train_step import TrainState
+    rules = rules or ShardingRules()
+    specs = model.param_specs()
+    p_shard = params_sharding(specs, mesh, rules)
+    abstract = model.abstract_params()
+    replicated = jax.sharding.NamedSharding(mesh, P())
+
+    def padded_spec(p_sh, rank):
+        s = tuple(p_sh.spec)
+        return s + (None,) * (rank - len(s))
+
+    opt_abstract = jax.eval_shape(optimizer.init, abstract)
+    if set(opt_abstract) >= {"m", "v", "count"}:
+        opt_shard = {"m": p_shard, "v": p_shard, "count": replicated}
+        if "master" in opt_abstract:
+            opt_shard["master"] = p_shard
+    elif set(opt_abstract) == {"slots", "count"}:
+        with_master = bool(getattr(optimizer, "master", False))
+
+        def slot(p_sh, p_abs):
+            rank = len(p_abs.shape)
+            if rank >= 2:
+                full = padded_spec(p_sh, rank)
+                out = {"vr": jax.sharding.NamedSharding(mesh, P(*full[:-1])),
+                       "vc": jax.sharding.NamedSharding(
+                           mesh, P(*(full[:-2] + full[-1:])))}
+            else:
+                out = {"v": p_sh}
+            if with_master:
+                out["master"] = p_sh
+            return out
+
+        opt_shard = {"slots": jax.tree.map(slot, p_shard, abstract),
+                     "count": replicated}
+    else:
+        raise ValueError("unknown optimizer state structure")
+    return TrainState(step=replicated, params=p_shard, opt_state=opt_shard)

@@ -1,0 +1,60 @@
+"""Shared layer utilities: norms, rotary embeddings, initializers.
+
+Every ``init_*`` function returns ``(params, specs)`` where ``specs`` mirrors
+the param pytree with tuples of *semantic dimension names* per leaf —
+("embed", "ffn"), ("layers", "vocab", "embed"), … — which the sharding rules
+(launch/mesh.py) translate to PartitionSpecs.  This is the variable-metadata
+map of the paper carried down to parameters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(
+        jnp.float32))).astype(dt)
+
+
+def rope(x, positions, *, theta=10000.0):
+    """x: (..., S, H, D) with positions (..., S) — rotates pairs (even, odd)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def he_init(key, shape, fan_in=None, dtype=jnp.float32):
+    fan = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) * (fan ** -0.5)).astype(dtype)
+
+
+class KeyGen:
+    def __init__(self, key):
+        self._key = key
+
+    def __call__(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def stack_params(trees):
+    """Stack a list of identical pytrees along a new leading 'layers' axis."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stack_specs(spec):
+    return jax.tree.map(
+        lambda s: ("layers",) + s, spec,
+        is_leaf=lambda s: isinstance(s, tuple) and all(
+            isinstance(x, str) for x in s))

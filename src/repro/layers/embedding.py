@@ -1,0 +1,47 @@
+"""Token embedding / unembedding and the loss head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import he_init
+
+
+def init_embedding(kg, vocab, embed, dtype=jnp.float32, tied=True):
+    p = {"table": he_init(kg(), (vocab, embed), embed, dtype)}
+    s = {"table": ("vocab", "embed")}
+    if not tied:
+        p["head"] = he_init(kg(), (embed, vocab), embed, dtype)
+        s["head"] = ("embed", "vocab")
+    return p, s
+
+
+def embed(p, ids, *, scale=False):
+    out = jnp.take(p["table"], ids, axis=0)
+    if scale:
+        out = out * (p["table"].shape[-1] ** 0.5)
+    return out
+
+
+def unembed(p, x):
+    w = p.get("head")
+    if w is None:
+        w = p["table"].T
+    return jnp.einsum("...e,ev->...v", x.astype(jnp.float32),
+                      w.astype(jnp.float32))
+
+
+def mask_padded_logits(logits, vocab):
+    """Padding rows of a padded-vocab head must not leak probability mass."""
+    ids = jnp.arange(logits.shape[-1])
+    return jnp.where(ids < vocab, logits, -1e30)
+
+
+def softmax_xent(logits, labels, *, ignore_index=-100):
+    """Mean next-token CE over valid labels.  logits (..., V), labels (...)."""
+    valid = labels != ignore_index
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid.astype(logits.dtype)
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(valid.astype(logits.dtype)), 1.0)

@@ -1,0 +1,55 @@
+"""MLP family: gated (SwiGLU/GeGLU) and plain FFN, fused and unfused forms."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import he_init
+
+_ACTS = {
+    "silu": jax.nn.silu,
+    "gelu": jax.nn.gelu,
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+}
+
+
+def init_mlp(kg, cfg, dtype=jnp.float32):
+    e, f = cfg["embed"], cfg["ffn"]
+    p = {"wi": he_init(kg(), (e, f), e, dtype),
+         "wo": he_init(kg(), (f, e), f, dtype)}
+    s = {"wi": ("embed", "ffn"), "wo": ("ffn", "embed")}
+    if cfg.get("gated", True):
+        p["wg"] = he_init(kg(), (e, f), e, dtype)
+        s["wg"] = ("embed", "ffn")
+    return p, s
+
+
+def ffn_up(p, x):
+    return jnp.einsum("...e,ef->...f", x, p["wi"].astype(x.dtype))
+
+
+def ffn_gate(p, x):
+    return jnp.einsum("...e,ef->...f", x, p["wg"].astype(x.dtype))
+
+
+def ffn_glu(up, gate, act="silu"):
+    return _ACTS[act](gate) * up
+
+
+def ffn_act(up, act="gelu"):
+    return _ACTS[act](up)
+
+
+def ffn_down(p, h):
+    return jnp.einsum("...f,fe->...e", h, p["wo"].astype(h.dtype))
+
+
+def mlp_fused(p, x, *, gated=True, act=None):
+    """The single fused block (one traversal of x, jointly scheduled gemms)."""
+    up = ffn_up(p, x)
+    if gated and "wg" in p:
+        h = ffn_glu(up, ffn_gate(p, x), act or "silu")
+    else:
+        h = ffn_act(up, act or "gelu")
+    return ffn_down(p, h)

@@ -1,0 +1,263 @@
+"""Serving path: cache construction, prefill, and single-token decode.
+
+``serve_step`` is what the decode_* / long_* dry-run shapes lower: one new
+token against a seq_len KV cache.  The cache layout follows the scan-group
+structure (one stacked entry per group), sharded batch→data, kv-heads→model.
+
+Local (sliding-window) attention layers allocate **ring-buffer** caches of
+window size instead of full-context caches when ``ring_local=True`` — the
+§Perf optimization for gemma3's 5:1 local:global stack (52 of 62 layers need
+only W=1024 slots instead of 524288).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..layers import attention as A
+from ..layers import embedding as E
+from ..layers import mamba as M
+from ..layers import mlp as F
+from ..layers import moe as X
+from ..layers import rwkv as R
+from ..layers.common import rmsnorm, rope
+from .lm import LM, Block, Group
+
+
+def _attn_dims(cfg: ModelConfig):
+    return cfg.heads, cfg.kv_heads, cfg.resolved_head_dim
+
+
+# --------------------------------------------------------------------------
+# cache construction
+# --------------------------------------------------------------------------
+
+def init_cache(model: LM, batch: int, max_seq: int, *, ring_local: bool = False,
+               abstract: bool = False, kv_repeat_to: int = 0,
+               quantize_kv: bool = False):
+    """Cache pytree: {group_name: {bK_k/bK_v/...: (count, B, S, KV, D)}}.
+
+    ``kv_repeat_to``: allocate the cache with KV heads replicated up to this
+    count (e.g. the TP width).  Doubles cache bytes for kv=8→16 but lets the
+    cache shard 16-way over `model` instead of replicating — per-device
+    reads drop by model_axis/repeat (the Llama-70B-style GQA/TP alignment).
+
+    ``quantize_kv``: store K/V as int8 with per-(position, head) bf16
+    abs-max scales — 2× less cache HBM residency and read traffic (the
+    dequant fuses into the attention matmul on TPU); error is bounded by
+    1/254 of the per-head dynamic range.
+    """
+    cfg = model.cfg
+    h, kv, d = _attn_dims(cfg)
+    if kv_repeat_to and kv_repeat_to > kv:
+        assert kv_repeat_to % kv == 0, (kv, kv_repeat_to)
+        kv = kv_repeat_to
+    zeros = (jax.ShapeDtypeStruct if abstract
+             else (lambda shp, dt: jnp.zeros(shp, dt)))
+    cache: dict = {}
+    for g in model.groups:
+        gc: dict = {}
+        for i, blk in enumerate(g.blocks):
+            pre = f"b{i}"
+            if blk.kind in ("attn_mlp", "attn_moe", "shared_attn"):
+                s_alloc = max_seq
+                if ring_local and blk.window and blk.window < max_seq:
+                    s_alloc = blk.window
+                kv_dt = jnp.int8 if quantize_kv else model.dtype
+                gc[f"{pre}_k"] = zeros((g.count, batch, s_alloc, kv, d),
+                                       kv_dt)
+                gc[f"{pre}_v"] = zeros((g.count, batch, s_alloc, kv, d),
+                                       kv_dt)
+                if quantize_kv:
+                    gc[f"{pre}_ksc"] = zeros(
+                        (g.count, batch, s_alloc, kv, 1), jnp.bfloat16)
+                    gc[f"{pre}_vsc"] = zeros(
+                        (g.count, batch, s_alloc, kv, 1), jnp.bfloat16)
+            if blk.kind in ("mamba", "shared_attn"):
+                ei = cfg.expand * cfg.d_model
+                nheads = ei // cfg.mamba_head_dim
+                gc[f"{pre}_state"] = zeros(
+                    (g.count, batch, nheads, cfg.ssm_state,
+                     cfg.mamba_head_dim), jnp.float32)
+                gc[f"{pre}_conv"] = zeros(
+                    (g.count, batch, M.CONV_K - 1,
+                     ei + 2 * cfg.ssm_state), model.dtype)
+            if blk.kind == "rwkv":
+                gc[f"{pre}_state"] = zeros(
+                    (g.count, batch, cfg.heads, cfg.resolved_head_dim,
+                     cfg.resolved_head_dim), jnp.float32)
+                gc[f"{pre}_last_tm"] = zeros((g.count, batch, cfg.d_model),
+                                             model.dtype)
+                gc[f"{pre}_last_cm"] = zeros((g.count, batch, cfg.d_model),
+                                             model.dtype)
+            if blk.cross:
+                gc[f"b{i}_xk"] = zeros((g.count, batch, max_seq, kv, d),
+                                       model.dtype)
+                gc[f"b{i}_xv"] = zeros((g.count, batch, max_seq, kv, d),
+                                       model.dtype)
+        cache[g.name] = gc
+    return cache
+
+
+# --------------------------------------------------------------------------
+# single-token decode
+# --------------------------------------------------------------------------
+
+def _decode_attn(p, x, ck, cv, index, cfg: ModelConfig, window: int,
+                 ring: bool, ksc=None, vsc=None):
+    """x: (B, 1, E).  Returns (out, new_ck, new_cv[, new_ksc, new_vsc])."""
+    h, kvh, d = _attn_dims(cfg)
+    q = A.project_q(p, x, h, d)
+    k, v = A.project_kv(p, x, kvh, d)
+    pos = jnp.full((x.shape[0], 1), index, jnp.int32)
+    if cfg.qk_norm and "q_norm" in p:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    q = rope(q, pos, theta=cfg.rope_theta)
+    k = rope(k, pos, theta=cfg.rope_theta)
+    kv_alloc = ck.shape[2]
+    if kv_alloc > kvh:                      # TP-aligned replicated KV cache
+        reps = kv_alloc // kvh
+        k = jnp.repeat(k, reps, axis=2)
+        v = jnp.repeat(v, reps, axis=2)
+    s_alloc = ck.shape[1]
+    slot = index % s_alloc if ring else index
+    if ksc is not None:
+        k, k_s = A.quantize_kv(k)
+        v, v_s = A.quantize_kv(v)
+        ksc = jax.lax.dynamic_update_slice_in_dim(ksc, k_s, slot, axis=1)
+        vsc = jax.lax.dynamic_update_slice_in_dim(vsc, v_s, slot, axis=1)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), slot,
+                                             axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), slot,
+                                             axis=1)
+    n_valid = jnp.minimum(index + 1, s_alloc)
+    valid = jnp.arange(s_alloc)[None, :] < n_valid
+    if window and window > 0 and not ring:
+        valid = valid & (jnp.arange(s_alloc)[None, :] > index - window)
+    out = A.decode_attend_gqa(q, ck, cv,
+                              jnp.broadcast_to(valid,
+                                               (x.shape[0], s_alloc)),
+                              k_scale=ksc, v_scale=vsc)
+    return A.out_project(p, out), ck, cv, ksc, vsc
+
+
+def _decode_block(cfg: ModelConfig, blk: Block, i: int, p, root, x, gc,
+                  index, ring_local: bool):
+    pre = f"b{i}"
+    upd = {}
+    if blk.kind in ("attn_mlp", "attn_moe"):
+        h = rmsnorm(x, p[f"{pre}_ln1"]["scale"])
+        ring = bool(ring_local and blk.window
+                    and gc[f"{pre}_k"].shape[1] == blk.window)
+        att, ck, cv, ksc, vsc = _decode_attn(
+            p[f"{pre}_attn"], h, gc[f"{pre}_k"], gc[f"{pre}_v"], index, cfg,
+            blk.window, ring, ksc=gc.get(f"{pre}_ksc"),
+            vsc=gc.get(f"{pre}_vsc"))
+        upd[f"{pre}_k"], upd[f"{pre}_v"] = ck, cv
+        if ksc is not None:
+            upd[f"{pre}_ksc"], upd[f"{pre}_vsc"] = ksc, vsc
+        x = x + att
+        if blk.cross:
+            hx = rmsnorm(x, p[f"{pre}_lnx"]["scale"])
+            hq = A.project_q(p[f"{pre}_xattn"], hx, cfg.heads,
+                             cfg.resolved_head_dim)
+            all_valid = jnp.ones((x.shape[0], gc[f"{pre}_xk"].shape[1]),
+                                 bool)
+            out = A.decode_attend_gqa(hq, gc[f"{pre}_xk"],
+                                      gc[f"{pre}_xv"], all_valid)
+            x = x + A.out_project(p[f"{pre}_xattn"], out)
+            upd[f"{pre}_xk"], upd[f"{pre}_xv"] = gc[f"{pre}_xk"], gc[f"{pre}_xv"]
+        h = rmsnorm(x, p[f"{pre}_ln2"]["scale"])
+        if blk.kind == "attn_moe":
+            m = X.moe_dense(p[f"{pre}_moe"], h, top_k=cfg.top_k,
+                            experts=cfg.experts, act=cfg.act)
+        else:
+            m = F.mlp_fused(p[f"{pre}_mlp"], h, gated=cfg.gated, act=cfg.act)
+        x = x + m
+    elif blk.kind == "rwkv":
+        h = rmsnorm(x, p[f"{pre}_ln1"]["scale"])
+        tm, last, st = R.rwkv_time_mix(
+            p[f"{pre}_tm"], h, heads=cfg.heads,
+            head_dim=cfg.resolved_head_dim,
+            last_x=gc[f"{pre}_last_tm"], state=gc[f"{pre}_state"])
+        upd[f"{pre}_last_tm"], upd[f"{pre}_state"] = last, st
+        x = x + tm
+        h = rmsnorm(x, p[f"{pre}_ln2"]["scale"])
+        cm, last_cm = R.rwkv_channel_mix(p[f"{pre}_cm"], h,
+                                         last_x=gc[f"{pre}_last_cm"])
+        upd[f"{pre}_last_cm"] = last_cm
+        x = x + cm
+    elif blk.kind in ("mamba", "shared_attn"):
+        h = rmsnorm(x, p[f"{pre}_ln1"]["scale"])
+        mcfg = {"embed": cfg.d_model, "state": cfg.ssm_state,
+                "expand": cfg.expand, "head_dim": cfg.mamba_head_dim}
+        mb, st, conv = M.mamba2_block(p[f"{pre}_mamba"], h, mcfg,
+                                      state=gc[f"{pre}_state"],
+                                      conv_state=gc[f"{pre}_conv"])
+        upd[f"{pre}_state"], upd[f"{pre}_conv"] = st, conv
+        x = x + mb
+        if blk.kind == "shared_attn":
+            sp = root["shared"]
+            h = rmsnorm(x, sp["ln1"]["scale"])
+            att, ck, cv, ksc, vsc = _decode_attn(
+                sp["attn"], h, gc[f"{pre}_k"], gc[f"{pre}_v"], index, cfg,
+                0, False, ksc=gc.get(f"{pre}_ksc"),
+                vsc=gc.get(f"{pre}_vsc"))
+            upd[f"{pre}_k"], upd[f"{pre}_v"] = ck, cv
+            if ksc is not None:
+                upd[f"{pre}_ksc"], upd[f"{pre}_vsc"] = ksc, vsc
+            x = x + att
+            h = rmsnorm(x, sp["ln2"]["scale"])
+            x = x + F.mlp_fused(sp["mlp"], h, gated=cfg.gated, act=cfg.act)
+    else:
+        raise ValueError(blk.kind)
+    return x, upd
+
+
+def decode_step(model: LM, params, cache, tokens, index, *,
+                ring_local: bool = False):
+    """tokens: (B, 1) int32; index: scalar int32 — position being decoded.
+    Returns (logits (B, 1, V), new_cache)."""
+    cfg = model.cfg
+    x = E.embed(params["embed"], tokens,
+                scale=cfg.embed_scale).astype(model.dtype)
+    new_cache = {}
+    for g in model.groups:
+        if g.name.startswith("enc"):
+            new_cache[g.name] = cache[g.name]
+            continue
+        gp = params[g.name]
+        gc = cache[g.name]
+
+        def body(carry, xs):
+            layer_p, layer_c = xs
+            h = carry
+            for i, blk in enumerate(g.blocks):
+                h, upd = _decode_block(cfg, blk, i, layer_p, params, h,
+                                       layer_c, index, ring_local)
+                layer_c = {**layer_c, **upd}
+            return h, layer_c
+
+        x, gcache = jax.lax.scan(body, x, (gp, gc))
+        new_cache[g.name] = gcache
+    x = rmsnorm(x, params["final_norm"]["scale"])
+    logits = E.mask_padded_logits(E.unembed(params["embed"], x), cfg.vocab)
+    return logits, new_cache
+
+
+def prefill(model: LM, params, tokens, max_seq: int, *,
+            frontend_embeds=None, ring_local: bool = False):
+    """Sequential prefill via decode_step (small-scale serving example; the
+    throughput prefill path is the planner-compiled forward)."""
+    b, s = tokens.shape
+    cache = init_cache(model, b, max_seq, ring_local=ring_local)
+    logits = None
+    for t in range(s):
+        logits, cache = decode_step(model, params, cache, tokens[:, t:t + 1],
+                                    jnp.int32(t), ring_local=ring_local)
+    return logits, cache

@@ -1,0 +1,421 @@
+"""Config-driven model zoo: every assigned architecture as (a) a logical
+plan for the AWESOME planner (training / prefill — the throughput path the
+paper's optimizer targets) and (b) a direct cached decode path (serving).
+
+Layer stacking: contiguous runs of identical *superblocks* become one
+``scan_layers`` node (the paper's Map) whose subplan holds the superblock's
+ops — e.g. gemma3's period-6 [5×local + 1×global] superblock, zamba2's
+[6×mamba + shared-attn] superblock, llama4's [dense, moe] pair.  Weight-tied
+(shared) blocks read from the root param scope via ``shared=True``.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..core.ir import Plan, TensorT, standard_catalog
+from ..layers import attention as A
+from ..layers import embedding as E
+from ..layers import mamba as M
+from ..layers import mlp as F
+from ..layers import moe as X
+from ..layers import rwkv as R
+from ..layers.common import KeyGen, rmsnorm, stack_params, stack_specs
+
+CATALOG = standard_catalog()
+
+
+# --------------------------------------------------------------------------
+# block descriptors and grouping
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Block:
+    kind: str              # attn_mlp | attn_moe | rwkv | mamba | shared_attn
+    window: int = 0        # 0 = global attention
+    causal: bool = True
+    cross: bool = False    # decoder block with cross-attention
+
+
+@dataclass(frozen=True)
+class Group:
+    """A scan group: ``count`` repetitions of the ``blocks`` superblock."""
+
+    name: str
+    count: int
+    blocks: tuple
+
+
+def layer_groups(cfg: ModelConfig) -> list:
+    f = cfg.family
+    if f in ("dense", "vlm"):
+        if cfg.local_ratio > 0:
+            period = cfg.local_ratio + 1
+            sup = tuple([Block("attn_mlp", window=cfg.window)] * cfg.local_ratio
+                        + [Block("attn_mlp")])
+            n_sup, rem = divmod(cfg.n_layers, period)
+            groups = [Group("layers_0", n_sup, sup)]
+            if rem:
+                groups.append(Group(
+                    "layers_1", rem, (Block("attn_mlp", window=cfg.window),)))
+            return groups
+        return [Group("layers_0", cfg.n_layers, (Block("attn_mlp"),))]
+    if f == "moe":
+        if cfg.moe_every > 1:
+            sup = tuple([Block("attn_mlp")] * (cfg.moe_every - 1)
+                        + [Block("attn_moe")])
+            n_sup, rem = divmod(cfg.n_layers, cfg.moe_every)
+            groups = [Group("layers_0", n_sup, sup)]
+            if rem:
+                groups.append(Group("layers_1", rem, (Block("attn_mlp"),)))
+            return groups
+        return [Group("layers_0", cfg.n_layers, (Block("attn_moe"),))]
+    if f == "rwkv":
+        return [Group("layers_0", cfg.n_layers, (Block("rwkv"),))]
+    if f == "hybrid":
+        period = cfg.shared_attn_period
+        sup = tuple([Block("mamba")] * (period - 1) + [Block("shared_attn")])
+        n_sup, rem = divmod(cfg.n_layers, period)
+        groups = [Group("layers_0", n_sup, sup)]
+        if rem:
+            groups.append(Group("layers_1", rem, (Block("mamba"),)))
+        return groups
+    if f == "encdec":
+        return [
+            Group("enc_0", cfg.enc_layers, (Block("attn_mlp", causal=False),)),
+            Group("dec_0", cfg.dec_layers,
+                  (Block("attn_mlp", cross=True),)),
+        ]
+    raise ValueError(f"unknown family {f!r}")
+
+
+# --------------------------------------------------------------------------
+# param init
+# --------------------------------------------------------------------------
+
+def _attn_cfg(cfg: ModelConfig) -> dict:
+    return {"embed": cfg.d_model, "heads": cfg.heads,
+            "kv_heads": cfg.kv_heads, "head_dim": cfg.resolved_head_dim,
+            "qk_norm": cfg.qk_norm}
+
+
+def _init_block(kg, cfg: ModelConfig, block: Block, i: int, dtype):
+    e = cfg.d_model
+    pp = f"b{i}"
+    p: dict = {}
+    s: dict = {}
+
+    def put(name, pr, sp):
+        p[f"{pp}_{name}"] = pr
+        s[f"{pp}_{name}"] = sp
+
+    if block.kind in ("attn_mlp", "attn_moe"):
+        put("ln1", {"scale": jnp.zeros((e,), dtype)}, {"scale": ("embed",)})
+        ap, asp = A.init_attention(kg, _attn_cfg(cfg), dtype)
+        put("attn", ap, asp)
+        if block.cross:
+            put("lnx", {"scale": jnp.zeros((e,), dtype)},
+                {"scale": ("embed",)})
+            xp, xsp = A.init_attention(kg, _attn_cfg(cfg), dtype)
+            put("xattn", xp, xsp)
+        put("ln2", {"scale": jnp.zeros((e,), dtype)}, {"scale": ("embed",)})
+        if block.kind == "attn_moe":
+            mp, msp = X.init_moe(
+                kg, {"embed": e, "ffn": cfg.d_ff, "experts": cfg.experts},
+                dtype)
+            put("moe", mp, msp)
+        else:
+            mp, msp = F.init_mlp(
+                kg, {"embed": e, "ffn": cfg.d_ff, "gated": cfg.gated}, dtype)
+            put("mlp", mp, msp)
+    elif block.kind == "rwkv":
+        put("ln1", {"scale": jnp.zeros((e,), dtype)}, {"scale": ("embed",)})
+        tp, tsp = R.init_rwkv_time_mix(
+            kg, {"embed": e, "heads": cfg.heads,
+                 "head_dim": cfg.resolved_head_dim}, dtype)
+        put("tm", tp, tsp)
+        put("ln2", {"scale": jnp.zeros((e,), dtype)}, {"scale": ("embed",)})
+        cp, csp = R.init_rwkv_channel_mix(
+            kg, {"embed": e, "ffn": cfg.d_ff}, dtype)
+        put("cm", cp, csp)
+    elif block.kind in ("mamba", "shared_attn"):
+        put("ln1", {"scale": jnp.zeros((e,), dtype)}, {"scale": ("embed",)})
+        mp, msp = M.init_mamba2(
+            kg, {"embed": e, "state": cfg.ssm_state, "expand": cfg.expand,
+                 "head_dim": cfg.mamba_head_dim}, dtype)
+        put("mamba", mp, msp)
+        # shared_attn reads attn/mlp weights from the *root* scope
+    else:
+        raise ValueError(block.kind)
+    return p, s
+
+
+def _init_shared(kg, cfg: ModelConfig, dtype):
+    e = cfg.d_model
+    ap, asp = A.init_attention(kg, _attn_cfg(cfg), dtype)
+    mp, msp = F.init_mlp(
+        kg, {"embed": e, "ffn": cfg.d_ff, "gated": cfg.gated}, dtype)
+    p = {"ln1": {"scale": jnp.zeros((e,), dtype)}, "attn": ap,
+         "ln2": {"scale": jnp.zeros((e,), dtype)}, "mlp": mp}
+    s = {"ln1": {"scale": ("embed",)}, "attn": asp,
+         "ln2": {"scale": ("embed",)}, "mlp": msp}
+    return p, s
+
+
+# --------------------------------------------------------------------------
+# the model
+# --------------------------------------------------------------------------
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.groups = layer_groups(cfg)
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.pdtype = jnp.dtype(cfg.param_dtype)
+
+    # -- params -------------------------------------------------------------
+    def init_params(self, key):
+        cfg = self.cfg
+        kg = KeyGen(key)
+        params: dict = {}
+        specs: dict = {}
+        ep, es = E.init_embedding(kg, cfg.padded_vocab, cfg.d_model,
+                                  self.pdtype, tied=cfg.tied_embeddings)
+        params["embed"] = ep
+        specs["embed"] = es
+        if cfg.family == "hybrid":
+            params["shared"], specs["shared"] = _init_shared(
+                kg, cfg, self.pdtype)
+        for g in self.groups:
+            layers_p, layers_s = [], None
+            for _ in range(g.count):
+                lp = {}
+                ls = {}
+                for i, blk in enumerate(g.blocks):
+                    bp, bs = _init_block(kg, cfg, blk, i, self.pdtype)
+                    lp.update(bp)
+                    ls.update(bs)
+                layers_p.append(lp)
+                layers_s = ls
+            params[g.name] = stack_params(layers_p)
+            specs[g.name] = stack_specs(layers_s)
+        params["final_norm"] = {"scale": jnp.zeros((cfg.d_model,),
+                                                   self.pdtype)}
+        specs["final_norm"] = {"scale": ("embed",)}
+        if cfg.family == "encdec":
+            params["enc_norm"] = {"scale": jnp.zeros((cfg.d_model,),
+                                                     self.pdtype)}
+            specs["enc_norm"] = {"scale": ("embed",)}
+        return params, specs
+
+    # -- logical plan ---------------------------------------------------------
+    def _block_nodes(self, sub: Plan, x: str, i: int, blk: Block) -> str:
+        cfg = self.cfg
+        shared = blk.kind == "shared_attn"
+        pp = "b" + str(i)
+
+        def norm(src, name, sh=False, root_pp=None):
+            return sub.add("rmsnorm", [src],
+                           {"pp": root_pp or (f"{pp}_{name}",),
+                            **({"shared": True} if sh else {})})
+
+        if blk.kind in ("attn_mlp", "attn_moe"):
+            h = norm(x, "ln1")
+            att = sub.add("attention", [h], {
+                "pp": (f"{pp}_attn",), **_attn_cfg(cfg),
+                "causal": blk.causal, "window": blk.window,
+                "rope_theta": cfg.rope_theta})
+            x = sub.add("residual_add", [x, att])
+            if blk.cross:
+                hx = norm(x, "lnx")
+                xa = sub.add("cross_attention", [hx, "memory"], {
+                    "pp": (f"{pp}_xattn",), **_attn_cfg(cfg)})
+                x = sub.add("residual_add", [x, xa])
+            h = norm(x, "ln2")
+            if blk.kind == "attn_moe":
+                m = sub.add("moe", [h], {
+                    "pp": (f"{pp}_moe",), "ffn": cfg.d_ff,
+                    "experts": cfg.experts, "top_k": cfg.top_k,
+                    "act": cfg.act, "embed": cfg.d_model,
+                    "pin_moe": cfg.pin_moe_layout})
+            else:
+                m = sub.add("mlp", [h], {
+                    "pp": (f"{pp}_mlp",), "ffn": cfg.d_ff,
+                    "gated": cfg.gated, "act": cfg.act,
+                    "embed": cfg.d_model})
+            return sub.add("residual_add", [x, m])
+        if blk.kind == "rwkv":
+            h = norm(x, "ln1")
+            tm = sub.add("wkv6", [h], {
+                "pp": (f"{pp}_tm",), "heads": cfg.heads,
+                "head_dim": cfg.resolved_head_dim})
+            x = sub.add("residual_add", [x, tm])
+            h = norm(x, "ln2")
+            cm = sub.add("rwkv_channel_mix", [h],
+                         {"pp": (f"{pp}_cm",), "ffn": cfg.d_ff})
+            return sub.add("residual_add", [x, cm])
+        if blk.kind in ("mamba", "shared_attn"):
+            h = norm(x, "ln1")
+            mb = sub.add("ssd", [h], {
+                "pp": (f"{pp}_mamba",), "heads":
+                    cfg.expand * cfg.d_model // cfg.mamba_head_dim,
+                "head_dim": cfg.mamba_head_dim, "state": cfg.ssm_state,
+                "expand": cfg.expand, "embed": cfg.d_model})
+            x = sub.add("residual_add", [x, mb])
+            if shared:
+                h = sub.add("rmsnorm", [x], {"pp": ("shared", "ln1"),
+                                             "shared": True})
+                att = sub.add("attention", [h], {
+                    "pp": ("shared", "attn"), "shared": True,
+                    **_attn_cfg(cfg), "causal": True, "window": 0,
+                    "rope_theta": cfg.rope_theta})
+                x = sub.add("residual_add", [x, att])
+                h = sub.add("rmsnorm", [x], {"pp": ("shared", "ln2"),
+                                             "shared": True})
+                m = sub.add("mlp", [h], {
+                    "pp": ("shared", "mlp"), "shared": True,
+                    "ffn": cfg.d_ff, "gated": cfg.gated, "act": cfg.act,
+                    "embed": cfg.d_model})
+                x = sub.add("residual_add", [x, m])
+            return x
+        raise ValueError(blk.kind)
+
+    def _group_subplan(self, g: Group, batch: int, seq: int,
+                       with_memory: bool = False) -> Plan:
+        cfg = self.cfg
+        sub = Plan(name=f"{cfg.name}_{g.name}")
+        sub.add_input("h", TensorT((batch, seq, cfg.d_model), cfg.dtype,
+                                   ("batch", "seq", "embed")))
+        if with_memory:
+            sub.add_input("memory", TensorT((batch, seq, cfg.d_model),
+                                            cfg.dtype,
+                                            ("batch", "seq", "embed")))
+        x = "h"
+        for i, blk in enumerate(g.blocks):
+            x = self._block_nodes(sub, x, i, blk)
+        sub.set_outputs(x)
+        return sub
+
+    def build_plan(self, batch: int, seq: int, mode: str = "train") -> Plan:
+        """The workload's logical plan (ADIL analysis block analogue)."""
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            return self._build_encdec_plan(batch, seq, mode)
+        plan = Plan(name=f"{cfg.name}-{mode}")
+        n_front = cfg.frontend_tokens if cfg.frontend != "none" else 0
+        s_text = seq - n_front
+        tokens = plan.add_input("tokens", TensorT((batch, s_text), "int32",
+                                                  ("batch", "seq")))
+        x = plan.add("embed", [tokens], {
+            "pp": ("embed",), "vocab": cfg.vocab, "embed": cfg.d_model,
+            "dtype": cfg.dtype, "scale": cfg.embed_scale})
+        if n_front:
+            front = plan.add_input(
+                "frontend_embeds",
+                TensorT((batch, n_front, cfg.d_model), cfg.dtype,
+                        ("batch", "seq", "embed")))
+            x = plan.add("concat_seq", [front, x], {"axis": 1})
+        for g in self.groups:
+            sub = self._group_subplan(g, batch, seq)
+            x = plan.add("scan_layers", [x], {
+                "n_layers": g.count, "pp": (g.name,),
+                "param_group": g.name, "remat": cfg.remat,
+                "unroll": cfg.scan_unroll}, subplan=sub)
+        x = plan.add("rmsnorm", [x], {"pp": ("final_norm",)})
+        logits = plan.add("unembed", [x], {"pp": ("embed",),
+                                           "vocab": cfg.padded_vocab,
+                                           "true_vocab": cfg.vocab})
+        if mode == "train":
+            labels = plan.add_input("labels", TensorT((batch, seq), "int32",
+                                                      ("batch", "seq")))
+            loss = plan.add("softmax_xent", [logits, labels])
+            out = plan.add("store", [loss])
+            plan.set_outputs(out)
+        else:
+            out = plan.add("store", [logits])
+            plan.set_outputs(out)
+        return plan
+
+    def _build_encdec_plan(self, batch: int, seq: int, mode: str) -> Plan:
+        cfg = self.cfg
+        plan = Plan(name=f"{cfg.name}-{mode}")
+        frames = plan.add_input(
+            "frontend_embeds", TensorT((batch, seq, cfg.d_model), cfg.dtype,
+                                       ("batch", "seq", "embed")))
+        enc_g, dec_g = self.groups
+        enc_sub = self._group_subplan(enc_g, batch, seq)
+        mem = plan.add("scan_layers", [frames], {
+            "n_layers": enc_g.count, "pp": (enc_g.name,),
+            "param_group": enc_g.name, "remat": cfg.remat}, subplan=enc_sub)
+        mem = plan.add("rmsnorm", [mem], {"pp": ("enc_norm",)})
+
+        tokens = plan.add_input("tokens", TensorT((batch, seq), "int32",
+                                                  ("batch", "seq")))
+        x = plan.add("embed", [tokens], {
+            "pp": ("embed",), "vocab": cfg.vocab, "embed": cfg.d_model,
+            "dtype": cfg.dtype, "scale": cfg.embed_scale})
+        dec_sub = self._group_subplan(dec_g, batch, seq, with_memory=True)
+        x = plan.add("scan_layers", [x, mem], {
+            "n_layers": dec_g.count, "pp": (dec_g.name,),
+            "param_group": dec_g.name, "remat": cfg.remat}, subplan=dec_sub)
+        x = plan.add("rmsnorm", [x], {"pp": ("final_norm",)})
+        logits = plan.add("unembed", [x], {"pp": ("embed",),
+                                           "vocab": cfg.padded_vocab,
+                                           "true_vocab": cfg.vocab})
+        if mode == "train":
+            labels = plan.add_input("labels", TensorT((batch, seq), "int32",
+                                                      ("batch", "seq")))
+            loss = plan.add("softmax_xent", [logits, labels])
+            out = plan.add("store", [loss])
+            plan.set_outputs(out)
+        else:
+            out = plan.add("store", [logits])
+            plan.set_outputs(out)
+        return plan
+
+    # -- input specs (ShapeDtypeStruct stand-ins; no allocation) -------------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "decode":
+            out = {"tokens": sds((b, 1), jnp.int32),
+                   "index": sds((), jnp.int32)}
+            return out
+        if cfg.family == "encdec":
+            out = {"frontend_embeds": sds((b, s, cfg.d_model), self.dtype),
+                   "tokens": sds((b, s), jnp.int32)}
+        elif cfg.frontend != "none":
+            out = {"frontend_embeds":
+                   sds((b, cfg.frontend_tokens, cfg.d_model), self.dtype),
+                   "tokens": sds((b, s - cfg.frontend_tokens), jnp.int32)}
+        else:
+            out = {"tokens": sds((b, s), jnp.int32)}
+        if shape.kind == "train":
+            out["labels"] = sds((b, s), jnp.int32)
+        return out
+
+    # -- params init at abstract level (for dry-run) --------------------------
+    def abstract_params(self):
+        return jax.eval_shape(lambda k: self.init_params(k)[0],
+                              jax.random.key(0))
+
+    def param_specs(self):
+        holder = {}
+
+        def f(k):
+            p, s = self.init_params(k)
+            holder["s"] = s          # pure-Python side channel
+            return p
+
+        jax.eval_shape(f, jax.random.key(0))
+        return holder["s"]
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

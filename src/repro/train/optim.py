@@ -1,0 +1,183 @@
+"""Optimizers (no external deps): AdamW, Adafactor, schedules, clipping.
+
+Adafactor (factored second moment) is the memory-feasible choice for the
+400B-class configs (llama4-maverick on 256 chips cannot hold AdamW's 2×fp32
+state); the config's ``optimizer`` field selects per-arch.
+
+Gradient compression: ``grad_dtype="bfloat16"`` casts params to bf16 for the
+forward/backward, so the DP/FSDP reduce-scatter moves half the bytes (the
+TPU-native form of gradient compression), while fp32 master params in the
+optimizer state preserve convergence (error is bounded by bf16 rounding; the
+master copy is the error-feedback accumulator).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# schedules
+# --------------------------------------------------------------------------
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * jnp.minimum(1.0, step / jnp.maximum(warmup, 1))
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+# --------------------------------------------------------------------------
+# gradient utilities
+# --------------------------------------------------------------------------
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+# --------------------------------------------------------------------------
+# AdamW
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AdamW:
+    """AdamW with optional fp32 **master copy** for low-precision live
+    params: with ``master=True`` the live params may be bf16 (so FSDP
+    all-gathers move half the bytes — real gradient/weight "compression" on
+    the wire) while the update happens against the fp32 master, which also
+    serves as the error-feedback accumulator."""
+
+    lr: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    master: bool = False
+
+    def init(self, params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        st = {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+              "count": jnp.zeros((), jnp.int32)}
+        if self.master:
+            st["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return st
+
+    def update(self, grads, state, params):
+        c = state["count"] + 1
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        lr = self.lr(c)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        base = state.get("master", params)
+
+        def upd(p32, p, m_, v_):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + self.eps)
+            step = step + self.weight_decay * p32.astype(jnp.float32)
+            return p32.astype(jnp.float32) - lr * step
+
+        new_base = jax.tree.map(upd, base, params, m, v)
+        new_params = jax.tree.map(lambda nb, p: nb.astype(p.dtype),
+                                  new_base, params)
+        out = {"m": m, "v": v, "count": c}
+        if self.master:
+            out["master"] = new_base
+        return new_params, out
+
+
+# --------------------------------------------------------------------------
+# Adafactor (factored second moment, no momentum)
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Adafactor:
+    lr: Callable
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    master: bool = False      # fp32 master copy for bf16 live params
+
+    def _factored(self, shape):
+        return len(shape) >= 2
+
+    def init(self, params):
+        def one(p):
+            slot = ({"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                     "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                     jnp.float32)}
+                    if self._factored(p.shape)
+                    else {"v": jnp.zeros_like(p, dtype=jnp.float32)})
+            if self.master:
+                slot["master"] = p.astype(jnp.float32)
+            return slot
+        return {"slots": jax.tree.map(one, params,
+                                      is_leaf=lambda x: hasattr(x, "shape")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(self, grads, state, params):
+        c = state["count"] + 1
+        rho = 1.0 - c.astype(jnp.float32) ** -self.decay
+        lr = self.lr(c)
+
+        def upd(p, g, slot):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + self.eps
+            if self._factored(p.shape):
+                vr = rho * slot["vr"] + (1 - rho) * jnp.mean(g2, axis=-1)
+                vc = rho * slot["vc"] + (1 - rho) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :] /
+                    jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None],
+                                self.eps))
+                new_slot = {"vr": vr, "vc": vc}
+            else:
+                v = rho * slot["v"] + (1 - rho) * g2
+                denom = jnp.sqrt(v)
+                new_slot = {"v": v}
+            step = g32 / jnp.maximum(denom, self.eps)
+            rms = jnp.sqrt(jnp.mean(jnp.square(step)) + 1e-12)
+            step = step / jnp.maximum(1.0, rms / self.clip_threshold)
+            base = slot.get("master", p).astype(jnp.float32)
+            if self.weight_decay:
+                step = step + self.weight_decay * base
+            new_base = base - lr * step
+            if self.master:
+                new_slot["master"] = new_base
+            return new_base.astype(p.dtype), new_slot
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["slots"])
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_slots = tdef.unflatten([o[1] for o in outs])
+        return new_params, {"slots": new_slots, "count": c}
+
+
+def make_optimizer(name: str, lr_fn: Callable, **kw):
+    if name == "adamw":
+        return AdamW(lr=lr_fn, **kw)
+    if name == "adafactor":
+        return Adafactor(lr=lr_fn, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

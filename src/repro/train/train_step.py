@@ -1,0 +1,109 @@
+"""Train-step builder: planned forward + grads + optimizer + microbatching.
+
+The buffering decision (§5.3) drives gradient accumulation: when streaming
+is on, the step scans over microbatches — the live activation set shrinks by
+the microbatch factor (the paper's −37 % heap result) and XLA can overlap
+each microbatch's reduce-scatter with the next one's backward (structural
+compute/comm overlap).
+
+Mixed precision: params live in fp32 ("master"), compute casts to the
+config dtype, and ``grad_dtype`` controls the reduction precision (bf16 =
+2× collective-byte compression, see optim.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..core.executor import PlannedFunction
+from .optim import clip_by_global_norm, make_optimizer
+
+
+@dataclass
+class TrainState:
+    step: jax.Array
+    params: Any
+    opt_state: Any
+
+    def tree_flatten(self):
+        return (self.step, self.params, self.opt_state), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    TrainState, TrainState.tree_flatten, TrainState.tree_unflatten)
+
+
+def make_train_step(fwd: PlannedFunction, optimizer, *,
+                    num_microbatches: int = 1,
+                    grad_dtype: str = "float32",
+                    clip_norm: float = 1.0,
+                    positions_fn: Optional[Callable] = None):
+    """Returns step(state, batch) -> (state, metrics).
+
+    ``batch`` is the dict of plan inputs; microbatching slices every leaf on
+    axis 0 into ``num_microbatches`` slices and accumulates grads.
+    """
+
+    def loss_fn(params, mb):
+        if grad_dtype != "float32":
+            cparams = jax.tree.map(
+                lambda p: p.astype(grad_dtype)
+                if p.dtype == jnp.float32 and p.ndim >= 2 else p, params)
+        else:
+            cparams = params
+        aux = {}
+        if positions_fn is not None:
+            aux["positions"] = positions_fn(mb)
+        loss = fwd(cparams, mb, aux)
+        return loss
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def step(state: TrainState, batch: dict):
+        if num_microbatches <= 1:
+            loss, grads = grad_fn(state.params, batch)
+        else:
+            def slice_mb(i):
+                return jax.tree.map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // num_microbatches),
+                        x.shape[0] // num_microbatches, axis=0), batch)
+
+            def body(carry, i):
+                acc, lsum = carry
+                l, g = grad_fn(state.params, slice_mb(i))
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, lsum + l), None
+
+            # accumulate in the gradient's own dtype (= the param dtype:
+            # grads of fp32 masters are fp32, of bf16 live params bf16)
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, p.dtype),
+                                 state.params)
+            (grads, lsum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)),
+                jnp.arange(num_microbatches))
+            grads = jax.tree.map(
+                lambda g: (g / num_microbatches).astype(g.dtype), grads)
+            loss = lsum / num_microbatches
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_opt = optimizer.update(grads, state.opt_state,
+                                               state.params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": state.step + 1}
+        return TrainState(state.step + 1, new_params, new_opt), metrics
+
+    return step
+
+
+def init_state(params, optimizer) -> TrainState:
+    return TrainState(jnp.zeros((), jnp.int32), params,
+                      optimizer.init(params))

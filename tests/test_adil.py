@@ -1,0 +1,140 @@
+"""ADIL-style analysis builder (paper §2) and the elastic re-mesh helper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adil import Analysis
+from repro.core.ir import (SystemCatalog, TensorT, ValidationError,
+                           standard_catalog)
+from repro.launch.elastic import largest_mesh_shape, min_model_axis
+from repro.layers import attention as A
+from repro.layers import mlp as F
+from repro.layers.common import KeyGen
+
+CAT = standard_catalog()
+SYS = SystemCatalog()
+
+
+def test_analysis_builds_validates_and_runs(rng):
+    b, s, e = 2, 16, 32
+    with Analysis("demo", CAT) as a:
+        toks = a.input("tokens", TensorT((b, s), "int32", ("batch", "seq")))
+        h = a.op("embed", toks, vocab=64, embed=e, pp=("embed",),
+                 dtype="float32")
+        h = a.op("attention", h, heads=4, kv_heads=2, head_dim=8, embed=e,
+                 pp=("attn",))
+        h = a.op("mlp", h, ffn=64, embed=e, pp=("mlp",))
+        a.store(h)
+    fn = a.compile(SYS)
+    kg = KeyGen(jax.random.key(0))
+    params = {
+        "embed": {"table": jax.random.normal(kg(), (64, e)) * 0.02},
+        "attn": A.init_attention(kg, {"embed": e, "heads": 4, "kv_heads": 2,
+                                      "head_dim": 8})[0],
+        "mlp": F.init_mlp(kg, {"embed": e, "ffn": 64})[0],
+    }
+    toks = jnp.asarray(rng.randint(0, 64, (b, s)), jnp.int32)
+    out = fn(params, {"tokens": toks})
+    assert out.shape == (b, s, e)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_analysis_eager_validation():
+    """Each assignment type-checks immediately (design decision 5)."""
+    a = Analysis("bad", CAT)
+    x = a.input("x", TensorT((2, 8), "float32", ("batch", "seq")))
+    with pytest.raises(ValidationError):
+        a.op("embed", x, vocab=64, embed=32)   # float ids rejected at once
+
+
+def test_analysis_requires_store():
+    with pytest.raises(ValidationError):
+        with Analysis("nostore", CAT) as a:
+            a.input("x", TensorT((2, 8), "int32", ("batch", "seq")))
+
+
+def test_analysis_var_types_inspectable():
+    a = Analysis("t", CAT)
+    x = a.input("x", TensorT((2, 8), "int32", ("batch", "seq")))
+    h = a.op("embed", x, vocab=64, embed=32, pp=("e",))
+    assert h.type.shape == (2, 8, 32)
+
+
+# --------------------------------------------------------------------------
+# elastic re-mesh policy
+# --------------------------------------------------------------------------
+
+def test_largest_mesh_shape_shrinks_gracefully():
+    assert largest_mesh_shape(512, prefer_model=16) == (32, 16)
+    assert largest_mesh_shape(256, prefer_model=16) == (16, 16)
+    # lost a host: 248 devices -> keep model=16, data=15
+    assert largest_mesh_shape(248, prefer_model=16) == (15, 16)
+    # tiny survivor set: model axis caps at the device count
+    assert largest_mesh_shape(8, prefer_model=16, min_model=4) == (1, 8)
+
+
+def test_min_model_axis_covers_params():
+    # 27B fp32 params with 3x optimizer overhead on 16GB chips
+    m = min_model_axis(27e9 * 4, hbm_bytes=16e9)
+    assert m >= 16 and (m & (m - 1)) == 0
+
+
+# --------------------------------------------------------------------------
+# textual ADIL front end (paper §2 grammar)
+# --------------------------------------------------------------------------
+
+SCRIPT = """
+USE demoDB;
+create analysis tiny as {
+  toks := input([2, 16], int32, dims=[batch, seq]);
+  h    := embed(toks, vocab=64, embed=32, pp=[embed], dtype=float32);
+  h2   := attention(h, heads=4, kv_heads=2, head_dim=8, embed=32, pp=[attn]);
+  out  := mlp(h2, ffn=64, embed=32, pp=[mlp]);
+  store(out);
+}
+"""
+
+
+def test_parse_adil_builds_equivalent_plan(rng):
+    from repro.core.adil_parser import parse_adil
+    a = parse_adil(SCRIPT, CAT)
+    fn = a.compile(SYS)
+    kg = KeyGen(jax.random.key(0))
+    params = {
+        "embed": {"table": jax.random.normal(kg(), (64, 32)) * 0.02},
+        "attn": A.init_attention(kg, {"embed": 32, "heads": 4, "kv_heads": 2,
+                                      "head_dim": 8})[0],
+        "mlp": F.init_mlp(kg, {"embed": 32, "ffn": 64})[0],
+    }
+    toks = jnp.asarray(rng.randint(0, 64, (2, 16)), jnp.int32)
+    out = fn(params, {"toks": toks})
+    assert out.shape == (2, 16, 32)
+
+    # equivalence with the embedded DSL: same plan structure
+    with Analysis("tiny", CAT) as b:
+        t = b.input("toks", TensorT((2, 16), "int32", ("batch", "seq")))
+        h = b.op("embed", t, vocab=64, embed=32, pp=("embed",),
+                 dtype="float32")
+        h = b.op("attention", h, heads=4, kv_heads=2, head_dim=8, embed=32,
+                 pp=("attn",))
+        h = b.op("mlp", h, ffn=64, embed=32, pp=("mlp",))
+        b.store(h)
+    ops_script = [n.op for n in a.plan.topo()]
+    ops_dsl = [n.op for n in b.plan.topo()]
+    assert ops_script == ops_dsl
+
+
+def test_parse_adil_rejects_bad_scripts():
+    from repro.core.adil_parser import parse_adil
+    with pytest.raises(ValidationError):
+        parse_adil("USE x; create analysis a as { store(y); }", CAT)
+    with pytest.raises(ValidationError):
+        parse_adil("USE x; create analysis a as { }", CAT)
+    with pytest.raises(ValidationError):      # type error caught at parse
+        parse_adil("""
+USE x; create analysis a as {
+  t := input([2, 4], float32, dims=[batch, seq]);
+  h := embed(t, vocab=8, embed=4, pp=[e]);
+  store(h);
+}""", CAT)

@@ -1,0 +1,126 @@
+"""Checkpointing: atomic save/restore roundtrip, resume determinism,
+retention, reshard-on-restore, and the failure-injection supervisor."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.executor import plan_and_compile
+from repro.core.ir import SystemCatalog
+from repro.data.pipeline import DataConfig, synth_batch
+from repro.models import build_model
+from repro.models.lm import CATALOG
+from repro.train.checkpoint import (checkpoint_step, latest_checkpoint,
+                                    restore_checkpoint, save_checkpoint)
+from repro.train.fault_tolerance import (FailureInjector, Watchdog,
+                                         run_resumable)
+from repro.train.optim import cosine_schedule, make_optimizer
+from repro.train.train_step import init_state, make_train_step
+
+SYS = SystemCatalog()
+
+
+def _setup(arch="qwen3-0.6b"):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    model = build_model(cfg)
+    b, s = 2, 8
+    plan = model.build_plan(b, s, mode="train")
+    fwd = plan_and_compile(plan, CATALOG, SYS)
+    opt = make_optimizer("adamw", cosine_schedule(1e-3, 2, 100))
+    step = jax.jit(make_train_step(fwd, opt, grad_dtype="float32"))
+    params, _ = model.init_params(jax.random.key(0))
+    state = init_state(params, opt)
+    dc = DataConfig(vocab=cfg.vocab, seq_len=s, global_batch=b)
+    return state, step, dc
+
+
+def _run(state, step, dc, start, n):
+    for i in range(start, start + n):
+        batch = {k: jnp.asarray(v) for k, v in synth_batch(dc, i).items()}
+        state, m = step(state, batch)
+    return state, m
+
+
+def test_roundtrip_identical(tmp_path):
+    state, step, dc = _setup()
+    state, _ = _run(state, step, dc, 0, 3)
+    path = save_checkpoint(str(tmp_path), 3, state)
+    restored = restore_checkpoint(path, jax.eval_shape(lambda: state))
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_resume_is_deterministic(tmp_path):
+    """6 straight steps == 3 steps + checkpoint/restore + 3 steps."""
+    s1, step, dc = _setup()
+    s1, m1 = _run(s1, step, dc, 0, 6)
+
+    s2, _, _ = _setup()
+    s2, _ = _run(s2, step, dc, 0, 3)
+    path = save_checkpoint(str(tmp_path), 3, s2)
+    s3 = restore_checkpoint(path, jax.eval_shape(lambda: s2))
+    s3, m3 = _run(s3, step, dc, 3, 3)
+    np.testing.assert_allclose(float(m1["loss"]), float(m3["loss"]),
+                               rtol=1e-6)
+
+
+def test_retention_keeps_last_n(tmp_path):
+    state, step, dc = _setup()
+    for k in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), k, state, keep=2)
+    names = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert names == ["step_0000000004", "step_0000000005"]
+    assert checkpoint_step(latest_checkpoint(str(tmp_path))) == 5
+
+
+def test_restore_casts_dtype(tmp_path):
+    state, step, dc = _setup()
+    path = save_checkpoint(str(tmp_path), 1, state)
+    # template with bf16 params -> restore casts
+    tpl = jax.eval_shape(lambda: state)
+    tpl_cast = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, jnp.bfloat16)
+        if l.dtype == jnp.float32 and len(l.shape) >= 2 else l, tpl)
+    restored = restore_checkpoint(path, tpl_cast)
+    leaves = jax.tree.leaves(restored)
+    assert any(l.dtype == jnp.bfloat16 for l in leaves)
+
+
+def test_supervisor_survives_injected_failures(tmp_path):
+    """The node-failure drill: loop crashes at steps 4 and 9; the supervisor
+    restarts from checkpoints and completes exactly 12 steps."""
+    inj = FailureInjector(fail_at=(4, 9))
+    state0, step, dc = _setup()
+    ckpt = str(tmp_path)
+
+    def make_loop(start):
+        latest = latest_checkpoint(ckpt)
+        if latest:
+            state = restore_checkpoint(latest,
+                                       jax.eval_shape(lambda: state0))
+        else:
+            state = state0
+        s = state
+        for i in range(start, 12):
+            inj.maybe_fail(i)
+            batch = {k: jnp.asarray(v)
+                     for k, v in synth_batch(dc, i).items()}
+            s, m = step(s, batch)
+            if (i + 1) % 2 == 0:
+                save_checkpoint(ckpt, i + 1, s)
+        return 12, {"loss": float(m["loss"])}
+
+    out = run_resumable(12, make_loop=make_loop, ckpt_dir=ckpt)
+    assert out["final_step"] == 12
+    assert out["restarts"] == 2
+
+
+def test_watchdog_flags_stragglers():
+    wd = Watchdog(straggler_factor=2.0)
+    for i in range(10):
+        assert not wd.observe(i, 1.0)
+    assert wd.observe(10, 5.0)           # 5x median
+    assert wd.events and wd.events[0]["step"] == 10

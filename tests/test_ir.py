@@ -1,0 +1,194 @@
+"""IR, validation, inference, and rewrite-rule tests (paper §2–§4)."""
+import pytest
+
+from repro.core.ir import (ListT, Plan, ScalarT, TensorT, TupleT,
+                           ValidationError, infer_types, standard_catalog)
+from repro.core.rewrite import (decompose, eliminate_redundancy, fuse_qkv,
+                                fuse_scans, rewrite)
+
+CAT = standard_catalog()
+
+
+def _attn_attrs(**kw):
+    a = {"heads": 4, "kv_heads": 2, "head_dim": 8, "embed": 32,
+         "pp": ("attn",)}
+    a.update(kw)
+    return a
+
+
+def small_plan():
+    p = Plan("t")
+    p.add_input("tokens", TensorT((2, 8), "int32", ("batch", "seq")))
+    e = p.add("embed", ["tokens"], {"vocab": 64, "embed": 32,
+                                    "pp": ("embed",)})
+    a = p.add("attention", [e], _attn_attrs())
+    m = p.add("mlp", [a], {"ffn": 64, "embed": 32, "pp": ("mlp",)})
+    p.set_outputs(m)
+    return p
+
+
+# --------------------------------------------------------------------------
+# typing / validation
+# --------------------------------------------------------------------------
+
+def test_infer_types_end_to_end():
+    p = infer_types(small_plan(), CAT)
+    out = p.type_of(p.outputs[0])
+    assert isinstance(out, TensorT)
+    assert out.shape == (2, 8, 32)
+    assert out.dims == ("batch", "seq", "embed")
+
+
+def test_embed_rejects_float_ids():
+    p = Plan("t")
+    p.add_input("x", TensorT((2, 8), "float32", ("batch", "seq")))
+    p.add("embed", ["x"], {"vocab": 64, "embed": 32})
+    with pytest.raises(ValidationError):
+        infer_types(p, CAT)
+
+
+def test_unknown_op_rejected():
+    p = Plan("t")
+    p.add_input("x", TensorT((2, 8), "int32", ("batch", "seq")))
+    p.add("not_an_op", ["x"])
+    with pytest.raises(ValidationError):
+        infer_types(p, CAT)
+
+
+def test_unknown_input_rejected():
+    p = Plan("t")
+    with pytest.raises(ValidationError):
+        p.add("rmsnorm", ["missing"])
+
+
+def test_residual_shape_mismatch_rejected():
+    p = Plan("t")
+    p.add_input("a", TensorT((2, 8, 32), "float32",
+                             ("batch", "seq", "embed")))
+    p.add_input("b", TensorT((2, 8, 16), "float32",
+                             ("batch", "seq", "embed")))
+    p.add("residual_add", ["a", "b"])
+    with pytest.raises(ValidationError):
+        infer_types(p, CAT)
+
+
+def test_xent_validates_label_shape():
+    p = Plan("t")
+    p.add_input("logits", TensorT((2, 8, 64), "float32",
+                                  ("batch", "seq", "vocab")))
+    p.add_input("labels", TensorT((2, 9), "int32", ("batch", "seq")))
+    p.add("softmax_xent", ["logits", "labels"])
+    with pytest.raises(ValidationError):
+        infer_types(p, CAT)
+
+
+def test_higher_order_map_types():
+    p = Plan("t")
+    p.add_input("xs", ListT(TensorT((4, 4), "float32"), 3))
+    sub = Plan("s")
+    sub.add_input("x", TensorT((4, 4), "float32"))
+    n = sub.add("rmsnorm", ["x"], {"pp": ("n",)})
+    sub.set_outputs(n)
+    m = p.add("map", ["xs"], {}, subplan=sub)
+    p.set_outputs(m)
+    infer_types(p, CAT)
+    out = p.type_of(m)
+    assert isinstance(out, ListT) and out.size == 3
+
+
+# --------------------------------------------------------------------------
+# rewrites (§4.2)
+# --------------------------------------------------------------------------
+
+def test_decompose_attention_and_mlp():
+    p = infer_types(small_plan(), CAT)
+    d = decompose(p, CAT)
+    ops = [n.op for n in d.topo()]
+    assert "attention" not in ops and "mlp" not in ops
+    for needed in ("q_proj", "k_proj", "v_proj", "sdpa", "out_proj",
+                   "ffn_up", "ffn_gate", "ffn_glu", "ffn_down"):
+        assert needed in ops, needed
+    # pp attrs survive decomposition
+    qn = next(n for n in d.topo() if n.op == "q_proj")
+    assert qn.attrs["pp"] == ("attn",)
+
+
+def test_cse_merges_identical_subtrees():
+    p = Plan("t")
+    p.add_input("x", TensorT((2, 8, 32), "float32",
+                             ("batch", "seq", "embed")))
+    a = p.add("rmsnorm", ["x"], {"pp": ("n",)})
+    b = p.add("rmsnorm", ["x"], {"pp": ("n",)})       # identical
+    c = p.add("residual_add", [a, b])
+    p.set_outputs(c)
+    infer_types(p, CAT)
+    out = eliminate_redundancy(p, CAT)
+    assert len([n for n in out.topo() if n.op == "rmsnorm"]) == 1
+
+
+def test_cse_respects_differing_attrs():
+    p = Plan("t")
+    p.add_input("x", TensorT((2, 8, 32), "float32",
+                             ("batch", "seq", "embed")))
+    a = p.add("rmsnorm", ["x"], {"pp": ("n1",)})
+    b = p.add("rmsnorm", ["x"], {"pp": ("n2",)})      # different params
+    c = p.add("residual_add", [a, b])
+    p.set_outputs(c)
+    infer_types(p, CAT)
+    out = eliminate_redundancy(p, CAT)
+    assert len([n for n in out.topo() if n.op == "rmsnorm"]) == 2
+
+
+def test_qkv_fusion_fires_after_decompose():
+    p = infer_types(small_plan(), CAT)
+    d = decompose(p, CAT)
+    f = fuse_qkv(d, CAT)
+    ops = [n.op for n in f.topo()]
+    assert "qkv_proj" in ops
+    assert "q_proj" not in ops and "pack_qkv" not in ops
+
+
+def test_scan_fusion_merges_same_group():
+    p = Plan("t")
+    p.add_input("h", TensorT((2, 8, 32), "float32",
+                             ("batch", "seq", "embed")))
+    sub = Plan("s")
+    sub.add_input("x", TensorT((2, 8, 32), "float32",
+                               ("batch", "seq", "embed")))
+    n = sub.add("rmsnorm", ["x"], {"pp": ("n",)})
+    sub.set_outputs(n)
+    s1 = p.add("scan_layers", ["h"], {"n_layers": 4, "param_group": "g",
+                                      "pp": ("g",)}, subplan=sub)
+    s2 = p.add("scan_layers", [s1], {"n_layers": 4, "param_group": "g",
+                                     "pp": ("g",)}, subplan=sub.copy())
+    p.set_outputs(s2)
+    infer_types(p, CAT)
+    out = fuse_scans(p, CAT)
+    scans = [n for n in out.topo() if n.op == "scan_layers"]
+    assert len(scans) == 1
+    assert len(scans[0].subplan) == 2     # concatenated subplans
+
+
+def test_scan_fusion_skips_different_groups():
+    p = Plan("t")
+    p.add_input("h", TensorT((2, 8, 32), "float32",
+                             ("batch", "seq", "embed")))
+    sub = Plan("s")
+    sub.add_input("x", TensorT((2, 8, 32), "float32",
+                               ("batch", "seq", "embed")))
+    n = sub.add("rmsnorm", ["x"], {"pp": ("n",)})
+    sub.set_outputs(n)
+    s1 = p.add("scan_layers", ["h"], {"n_layers": 4, "param_group": "a",
+                                      "pp": ("a",)}, subplan=sub)
+    s2 = p.add("scan_layers", [s1], {"n_layers": 4, "param_group": "b",
+                                     "pp": ("b",)}, subplan=sub.copy())
+    p.set_outputs(s2)
+    infer_types(p, CAT)
+    out = fuse_scans(p, CAT)
+    assert len([n for n in out.topo() if n.op == "scan_layers"]) == 2
+
+
+def test_rewrite_pipeline_revalidates():
+    p = small_plan()
+    out = rewrite(p, CAT)
+    assert out.outputs[0] in out.types

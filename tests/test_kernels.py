@@ -1,0 +1,221 @@
+"""Per-kernel correctness: Pallas (interpret=True) vs the pure-jnp oracle,
+swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import mha_reference
+from repro.kernels.moe_gmm.ops import grouped_matmul
+from repro.kernels.moe_gmm.ref import gmm_reference
+from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ref import ssd_reference
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_reference
+
+
+def _randn(rng, shape, dtype):
+    return jnp.asarray(rng.randn(*shape), dtype)
+
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kv,d", [
+    (1, 16, 2, 2, 8),       # MHA tiny
+    (2, 48, 4, 2, 16),      # GQA, non-multiple-of-block seq
+    (1, 128, 8, 1, 32),     # MQA, block-aligned
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (False, 0), (True, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(rng, b, s, h, kv, d, causal, window,
+                                     dtype):
+    q = _randn(rng, (b, s, h, d), dtype)
+    k = _randn(rng, (b, s, kv, d), dtype)
+    v = _randn(rng, (b, s, kv, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    ref = mha_reference(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=8 * TOL[dtype], rtol=8 * TOL[dtype])
+
+
+def test_flash_attention_decode_shape(rng):
+    """q_len=1 against a longer kv (the serve_step hot path)."""
+    q = _randn(rng, (2, 1, 4, 16), jnp.float32)
+    k = _randn(rng, (2, 40, 2, 16), jnp.float32)
+    v = _randn(rng, (2, 40, 2, 16), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = mha_reference(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# wkv6
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h,d", [(1, 8, 2, 8), (2, 24, 3, 8),
+                                     (1, 33, 2, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_wkv6_matches_ref(rng, b, t, h, d, dtype):
+    r = _randn(rng, (b, t, h, d), dtype)
+    k = _randn(rng, (b, t, h, d), dtype)
+    v = _randn(rng, (b, t, h, d), dtype)
+    w = jnp.asarray(rng.uniform(0.4, 0.99, (b, t, h, d)), dtype)
+    u = _randn(rng, (h, d), dtype)
+    out = wkv6(r, k, v, w, u, chunk=8, interpret=True)
+    ref, _ = wkv6_reference(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_wkv6_state_continuity(rng):
+    """Running two halves with carried state == running the whole."""
+    b, t, h, d = 1, 16, 2, 8
+    r = _randn(rng, (b, t, h, d), jnp.float32)
+    k = _randn(rng, (b, t, h, d), jnp.float32)
+    v = _randn(rng, (b, t, h, d), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.4, 0.99, (b, t, h, d)), jnp.float32)
+    u = _randn(rng, (h, d), jnp.float32)
+    full, _ = wkv6_reference(r, k, v, w, u)
+    y1, s1 = wkv6_reference(r[:, :8], k[:, :8], v[:, :8], w[:, :8], u)
+    y2, _ = wkv6_reference(r[:, 8:], k[:, 8:], v[:, 8:], w[:, 8:], u,
+                           initial_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(full), atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# ssd
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,t,h,p,n", [(1, 8, 2, 8, 4), (2, 24, 3, 8, 4),
+                                       (1, 40, 2, 16, 8)])
+def test_ssd_matches_ref(rng, b, t, h, p, n):
+    x = _randn(rng, (b, t, h, p), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (b, t, h)), jnp.float32)
+    bb = _randn(rng, (b, t, h, n), jnp.float32)
+    cc = _randn(rng, (b, t, h, n), jnp.float32)
+    out = ssd(x, a, bb, cc, chunk=8, interpret=True)
+    ref, _ = ssd_reference(x, a, bb, cc)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_ssd_state_continuity(rng):
+    b, t, h, p, n = 1, 16, 2, 8, 4
+    x = _randn(rng, (b, t, h, p), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (b, t, h)), jnp.float32)
+    bb = _randn(rng, (b, t, h, n), jnp.float32)
+    cc = _randn(rng, (b, t, h, n), jnp.float32)
+    full, sf = ssd_reference(x, a, bb, cc)
+    y1, s1 = ssd_reference(x[:, :8], a[:, :8], bb[:, :8], cc[:, :8])
+    y2, s2 = ssd_reference(x[:, 8:], a[:, 8:], bb[:, 8:], cc[:, 8:],
+                           initial_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(full), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(sf), atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# grouped matmul
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,c,d,f", [(2, 8, 8, 8), (4, 20, 12, 28),
+                                     (3, 128, 64, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gmm_matches_ref(rng, e, c, d, f, dtype):
+    x = _randn(rng, (e, c, d), dtype)
+    w = _randn(rng, (e, d, f), dtype)
+    out = grouped_matmul(x, w, block=8, interpret=True)
+    ref = gmm_reference(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=8 * TOL[dtype], rtol=8 * TOL[dtype])
+
+
+# --------------------------------------------------------------------------
+# gradients through the kernels (custom_vjp == oracle VJP)
+# --------------------------------------------------------------------------
+
+def test_flash_attention_grad_matches_ref(rng):
+    b, s, h, kv, d = 1, 16, 2, 1, 8
+    q = _randn(rng, (b, s, h, d), jnp.float32)
+    k = _randn(rng, (b, s, kv, d), jnp.float32)
+    v = _randn(rng, (b, s, kv, d), jnp.float32)
+
+    def f_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, causal=True,
+                                       interpret=True) ** 2)
+
+    def f_ref(q, k, v):
+        return jnp.sum(mha_reference(q, k, v, causal=True) ** 2)
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   atol=5e-5, rtol=5e-5)
+
+
+def test_wkv6_grad_finite(rng):
+    b, t, h, d = 1, 8, 2, 8
+    r = _randn(rng, (b, t, h, d), jnp.float32)
+    k = _randn(rng, (b, t, h, d), jnp.float32)
+    v = _randn(rng, (b, t, h, d), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.4, 0.99, (b, t, h, d)), jnp.float32)
+    u = _randn(rng, (h, d), jnp.float32)
+    g = jax.grad(lambda *a: jnp.sum(wkv6(*a, chunk=8, interpret=True) ** 2),
+                 argnums=(0, 1, 2, 3, 4))(r, k, v, w, u)
+    for x in g:
+        assert bool(jnp.all(jnp.isfinite(x)))
+        assert float(jnp.sum(jnp.abs(x))) > 0
+
+
+def test_gmm_grad_matches_einsum(rng):
+    x = _randn(rng, (2, 8, 8), jnp.float32)
+    w = _randn(rng, (2, 8, 8), jnp.float32)
+    gk = jax.grad(lambda x, w: jnp.sum(
+        grouped_matmul(x, w, block=8, interpret=True) ** 2),
+        argnums=(0, 1))(x, w)
+    gr = jax.grad(lambda x, w: jnp.sum(gmm_reference(x, w) ** 2),
+                  argnums=(0, 1))(x, w)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# chunked jnp engines vs the sequential oracles
+# --------------------------------------------------------------------------
+
+def test_wkv6_chunked_matches_ref(rng):
+    from repro.kernels.wkv6.ref import wkv6_chunked
+    b, t, h, d = 2, 50, 3, 8
+    r = _randn(rng, (b, t, h, d), jnp.float32)
+    k = _randn(rng, (b, t, h, d), jnp.float32)
+    v = _randn(rng, (b, t, h, d), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.4, 0.999, (b, t, h, d)), jnp.float32)
+    u = _randn(rng, (h, d), jnp.float32)
+    y1, s1 = wkv6_reference(r, k, v, w, u)
+    y2, s2 = wkv6_chunked(r, k, v, w, u, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4)
+
+
+def test_ssd_chunked_matches_ref(rng):
+    from repro.kernels.ssd.ref import ssd_chunked
+    b, t, h, p, n = 2, 50, 3, 8, 4
+    x = _randn(rng, (b, t, h, p), jnp.float32)
+    a = jnp.asarray(rng.uniform(0.5, 0.99, (b, t, h)), jnp.float32)
+    bb = _randn(rng, (b, t, h, n), jnp.float32)
+    cc = _randn(rng, (b, t, h, n), jnp.float32)
+    y1, s1 = ssd_reference(x, a, bb, cc)
+    y2, s2 = ssd_chunked(x, a, bb, cc, chunk=16)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4)

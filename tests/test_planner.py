@@ -1,0 +1,203 @@
+"""Physical planning, §5.2 partition/merge insertion, §5.3 buffering chains,
+§6 cost model."""
+import numpy as np
+import pytest
+
+from repro.core.buffering import partition_chains, plan_buffering
+from repro.core.cost_model import (CostModel, op_cost, raw_features,
+                                   select_candidates)
+from repro.core.ir import (Plan, SystemCatalog, TensorT, infer_types,
+                           standard_catalog)
+from repro.core.parallel import add_data_parallelism, partition_stats
+from repro.core.physical import (DEFAULT_PATTERNS, PHYS_OPS, PhysPlan,
+                                 generate_candidates, materialize_choice)
+from repro.core.rewrite import rewrite
+
+CAT = standard_catalog()
+SYS = SystemCatalog()
+
+
+def attn_plan(window=0):
+    p = Plan("ap")
+    p.add_input("h", TensorT((2, 32, 32), "float32",
+                             ("batch", "seq", "embed")))
+    a = p.add("attention", ["h"], {"heads": 4, "kv_heads": 2, "head_dim": 8,
+                                   "embed": 32, "window": window,
+                                   "pp": ("attn",)})
+    p.set_outputs(a)
+    return rewrite(p, CAT)
+
+
+# --------------------------------------------------------------------------
+# Alg. 2: candidate generation
+# --------------------------------------------------------------------------
+
+def test_single_candidate_direct_replacement():
+    """With pallas off and no window, fused attention has one candidate →
+    substituted in place (Alg. 2 lines 6–7), no virtual node."""
+    pp = generate_candidates(attn_plan(), allow_pallas=False)
+    assert not pp.pm
+    assert any(n.impl == "sdpa_xla" for n in pp.topo())
+
+
+def test_multi_candidate_virtual_node():
+    pp = generate_candidates(attn_plan(window=8), allow_pallas=True)
+    assert len(pp.pm) == 1
+    (vid, cands), = pp.pm.items()
+    names = {c.name for c in cands}
+    assert names == {"attn_xla", "attn_flash", "attn_banded"}
+
+
+def test_largest_pattern_matches_first():
+    """After fusion the 3-op chain matches, not the single-op sdpa."""
+    pp = generate_candidates(attn_plan(window=8), allow_pallas=True)
+    (vid, cands), = pp.pm.items()
+    assert pp.nodes[vid].attrs["pattern"] == "fused_attention"
+
+
+def test_materialize_choice_roundtrip():
+    pp = generate_candidates(attn_plan(window=8), allow_pallas=True)
+    choices, report = select_candidates(pp, SYS, allow_pallas=True)
+    concrete = materialize_choice(pp, choices)
+    assert not any(n.virtual for n in concrete.topo())
+    assert len(report) == 1
+
+
+# --------------------------------------------------------------------------
+# §5.2 partition / merge insertion
+# --------------------------------------------------------------------------
+
+def test_partition_inserted_for_pr_op():
+    pp = generate_candidates(attn_plan(), allow_pallas=False)
+    out = add_data_parallelism(pp)
+    stats = partition_stats(out)
+    assert stats["partition"] >= 1
+    assert stats["merge"] == 0          # no ST consumer in this plan
+
+
+def test_merge_inserted_before_st_op():
+    p = PhysPlan("t")
+    p.inputs["x"] = TensorT((4, 8), "float32", ("batch", "seq"))
+    a = p.add("rmsnorm_xla", ["x"], {})          # PR -> partitions x
+    b = p.add("const", [a], {})                  # ST consumer -> merge
+    p.outputs = (b,)
+    out = add_data_parallelism(p)
+    impls = [n.impl for n in out.topo()]
+    assert "partition" in impls and "merge" in impls
+
+
+def test_elementwise_join_never_merges():
+    """The cap_all extension: residual_add with two partitioned inputs must
+    not all-gather either side (the Iter-0b bug)."""
+    p = PhysPlan("t")
+    p.inputs["x"] = TensorT((4, 8, 16), "float32",
+                            ("batch", "seq", "embed"))
+    a = p.add("rmsnorm_xla", ["x"], {})
+    b = p.add("mlp_fused_xla", [a], {"ffn": 32, "embed": 16})
+    c = p.add("residual_add_xla", [a, b], {})
+    p.outputs = (c,)
+    out = add_data_parallelism(p)
+    assert partition_stats(out)["merge"] == 0
+
+
+# --------------------------------------------------------------------------
+# §5.3 buffering chains (Appendix B rules)
+# --------------------------------------------------------------------------
+
+def test_chain_cut_on_blocking_op():
+    p = PhysPlan("t")
+    p.inputs["x"] = TensorT((4, 8), "float32", ("batch", "seq"))
+    a = p.add("rmsnorm_xla", ["x"], {})          # SS
+    b = p.add("scan_layers_xla", [a], {})        # B: cuts both sides
+    c = p.add("rmsnorm_xla", [b], {})            # SS
+    p.outputs = (c,)
+    chains = partition_chains(p)
+    assert len(chains) == 3
+
+
+def test_chain_cut_on_fanout():
+    p = PhysPlan("t")
+    p.inputs["x"] = TensorT((4, 8), "float32", ("batch", "seq"))
+    a = p.add("rmsnorm_xla", ["x"], {})
+    b = p.add("rmsnorm_xla", [a], {})
+    c = p.add("residual_add_xla", [a, b], {})    # a has 2 consumers
+    p.outputs = (c,)
+    chains = partition_chains(p)
+    # rule 3 cuts both outgoing edges of a; rule 2 cuts (b, c)'s non-capOn
+    assert all(len(ch) == 1 for ch in chains)
+
+
+def test_streaming_chain_stays_whole():
+    p = PhysPlan("t")
+    p.inputs["x"] = TensorT((4, 8), "float32", ("batch", "seq"))
+    a = p.add("rmsnorm_xla", ["x"], {})
+    b = p.add("rmsnorm_xla", [a], {})
+    c = p.add("rmsnorm_xla", [b], {})
+    p.outputs = (c,)
+    chains = partition_chains(p)
+    assert sorted(len(ch) for ch in chains) == [3]
+
+
+def test_plan_buffering_picks_divisor():
+    p = PhysPlan("t")
+    p.inputs["x"] = TensorT((24, 8), "float32", ("batch", "seq"))
+    a = p.add("rmsnorm_xla", ["x"], {})
+    p.outputs = (a,)
+    dec = plan_buffering(p, enabled=True, global_batch=24)
+    assert dec.enabled and 24 % dec.num_microbatches == 0
+    dec2 = plan_buffering(p, enabled=False, global_batch=24)
+    assert not dec2.enabled and dec2.num_microbatches == 1
+
+
+# --------------------------------------------------------------------------
+# §6 cost model
+# --------------------------------------------------------------------------
+
+def _feat(impl, toks=4096, width=512, **attrs):
+    t = TensorT((1, toks, width), "bfloat16", ("batch", "seq", "embed"))
+    return raw_features(impl, [t], attrs, SYS)
+
+
+def test_analytic_costs_order_attention_candidates():
+    """Banded must beat full SDPA at long seq with a small window; flash must
+    beat full SDPA on memory."""
+    m = CostModel()
+    attrs = {"heads": 8, "kv_heads": 8, "head_dim": 64, "window": 256}
+    t = TensorT((1, 8192, 512), "bfloat16", ("batch", "seq", "embed"))
+    full = m.op_seconds("sdpa_xla", [t], attrs, SYS)
+    band = m.op_seconds("sdpa_banded_xla", [t], attrs, SYS)
+    flash = m.op_seconds("attn_flash_pallas", [t], attrs, SYS)
+    assert band < full
+    assert flash < full
+
+
+def test_fit_recovers_polynomial():
+    """Eq. 2 fit: synthetic quadratic-in-features cost is recovered."""
+    rng = np.random.RandomState(0)
+    samples = []
+    for _ in range(200):
+        f = {k: float(v) for k, v in zip(
+            ("f_compute", "f_memory", "f_network", "tokens_m", "width_k"),
+            rng.uniform(0, 2, 5))}
+        y = (1.0 + 3 * f["f_compute"] + 0.5 * f["f_memory"] ** 2
+             + 0.25 * f["tokens_m"] * f["width_k"])
+        samples.append(("op_x", f, y))
+    m = CostModel().fit(samples)
+    pred = m.predict_samples(samples)
+    truth = np.array([s[2] for s in samples])
+    assert np.max(np.abs(pred - truth)) < 1e-4
+
+
+def test_fitted_model_changes_selection():
+    """§6.3: the learned weights drive argmin selection at virtual nodes."""
+    plan = attn_plan(window=8)
+    pp = generate_candidates(plan, allow_pallas=True)
+    # craft a model that makes banded absurdly expensive
+    bad = CostModel()
+    feats = ("f_compute", "f_memory", "f_network", "tokens_m", "width_k")
+    n_phi = 1 + 5 + 5 + 10
+    w = np.zeros(n_phi)
+    w[0] = 1e9
+    bad.weights["sdpa_banded_xla"] = w
+    choices, report = select_candidates(pp, SYS, bad, allow_pallas=True)
+    assert all(c.name != "attn_banded" for c in choices.values())

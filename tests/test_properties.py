@@ -1,0 +1,155 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.buffering import partition_chains
+from repro.core.cost_model import CostModel, poly2
+from repro.core.ir import (Plan, TensorT, infer_types, standard_catalog)
+from repro.core.parallel import add_data_parallelism
+from repro.core.physical import PHYS_OPS, PhysPlan, generate_candidates
+from repro.core.rewrite import rewrite
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import mha_reference
+
+CAT = standard_catalog()
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# --------------------------------------------------------------------------
+# IR invariants
+# --------------------------------------------------------------------------
+
+@st.composite
+def dense_plan(draw):
+    b = draw(st.sampled_from([1, 2, 4]))
+    s = draw(st.sampled_from([4, 8, 16]))
+    e = draw(st.sampled_from([16, 32]))
+    n_blocks = draw(st.integers(1, 3))
+    p = Plan("prop")
+    p.add_input("h", TensorT((b, s, e), "float32",
+                             ("batch", "seq", "embed")))
+    x = "h"
+    for i in range(n_blocks):
+        a = p.add("attention", [x], {"heads": 4, "kv_heads": 2,
+                                     "head_dim": e // 4, "embed": e,
+                                     "pp": (f"a{i}",)})
+        x = p.add("residual_add", [x, a])
+        m = p.add("mlp", [x], {"ffn": 2 * e, "embed": e, "pp": (f"m{i}",)})
+        x = p.add("residual_add", [x, m])
+    p.set_outputs(x)
+    return p
+
+
+@given(dense_plan())
+@settings(**SETTINGS)
+def test_rewrite_preserves_output_type(p):
+    t_before = infer_types(p.copy(), CAT).type_of(p.outputs[0])
+    out = rewrite(p, CAT)
+    t_after = out.type_of(out.outputs[0])
+    assert t_before.shape == t_after.shape
+    assert t_before.dims == t_after.dims
+
+
+@given(dense_plan())
+@settings(**SETTINGS)
+def test_inference_is_idempotent(p):
+    p1 = infer_types(p, CAT)
+    snap = dict(p1.types)
+    p2 = infer_types(p1, CAT)
+    assert snap == p2.types
+
+
+@given(dense_plan(), st.booleans())
+@settings(**SETTINGS)
+def test_candidate_generation_total_and_acyclic(p, allow_pallas):
+    out = generate_candidates(rewrite(p, CAT), allow_pallas=allow_pallas)
+    seen = set(out.inputs)
+    for n in out.topo():                      # topological: inputs precede
+        assert all(i in seen for i in n.inputs), n.id
+        seen.add(n.id)
+    for vid in out.pm:
+        assert out.nodes[vid].virtual
+
+
+@given(dense_plan())
+@settings(**SETTINGS)
+def test_dp_insertion_only_adds_partition_merge(p):
+    pp = generate_candidates(rewrite(p, CAT))
+    out = add_data_parallelism(pp)
+    before = {n.id for n in pp.topo()}
+    added = [n for n in out.topo() if n.id not in before]
+    assert all(n.impl in ("partition", "merge") for n in added)
+
+
+@given(dense_plan())
+@settings(**SETTINGS)
+def test_chains_partition_every_node_exactly_once(p):
+    pp = add_data_parallelism(generate_candidates(rewrite(p, CAT)))
+    chains = partition_chains(pp)
+    flat = [n for ch in chains for n in ch]
+    assert sorted(flat) == sorted(n.id for n in pp.topo())
+
+
+# --------------------------------------------------------------------------
+# cost model invariants
+# --------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.floats(0, 10), st.floats(0, 10),
+                          st.floats(0, 10)), min_size=20, max_size=60))
+@settings(**SETTINGS)
+def test_fit_is_interpolating_on_consistent_data(rows):
+    """If measurements follow an exact deg-2 polynomial, Eq.2 fit matches."""
+    samples = []
+    for a, b, c in rows:
+        f = {"f_compute": a, "f_memory": b, "f_network": c,
+             "tokens_m": 0.0, "width_k": 0.0}
+        y = 2.0 + a + 0.1 * b * b + 0.3 * a * c
+        samples.append(("op", f, y))
+    m = CostModel().fit(samples, ridge=1e-10)
+    pred = m.predict_samples(samples)
+    np.testing.assert_allclose(pred, [s[2] for s in samples],
+                               atol=1e-5, rtol=1e-4)
+
+
+@given(st.integers(1, 5))
+@settings(**SETTINGS)
+def test_poly2_feature_count(n):
+    x = np.ones((1, n))
+    assert poly2(x).shape[-1] == 1 + n + n + n * (n - 1) // 2
+
+
+# --------------------------------------------------------------------------
+# kernel invariants
+# --------------------------------------------------------------------------
+
+@given(st.integers(1, 2), st.sampled_from([8, 24, 32]),
+       st.sampled_from([(2, 1), (4, 2), (4, 4)]),
+       st.sampled_from([8, 16]), st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_flash_matches_ref_property(b, s, hkv, d, causal):
+    h, kv = hkv
+    rng = np.random.RandomState(b * s + h + d)
+    q = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, s, kv, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, kv, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, interpret=True)
+    ref = mha_reference(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+@given(st.sampled_from([4, 8, 12]), st.booleans())
+@settings(max_examples=10, deadline=None)
+def test_attention_permutation_equivariance_over_batch(s, causal):
+    """Permuting the batch permutes the output — no cross-batch leakage."""
+    rng = np.random.RandomState(s)
+    b, h, d = 4, 2, 8
+    q = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+    k = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+    v = jnp.asarray(rng.randn(b, s, h, d), jnp.float32)
+    perm = np.array([2, 0, 3, 1])
+    out = mha_reference(q, k, v, causal=causal)
+    out_p = mha_reference(q[perm], k[perm], v[perm], causal=causal)
+    np.testing.assert_allclose(np.asarray(out[perm]), np.asarray(out_p),
+                               atol=1e-6)
