@@ -43,10 +43,10 @@ def _cost_model():
 
 MODES = {
     "naive": dict(rewrite_pipeline=("decompose",), data_parallel=False,
-                  allow_pallas=False),
+                  engines=("xla",)),
     "dataparallel": dict(rewrite_pipeline=("decompose",),
-                         data_parallel=True, allow_pallas=False),
-    "awesome": dict(data_parallel=True, allow_pallas=False),
+                         data_parallel=True, engines=("xla",)),
+    "awesome": dict(data_parallel=True, engines=("xla",)),
 }
 
 

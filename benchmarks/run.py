@@ -14,6 +14,7 @@ SUITES = (
     ("buffering_eff", "Fig. 16 — buffering memory/time"),
     ("calibration_curves", "Fig. 10/11 + Table 4 — calibration + fit"),
     ("pipeline_vs_dp", "§5.4/App. C — pipeline+DP vs DP (negative result)"),
+    ("plan_cache_eff", "ISSUE 1 — cold plan vs content-hash cache hit"),
     ("roofline", "§Roofline — dry-run derived terms"),
 )
 

@@ -40,7 +40,7 @@ def main():
         logits = a.op("unembed", h, vocab=512, pp=("embed",))
         a.store(logits)
 
-    fn = a.compile(SystemCatalog(), allow_pallas=True)
+    fn = a.compile(SystemCatalog(), engines=("xla", "pallas"))
     print("planner decisions (virtual node -> chosen engine):")
     for r in fn.report:
         print(f"  [{r['pattern']}] -> {r['chosen']}   "

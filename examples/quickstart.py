@@ -27,9 +27,11 @@ def main():
           f"(+{sum(len(n.subplan) for n in plan.topo() if n.subplan)} in "
           f"scan subplans)")
 
-    # 2. rewrite -> candidates -> cost-model selection -> data parallelism
+    # 2. the staged plan pipeline: rewrite -> candidates -> cost-model
+    # selection -> data parallelism, with both engines offered
     fwd = plan_and_compile(plan, CATALOG, SystemCatalog(),
-                           allow_pallas=True)
+                           engines=("xla", "pallas"))
+    print(fwd.explain())
     for r in fwd.report:
         print(f"virtual node [{r['pattern']}] -> {r['chosen']} "
               f"(costs: { {k: f'{v:.2e}' for k, v in r['costs'].items()} })")

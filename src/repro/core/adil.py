@@ -90,6 +90,23 @@ class Analysis:
 
     # -- compilation through the AWESOME pipeline ------------------------------
     def compile(self, syscat: SystemCatalog, **kw) -> PlannedFunction:
+        """Compile through the staged plan pipeline.  Planning is cached by
+        content hash (see ``core/plan_cache.py``): recompiling an identical
+        analysis against the same catalogs reuses the staged plan instead of
+        replanning.  Pass ``cache=False`` to force a fresh run."""
         if not self.plan.outputs:
             self.plan.set_outputs(*self._stores)
         return plan_and_compile(self.plan, self.catalog, syscat, **kw)
+
+    def plan_id(self, syscat: SystemCatalog) -> str:
+        """Content hash identifying this analysis against the catalogs (the
+        structural part of the plan-cache key; planning options are appended
+        by the pipeline — see ``pipeline.staged_plan_id``).  Side-effect
+        free: outputs defaulting happens on a copy, so stores added after
+        this call still reach ``compile``."""
+        from .ir import plan_id as _plan_id
+        plan = self.plan
+        if not plan.outputs and self._stores:
+            plan = plan.copy()
+            plan.set_outputs(*self._stores)
+        return _plan_id(plan, self.catalog, syscat)

@@ -239,3 +239,9 @@ def parse_adil(src: str, catalog: FunctionCatalog) -> Analysis:
     from .ir import infer_types
     infer_types(analysis.plan, catalog)
     return analysis
+
+
+# canonical short name: a script and the equivalent embedded-DSL build
+# produce the identical logical plan — and therefore the identical
+# ``plan_id`` (see tests/test_plan_pipeline.py round-trip)
+parse = parse_adil

@@ -333,6 +333,20 @@ class CostModel:
                 out.append(f["f_compute"] + f["f_memory"] + f["f_network"])
         return np.array(out)
 
+    # -- identity ------------------------------------------------------------
+    def fingerprint(self) -> str:
+        """Content hash of the learned weights ("analytic" before any
+        calibration).  Part of the plan-cache key: refitted weights change
+        candidate selection, so they must invalidate cached plans."""
+        if not self.weights:
+            return "analytic"
+        import hashlib
+        h = hashlib.sha256()
+        for impl in sorted(self.weights):
+            h.update(impl.encode())
+            h.update(np.asarray(self.weights[impl], np.float64).tobytes())
+        return h.hexdigest()
+
     # -- persistence ---------------------------------------------------------
     def save(self, path):
         with open(path, "w") as fh:
@@ -352,9 +366,13 @@ class CostModel:
 
 def select_candidates(pp: PhysPlan, syscat: SystemCatalog,
                       model: Optional[CostModel] = None,
-                      allow_pallas: bool = False) -> tuple:
+                      engines=None, allow_pallas=None) -> tuple:
     """Score every virtual node's candidates (Eq. 1 over the chain) and pick
-    the argmin.  Returns (choices dict incl. nested subplans, report list)."""
+    the argmin.  ``engines`` names the engines whose candidates are eligible
+    (registry names; the legacy ``allow_pallas`` boolean still maps through).
+    Returns (choices dict incl. nested subplans, report list)."""
+    from .engines import resolve_engines
+    engines = resolve_engines(engines, allow_pallas=allow_pallas)
     model = model or CostModel()
     choices: dict = {}
     report = []
@@ -369,7 +387,7 @@ def select_candidates(pp: PhysPlan, syscat: SystemCatalog,
                         for i in n.inputs]
             scored = []
             for cand in plan.pm[n.id]:
-                if cand.requires_backend == "pallas" and not allow_pallas:
+                if cand.requires_backend not in engines:
                     continue
                 sec = model.chain_seconds(cand.impls, in_types, n.attrs, syscat)
                 scored.append((sec, cand))
@@ -381,6 +399,7 @@ def select_candidates(pp: PhysPlan, syscat: SystemCatalog,
                 "virtual": n.id,
                 "pattern": n.attrs.get("pattern"),
                 "chosen": scored[0][1].name,
+                "engine": scored[0][1].requires_backend,
                 "costs": {c.name: s for s, c in scored},
             })
 

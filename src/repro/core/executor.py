@@ -21,12 +21,11 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from . import parallel as par
-from .buffering import BufferingDecision, plan_buffering
-from .cost_model import CostModel, select_candidates
+from .buffering import BufferingDecision
+from .cost_model import CostModel
+from .engines import dispatch, get_engine, resolve_engines
 from .ir import FunctionCatalog, Plan, SystemCatalog
-from .physical import PhysPlan, generate_candidates, materialize_choice
-from .rewrite import rewrite
+from .physical import PHYS_OPS, PhysPlan
 from ..layers import attention as A
 from ..layers import embedding as E
 from ..layers import mamba as M
@@ -150,18 +149,14 @@ class ExecContext:
 
 
 # --------------------------------------------------------------------------
-# impl registry
+# impl registration — each engine owns its dispatch table (engines.py)
 # --------------------------------------------------------------------------
 
-IMPLS: dict = {}
-
-
-def impl(*names):
-    def deco(fn):
-        for n in names:
-            IMPLS[n] = fn
-        return fn
-    return deco
+def impl(*names, engine: str = "xla"):
+    """Register a physical-op implementation under a named engine.  The
+    executor dispatches each node through the engine that registered its
+    impl (the tri-store's per-engine execution, §2)."""
+    return get_engine(engine).impl(*names)
 
 
 @impl("identity", "store")
@@ -286,7 +281,7 @@ def _i_banded(ctx, args, node):
                          causal=node.attrs.get("causal", True))
 
 
-@impl("attn_flash_pallas")
+@impl("attn_flash_pallas", engine="pallas")
 def _i_flash(ctx, args, node):
     q, k, v = args[0]
     q, k = _prep(ctx, node, q, k)
@@ -363,7 +358,7 @@ def _i_moe_drop(ctx, args, node):
                           constrain=ctx.constrain if a.get("pin_moe") else None)
 
 
-@impl("moe_gmm_pallas")
+@impl("moe_gmm_pallas", engine="pallas")
 def _i_moe_gmm(ctx, args, node):
     a = node.attrs
     return X.moe_gmm(ctx.params_for(node), args[0], top_k=a["top_k"],
@@ -379,7 +374,7 @@ def _i_wkv_xla(ctx, args, node):
                            head_dim=a["head_dim"], use_kernel=False)
 
 
-@impl("wkv6_pallas")
+@impl("wkv6_pallas", engine="pallas")
 def _i_wkv_pl(ctx, args, node):
     a = node.attrs
     return R.rwkv_time_mix(ctx.params_for(node), args[0], heads=a["heads"],
@@ -396,7 +391,7 @@ def _i_ssd_xla(ctx, args, node):
                           use_kernel=False)
 
 
-@impl("ssd_pallas")
+@impl("ssd_pallas", engine="pallas")
 def _i_ssd_pl(ctx, args, node):
     a = node.attrs
     cfg = {"embed": a["embed"], "state": a["state"],
@@ -488,9 +483,11 @@ def _i_filter(ctx, args, node):
 def run_plan(pplan: PhysPlan, ctx: ExecContext, values: dict) -> tuple:
     env = dict(values)
     for n in pplan.topo():
-        fn = IMPLS.get(n.impl)
+        opdef = PHYS_OPS.get(n.impl)
+        fn = dispatch(n.impl, opdef.backend if opdef else None)
         if fn is None:
-            raise NotImplementedError(f"no impl for {n.impl!r}")
+            raise NotImplementedError(
+                f"no engine implements {n.impl!r}")
         env[n.id] = fn(ctx, [env[i] for i in n.inputs], n)
     return tuple(env[o] for o in pplan.outputs)
 
@@ -501,7 +498,13 @@ def run_plan(pplan: PhysPlan, ctx: ExecContext, values: dict) -> tuple:
 
 @dataclass
 class PlannedFunction:
-    """The product of the full AWESOME pipeline for one workload."""
+    """A cached-able staged plan bound to one runtime context.
+
+    The planning product itself (logical_opt / candidates / concrete plan /
+    choices / buffering / EXPLAIN trace) lives in the StagedPhysicalPlan —
+    the unit the plan cache stores; this wrapper adds the runtime-only
+    bindings (mesh, sharding rules, interpret mode) plus legacy field access
+    for existing callers."""
 
     logical: Plan
     pplan: PhysPlan                  # with virtual nodes (pre-choice)
@@ -513,6 +516,20 @@ class PlannedFunction:
     rules: ShardingRules
     mesh: Optional[Any] = None
     interpret: bool = True
+    plan_id: str = ""
+    staged: Optional[Any] = None     # StagedPhysicalPlan
+
+    @classmethod
+    def from_staged(cls, staged, syscat: SystemCatalog, *,
+                    rules: "ShardingRules" = None, mesh=None,
+                    interpret: bool = True) -> "PlannedFunction":
+        return cls(staged.logical, staged.pplan, staged.concrete,
+                   staged.choices, staged.report, staged.buffering,
+                   syscat, rules or ShardingRules(), mesh, interpret,
+                   staged.plan_id, staged)
+
+    def explain(self) -> str:
+        return self.staged.explain() if self.staged is not None else ""
 
     def __call__(self, params, inputs: dict, aux: Optional[dict] = None):
         ctx = ExecContext(root=params, scope=params, aux=aux or {},
@@ -526,24 +543,33 @@ def plan_and_compile(logical: Plan, catalog: FunctionCatalog,
                      syscat: SystemCatalog, *,
                      mesh=None, rules: ShardingRules = ShardingRules(),
                      cost_model: Optional[CostModel] = None,
-                     allow_pallas: bool = False,
+                     engines=None,
+                     allow_pallas=None,
                      data_parallel: bool = True,
                      buffering: bool = False,
                      global_batch: int = 1,
                      rewrite_pipeline=None,
-                     interpret: bool = True) -> PlannedFunction:
-    """The full Algorithm-1 pipeline: rewrite → candidates → (data
-    parallelism) → (buffering) → cost-model choice → concrete plan."""
+                     interpret: bool = True,
+                     cache=None,
+                     pipeline=None) -> PlannedFunction:
+    """Thin compatibility wrapper over the staged plan pipeline.
+
+    Resolves the engine selection (``engines`` names from the registry;
+    legacy ``allow_pallas`` still maps through), runs — or fetches from the
+    plan cache — the Algorithm-1 pass pipeline, and binds the staged plan to
+    this call's runtime context.  ``cache=False`` forces a fresh planning
+    run; any other value uses the given / default PlanCache.
+    """
+    from .pipeline import PlanOptions, compile_staged
     from .rewrite import DEFAULT_PIPELINE
-    logical_opt = rewrite(logical, catalog,
-                          rewrite_pipeline or DEFAULT_PIPELINE)
-    pp = generate_candidates(logical_opt, allow_pallas=allow_pallas)
-    choices, report = select_candidates(pp, syscat, cost_model,
-                                        allow_pallas=allow_pallas)
-    concrete = materialize_choice(pp, choices)
-    if data_parallel:
-        concrete = par.add_data_parallelism(concrete)
-    buf = plan_buffering(concrete, enabled=buffering,
-                         global_batch=global_batch)
-    return PlannedFunction(logical_opt, pp, concrete, choices, report, buf,
-                           syscat, rules, mesh, interpret)
+    opts = PlanOptions(
+        engines=resolve_engines(engines, allow_pallas=allow_pallas),
+        data_parallel=data_parallel,
+        buffering=buffering,
+        global_batch=global_batch,
+        rewrite_pipeline=tuple(rewrite_pipeline or DEFAULT_PIPELINE))
+    staged = compile_staged(logical, catalog, syscat, options=opts,
+                            cost_model=cost_model, pipeline=pipeline,
+                            cache=cache)
+    return PlannedFunction.from_staged(staged, syscat, rules=rules,
+                                       mesh=mesh, interpret=interpret)

@@ -19,6 +19,7 @@ data-parallel capability checks (§5.2), and cost-model features (§6).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Iterable, Mapping, Optional, Sequence
@@ -181,11 +182,22 @@ class Plan:
     _ctr: int = 0
 
     # -- construction ------------------------------------------------------
+    def _bump(self):
+        """Structural-revision counter (non-field attr): invalidates the
+        memoized content fingerprint (see :func:`plan_fingerprint`)."""
+        self.__dict__["_rev"] = self.__dict__.get("_rev", 0) + 1
+
+    def _rev_key(self):
+        subs = tuple(n.subplan._rev_key() for n in self.nodes.values()
+                     if n.subplan is not None)
+        return (self.__dict__.get("_rev", 0), subs)
+
     def add_input(self, name: str, typ: Type) -> str:
         if name in self.nodes or name in self.inputs:
             raise ValidationError(f"duplicate input {name!r}")
         self.inputs[name] = typ
         self.types[name] = typ
+        self._bump()
         return name
 
     def add(self, op: str, inputs: Sequence[str] = (), attrs: dict | None = None,
@@ -198,6 +210,7 @@ class Plan:
             if i not in self.nodes and i not in self.inputs:
                 raise ValidationError(f"node {nid!r}: unknown input {i!r}")
         self.nodes[nid] = Node(nid, op, tuple(inputs), dict(attrs or {}), subplan)
+        self._bump()
         return nid
 
     def set_outputs(self, *ids: str):
@@ -205,6 +218,7 @@ class Plan:
             if i not in self.nodes and i not in self.inputs:
                 raise ValidationError(f"unknown output {i!r}")
         self.outputs = tuple(ids)
+        self._bump()
 
     # -- views -------------------------------------------------------------
     def topo(self) -> Iterable[Node]:
@@ -238,6 +252,129 @@ class Plan:
         return len(self.nodes)
 
 
+def count_nodes(plan) -> int:
+    """Total node count, recursing into higher-order subplans.  Duck-typed:
+    works on both logical Plans and physical PhysPlans (same topo()/subplan
+    shape).  Used by the rewrite trace and the pipeline EXPLAIN deltas."""
+    if plan is None:
+        return 0
+    n = len(plan.nodes)
+    for node in plan.topo():
+        if node.subplan is not None:
+            n += count_nodes(node.subplan)
+    return n
+
+
+# --------------------------------------------------------------------------
+# Canonical serialization + content hashing (plan identity)
+# --------------------------------------------------------------------------
+#
+# A logical plan's identity is *structural*: node ids are replaced by
+# topological position so the textual ADIL front end and the embedded
+# builder hash identically, and attrs are frozen into a deterministic
+# nested-tuple form.  ``plan_id`` additionally covers the function-catalog
+# signature and the system-catalog fingerprint, so the same workload
+# compiled against a different op library or mesh gets a different id —
+# this is what keys the plan cache (see ``core/plan_cache.py``).
+
+
+def _canon(v):
+    """Deterministic, hash-stable form of an attr value."""
+    if isinstance(v, dict):
+        return ("dict", tuple(sorted((str(k), _canon(x)) for k, x in v.items())))
+    if isinstance(v, (list, tuple)):
+        return ("seq", tuple(_canon(x) for x in v))
+    if isinstance(v, set):
+        return ("set", tuple(sorted(repr(_canon(x)) for x in v)))
+    if hasattr(v, "shape") and hasattr(v, "dtype"):
+        # ndarray-like (e.g. a const node's value): repr truncates large
+        # arrays, so hash the bytes instead
+        import numpy as _np
+        a = _np.asarray(v)
+        return ("array", str(a.dtype), tuple(a.shape),
+                hashlib.sha256(a.tobytes()).hexdigest())
+    if callable(v):
+        # name alone is ambiguous for lambdas; mix in the bytecode, the
+        # closure-captured values, and the default args so two different
+        # predicates never collide to one cache entry
+        code = getattr(v, "__code__", None)
+        tag = getattr(v, "__qualname__", getattr(v, "__name__", repr(v)))
+        if code is not None:
+            h = hashlib.sha256(code.co_code + repr(code.co_consts).encode())
+            captured = []
+            try:
+                for cell in (getattr(v, "__closure__", None) or ()):
+                    try:
+                        captured.append(_canon(cell.cell_contents))
+                    except ValueError:       # empty cell
+                        captured.append(("cell", "<empty>"))
+                for d in (getattr(v, "__defaults__", None) or ()):
+                    captured.append(_canon(d))
+            except RecursionError:           # self-referential closure
+                captured.append(("cell", "<recursive>"))
+            return ("fn", tag, h.hexdigest()[:16], tuple(captured))
+        return ("fn", tag)
+    if isinstance(v, Type):
+        return ("type", repr(v))
+    return (type(v).__name__, repr(v))
+
+
+def canonicalize_plan(plan: "Plan") -> tuple:
+    """Structural canonical form of a logical plan.
+
+    Node ids are replaced by topological index, plan inputs keep their names
+    (they are the call-time binding keys) plus their declared types, and
+    subplans recurse.  Two plans built through different front ends (textual
+    ADIL vs the embedded builder) canonicalize identically iff they describe
+    the same workload.
+    """
+    index: dict = {}
+    for i, name in enumerate(plan.inputs):
+        index[name] = ("in", i)
+    for i, n in enumerate(plan.topo()):
+        index[n.id] = ("n", i)
+    nodes = tuple(
+        (n.op,
+         tuple(index[i] for i in n.inputs),
+         tuple(sorted((str(k), _canon(v)) for k, v in n.attrs.items())),
+         canonicalize_plan(n.subplan) if n.subplan is not None else None)
+        for n in plan.topo())
+    ins = tuple((name, repr(t)) for name, t in plan.inputs.items())
+    outs = tuple(index[o] for o in plan.outputs)
+    return ("plan", ins, nodes, outs)
+
+
+def plan_fingerprint(plan: "Plan") -> str:
+    """sha256 over the canonical structural form of a logical plan.
+
+    Memoized on the plan's (recursive) structural-revision counter so a
+    second compile of the same plan object pays only a cache lookup.  The
+    counter tracks construction through ``add``/``add_input``/
+    ``set_outputs``; callers that mutate node attrs *in place after* a first
+    hash must re-create the plan (every rewrite pass already does)."""
+    key = plan._rev_key()
+    cached = plan.__dict__.get("_fp_cache")
+    if cached is not None and cached[0] == key:
+        return cached[1]
+    fp = hashlib.sha256(repr(canonicalize_plan(plan)).encode()).hexdigest()
+    plan.__dict__["_fp_cache"] = (key, fp)
+    return fp
+
+
+def plan_id(plan: "Plan", catalog: "FunctionCatalog",
+            syscat: "SystemCatalog", extra: tuple = ()) -> str:
+    """Stable content hash identifying one planning problem.
+
+    Covers plan structure, the function-catalog signature, the system-catalog
+    fingerprint, and any ``extra`` planning options (engines, rewrite
+    pipeline, …).  Every compile of the same workload against the same
+    catalogs gets the same id — the plan cache key.
+    """
+    payload = repr((plan_fingerprint(plan), catalog.signature(),
+                    syscat.fingerprint(), _canon(extra)))
+    return hashlib.sha256(payload.encode()).hexdigest()
+
+
 # --------------------------------------------------------------------------
 # Function catalog (paper §3.1.2)
 # --------------------------------------------------------------------------
@@ -261,11 +398,13 @@ class OpSignature:
 class FunctionCatalog:
     def __init__(self):
         self._sigs: dict = {}
+        self._sig_cache: Optional[str] = None
 
     def register(self, sig: OpSignature):
         if sig.name in self._sigs:
             raise ValidationError(f"op {sig.name!r} already registered")
         self._sigs[sig.name] = sig
+        self._sig_cache = None
 
     def op(self, name: str, n_inputs=None, required_attrs=(), doc=""):
         """Decorator form: ``@catalog.op("matmul", n_inputs=2)``."""
@@ -286,6 +425,17 @@ class FunctionCatalog:
 
     def names(self):
         return sorted(self._sigs)
+
+    def signature(self) -> str:
+        """Content hash of the registered-op surface (names, arities,
+        required attrs).  Part of ``plan_id``: the same workload against a
+        different op library is a different planning problem.  Memoized,
+        invalidated by ``register``."""
+        if self._sig_cache is None:
+            rows = tuple((name, repr(s.n_inputs), s.required_attrs)
+                         for name, s in sorted(self._sigs.items()))
+            self._sig_cache = hashlib.sha256(repr(rows).encode()).hexdigest()
+        return self._sig_cache
 
 
 # --------------------------------------------------------------------------
@@ -598,3 +748,11 @@ class SystemCatalog:
         if name not in self.mesh_axes:
             return 1
         return self.mesh_shape[self.mesh_axes.index(name)]
+
+    def fingerprint(self) -> str:
+        """Content hash of the store metadata (hardware peaks + mesh).  Part
+        of ``plan_id``: a syscat change invalidates cached plans because the
+        cost model's roofline features depend on it."""
+        return hashlib.sha256(repr(
+            (self.hardware, self.mesh_axes, self.mesh_shape)).encode()
+        ).hexdigest()

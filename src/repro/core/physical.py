@@ -298,13 +298,17 @@ def _find_chain_matches(plan: Plan, seq, claimed):
 
 
 def generate_candidates(plan: Plan, patterns=DEFAULT_PATTERNS,
-                        allow_pallas: bool = False) -> PhysPlan:
+                        engines=None, allow_pallas=None) -> PhysPlan:
     """Alg. 2: largest-first pattern matching over the optimized logical plan.
 
-    ``allow_pallas`` gates EX/pallas candidates (on CPU dry-runs the Pallas
-    engines are unavailable; the paper likewise excludes EX engines from
-    optimization choices it cannot calibrate).
+    ``engines`` names the execution engines whose candidates may be offered
+    (default: the always-available ``xla`` interpreter engine; on CPU
+    dry-runs the Pallas engines are excluded, exactly as the paper excludes
+    EX engines from optimization choices it cannot calibrate).  The legacy
+    ``allow_pallas`` boolean is still accepted and maps onto the registry.
     """
+    from .engines import resolve_engines
+    engines = resolve_engines(engines, allow_pallas=allow_pallas)
     ordered = sorted(patterns, key=lambda p: -p.size)
     claimed: set = set()
     pat_of: dict = {}           # head node id -> (Pattern, chain)
@@ -329,7 +333,7 @@ def generate_candidates(plan: Plan, patterns=DEFAULT_PATTERNS,
                 continue
             pat, chain = pat_of[head]
             cands = [c for c in pat.candidates
-                     if (allow_pallas or c.requires_backend != "pallas")
+                     if c.requires_backend in engines
                      and (c.when is None or c.when(chain))]
             attrs = {}
             for c in chain:
@@ -358,11 +362,11 @@ def generate_candidates(plan: Plan, patterns=DEFAULT_PATTERNS,
         sub = None
         if node.op == "scan_layers":
             impl = "scan_layers_xla"
-            sub = generate_candidates(node.subplan, patterns, allow_pallas)
+            sub = generate_candidates(node.subplan, patterns, engines)
         elif node.op in ("map", "filter", "reduce"):
             impl = node.op  # handled natively by the executor
             if node.subplan is not None:
-                sub = generate_candidates(node.subplan, patterns, allow_pallas)
+                sub = generate_candidates(node.subplan, patterns, engines)
             if impl not in PHYS_OPS:
                 defop(impl, dp_cap=PR, buf_cap=SS, cap_on="elem")
         if impl is None:

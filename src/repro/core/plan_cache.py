@@ -1,0 +1,90 @@
+"""Content-addressed LRU cache of staged physical plans.
+
+BigDAWG and Polystore++ both observe that staged plans with *stable
+identities* are the prerequisite for plan reuse across repeated traffic.
+Here the identity is ``ir.plan_id`` — a content hash over plan structure,
+catalog signatures, syscat fingerprint, and planning options — and the
+cached value is the full :class:`~repro.core.pipeline.StagedPhysicalPlan`
+(optimized logical plan, candidate plan, concrete plan, choices, buffering
+decision and the per-pass trace).
+
+A cache hit skips the entire pass pipeline: repeated/bucketed workloads
+(serving buckets, re-built train steps, dry-run sweeps) rebind the cached
+staged plan to their runtime context (mesh / sharding rules / interpret
+mode) instead of replanning from scratch.  Staged plans are treated as
+immutable once cached; the executor never mutates them at call time.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Optional
+
+
+class PlanCache:
+    """LRU map: plan_id -> StagedPhysicalPlan, with hit/miss accounting."""
+
+    def __init__(self, maxsize: int = 128):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self._entries: "OrderedDict[str, Any]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def lookup(self, plan_id: str):
+        """Return the cached staged plan (refreshing recency) or None."""
+        entry = self._entries.get(plan_id)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(plan_id)
+        self.hits += 1
+        return entry
+
+    def insert(self, plan_id: str, staged) -> None:
+        self._entries[plan_id] = staged
+        self._entries.move_to_end(plan_id)
+        while len(self._entries) > self.maxsize:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self.hits = self.misses = self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, plan_id: str) -> bool:
+        return plan_id in self._entries
+
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {
+            "size": len(self._entries),
+            "maxsize": self.maxsize,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "hit_rate": (self.hits / total) if total else 0.0,
+        }
+
+    def __repr__(self):
+        s = self.stats()
+        return (f"PlanCache(size={s['size']}/{s['maxsize']} "
+                f"hits={s['hits']} misses={s['misses']} "
+                f"hit_rate={s['hit_rate']:.2f})")
+
+
+# process-wide default, shared by every entry point (adil.Analysis.compile,
+# launch/train, launch/serve, launch/dryrun, benchmarks)
+_DEFAULT = PlanCache()
+
+
+def default_plan_cache() -> PlanCache:
+    return _DEFAULT
+
+
+def clear_default_plan_cache() -> None:
+    _DEFAULT.clear()

@@ -24,7 +24,8 @@ from __future__ import annotations
 
 from typing import Callable
 
-from .ir import FunctionCatalog, Node, Plan, ValidationError, infer_types
+from .ir import (FunctionCatalog, Node, Plan, ValidationError, count_nodes,
+                 infer_types)
 
 # --------------------------------------------------------------------------
 # 1. function decomposition
@@ -314,7 +315,27 @@ def rewrite(plan: Plan, catalog: FunctionCatalog,
             pipeline=DEFAULT_PIPELINE) -> Plan:
     """Run the logical-rewrite pipeline (the paper's Fig. 6 sequencing:
     decompose → merge redundancy → fuse)."""
+    out, _ = rewrite_with_trace(plan, catalog, pipeline)
+    return out
+
+
+def rewrite_with_trace(plan: Plan, catalog: FunctionCatalog,
+                       pipeline=DEFAULT_PIPELINE) -> tuple:
+    """Like :func:`rewrite`, also returning per-rule timing/size records
+    ``[{"rule", "wall_ms", "nodes_before", "nodes_after"}, ...]`` for the
+    EXPLAIN report of the staged plan pipeline."""
+    import time
+
     infer_types(plan, catalog)
+    trace = []
     for name in pipeline:
+        before = count_nodes(plan)
+        t0 = time.perf_counter()
         plan = _PASSES[name](plan, catalog)
-    return plan
+        trace.append({
+            "rule": name,
+            "wall_ms": (time.perf_counter() - t0) * 1e3,
+            "nodes_before": before,
+            "nodes_after": count_nodes(plan),
+        })
+    return plan, trace

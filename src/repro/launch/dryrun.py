@@ -64,8 +64,11 @@ def build_train_step(arch: str, mesh, *, grad_dtype="bfloat16",
     rules = rules or ShardingRules()
     syscat = syscat_for_mesh(mesh)
     plan = model.build_plan(shape.global_batch, shape.seq_len, mode="train")
+    # engine selection goes through the registry; the Pallas engines are not
+    # calibrated on the host-platform dry-run, so only xla is offered.  The
+    # plan cache makes rebuilding the same (arch × shape × mesh) step a hit.
     fwd = plan_and_compile(plan, CATALOG, syscat, mesh=mesh, rules=rules,
-                           allow_pallas=False)
+                           engines=("xla",))
     opt = make_optimizer(cfg.optimizer, cosine_schedule(3e-4, 100, 10000))
     step = make_train_step(fwd, opt, num_microbatches=num_microbatches,
                            grad_dtype=grad_dtype)
@@ -102,7 +105,7 @@ def lower_cell(arch: str, shape_name: str, mesh, *, opts=None):
         mode = "train" if shape.kind == "train" else "prefill"
         plan = model.build_plan(shape.global_batch, shape.seq_len, mode=mode)
         fwd = plan_and_compile(plan, CATALOG, syscat, mesh=mesh, rules=rules,
-                               allow_pallas=False)
+                               engines=("xla",))
         in_sds = model.input_specs(shape)
         in_shard = input_shardings(mesh, in_sds)
         p_abs = model.abstract_params()
@@ -165,6 +168,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, opts=None):
     t_compile = time.time() - t0
 
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # older jax returns [dict]
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_rec = {

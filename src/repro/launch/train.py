@@ -44,6 +44,11 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--buffering", action="store_true")
+    ap.add_argument("--engines", default="xla",
+                    help="comma-separated engine names the planner may use "
+                         "(registry: xla, pallas)")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the staged plan pipeline's EXPLAIN report")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--log-every", type=int, default=10)
@@ -58,10 +63,15 @@ def main(argv=None):
     syscat = SystemCatalog()
 
     plan = model.build_plan(args.batch, args.seq, mode="train")
+    # planned through the content-hashed plan cache: re-launching the same
+    # workload (or rebuilding the step in-process) reuses the staged plan
     fwd = plan_and_compile(plan, CATALOG, syscat, buffering=args.buffering,
-                           global_batch=args.batch)
-    print(f"[train] planner choices: "
+                           global_batch=args.batch,
+                           engines=tuple(args.engines.split(",")))
+    print(f"[train] plan {fwd.plan_id[:12]} choices: "
           f"{[(r['pattern'], r['chosen']) for r in fwd.report]}")
+    if args.explain:
+        print(fwd.explain())
     if fwd.buffering.enabled:
         print(f"[train] buffering: {fwd.buffering.num_microbatches} "
               f"microbatches over {len(fwd.buffering.chains)} chains")

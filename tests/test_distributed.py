@@ -14,6 +14,11 @@ import textwrap
 
 import pytest
 
+# heavyweight: every test spawns a fresh 8-device subprocess that compiles a
+# sharded train step — minutes each on CPU.  Deselected from the tier-1
+# default run (see pytest.ini); run with `pytest -m slow`.
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

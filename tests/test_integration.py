@@ -18,8 +18,12 @@ from repro.train.train_step import init_state, make_train_step
 SYS = SystemCatalog()
 
 
-@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma3-27b", "rwkv6-3b",
-                                  "zamba2-7b"])
+@pytest.mark.parametrize("arch", [
+    "qwen3-0.6b",
+    pytest.param("gemma3-27b", marks=pytest.mark.slow),
+    "rwkv6-3b",
+    pytest.param("zamba2-7b", marks=pytest.mark.slow),
+])
 def test_plan_forward_matches_decode_path(arch, rng):
     """The same params through (a) the planner-compiled prefill and (b) the
     token-by-token cached decode must produce the same logits — this pins

@@ -1,0 +1,268 @@
+"""Staged plan pipeline: content-hashed plan identity, the LRU plan cache,
+per-pass EXPLAIN trace, and the pluggable engine registry."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import adil_parser
+from repro.core.adil import Analysis
+from repro.core.engines import (dispatch, engine_names, get_engine,
+                                resolve_engines)
+from repro.core.executor import plan_and_compile
+from repro.core.ir import (HardwareSpec, Plan, SystemCatalog, TensorT,
+                           ValidationError, plan_fingerprint, plan_id,
+                           standard_catalog)
+from repro.core.pipeline import (PASS_REGISTRY, PlanOptions, PlanPipeline,
+                                 compile_staged, staged_plan_id)
+from repro.core.physical import generate_candidates
+from repro.core.plan_cache import PlanCache
+from repro.core.rewrite import rewrite
+
+CAT = standard_catalog()
+SYS = SystemCatalog()
+
+ADIL_SRC = """
+USE demoDB;
+create analysis tiny as {
+  toks := input([2, 16], int32, dims=[batch, seq]);
+  h    := embed(toks, vocab=64, embed=32, pp=[embed], dtype=float32);
+  h2   := attention(h, heads=4, kv_heads=2, head_dim=8, embed=32, pp=[attn]);
+  out  := mlp(h2, ffn=64, embed=32, pp=[mlp]);
+  store(out);
+}
+"""
+
+
+def builder_equivalent():
+    with Analysis("tiny", CAT) as a:
+        toks = a.input("toks", TensorT((2, 16), "int32", ("batch", "seq")))
+        h = a.op("embed", toks, vocab=64, embed=32, pp=("embed",),
+                 dtype="float32")
+        h2 = a.op("attention", h, heads=4, kv_heads=2, head_dim=8, embed=32,
+                  pp=("attn",))
+        out = a.op("mlp", h2, ffn=64, embed=32, pp=("mlp",))
+        a.store(out)
+    return a
+
+
+def attn_plan(window=8, seq=32):
+    p = Plan("ap")
+    p.add_input("h", TensorT((2, seq, 32), "float32",
+                             ("batch", "seq", "embed")))
+    a = p.add("attention", ["h"], {"heads": 4, "kv_heads": 2, "head_dim": 8,
+                                   "embed": 32, "window": window,
+                                   "pp": ("attn",)})
+    p.set_outputs(a)
+    return p
+
+
+# --------------------------------------------------------------------------
+# plan identity (canonical serialization + content hash)
+# --------------------------------------------------------------------------
+
+def test_adil_script_and_builder_share_plan_id():
+    """The textual front end and the embedded DSL describe the same workload
+    -> identical content hash (node ids are canonicalized away)."""
+    parsed = adil_parser.parse(ADIL_SRC, CAT)
+    built = builder_equivalent()
+    assert plan_id(parsed.plan, CAT, SYS) == plan_id(built.plan, CAT, SYS)
+    assert built.plan_id(SYS) == plan_id(built.plan, CAT, SYS)
+
+
+def test_plan_id_sensitive_to_structure_attrs_and_syscat():
+    base = plan_id(attn_plan(window=8), CAT, SYS)
+    assert base != plan_id(attn_plan(window=16), CAT, SYS)   # attr change
+    assert base != plan_id(attn_plan(seq=64), CAT, SYS)      # shape change
+    sys2 = SystemCatalog(mesh_shape=(4, 2))
+    assert base != plan_id(attn_plan(window=8), CAT, sys2)   # syscat change
+    sys3 = SystemCatalog(hardware=HardwareSpec(peak_flops=1e12))
+    assert base != plan_id(attn_plan(window=8), CAT, sys3)   # hardware change
+    assert base == plan_id(attn_plan(window=8), CAT, SYS)    # deterministic
+
+
+def test_fingerprint_ignores_node_ids():
+    p1 = attn_plan()
+    p2 = Plan("other_name")
+    p2.add_input("h", TensorT((2, 32, 32), "float32",
+                              ("batch", "seq", "embed")))
+    a = p2.add("attention", ["h"], {"heads": 4, "kv_heads": 2, "head_dim": 8,
+                                    "embed": 32, "window": 8,
+                                    "pp": ("attn",)}, id="totally_different")
+    p2.set_outputs(a)
+    assert plan_fingerprint(p1) == plan_fingerprint(p2)
+
+
+def test_callable_attrs_hash_captured_state():
+    """Two predicates with identical bytecode but different captured values
+    must not collide to one cache entry (closure cells and default args are
+    part of the content hash)."""
+    def mk(k):
+        return lambda v: v > k
+
+    def filter_plan(pred):
+        p = Plan("fp")
+        p.add_input("xs", TensorT((4, 8), "float32", ("batch", "seq")))
+        # wrap in a ListT via map-less direct filter: use attrs only
+        nid = p.add("store", ["xs"], {"predicate": pred})
+        p.set_outputs(nid)
+        return p
+
+    a = plan_fingerprint(filter_plan(mk(1)))
+    b = plan_fingerprint(filter_plan(mk(2)))
+    assert a != b
+    # default-arg capture too
+    c = plan_fingerprint(filter_plan(lambda v, k=1: v > k))
+    d = plan_fingerprint(filter_plan(lambda v, k=2: v > k))
+    assert c != d
+    # and identical captures still agree
+    assert plan_fingerprint(filter_plan(mk(3))) == \
+        plan_fingerprint(filter_plan(mk(3)))
+
+
+def test_options_and_cost_model_part_of_staged_id():
+    p = attn_plan()
+    a = staged_plan_id(p, CAT, SYS, PlanOptions())
+    b = staged_plan_id(p, CAT, SYS, PlanOptions(engines=("xla", "pallas")))
+    c = staged_plan_id(p, CAT, SYS, PlanOptions(buffering=True,
+                                                global_batch=8))
+    assert len({a, b, c}) == 3
+
+
+# --------------------------------------------------------------------------
+# plan cache
+# --------------------------------------------------------------------------
+
+def test_second_compile_is_cache_hit_and_syscat_change_misses():
+    cache = PlanCache()
+    s1 = compile_staged(attn_plan(), CAT, SYS, cache=cache)
+    assert cache.stats() == {**cache.stats(), "hits": 0, "misses": 1}
+    s2 = compile_staged(attn_plan(), CAT, SYS, cache=cache)
+    assert s2 is s1                       # the staged plan object is reused
+    assert cache.stats()["hits"] == 1
+    sys2 = SystemCatalog(mesh_shape=(2, 4))
+    s3 = compile_staged(attn_plan(), CAT, sys2, cache=cache)
+    assert s3 is not s1
+    assert cache.stats()["misses"] == 2
+
+
+def test_cached_and_cold_planned_functions_agree_bitwise():
+    cache = PlanCache()
+    cold = plan_and_compile(attn_plan(), CAT, SYS, cache=False)
+    plan_and_compile(attn_plan(), CAT, SYS, cache=cache)
+    hit = plan_and_compile(attn_plan(), CAT, SYS, cache=cache)
+    assert hit.staged is not None and cache.stats()["hits"] == 1
+    rng = np.random.RandomState(0)
+    params = {"attn": {
+        "wq": jnp.asarray(rng.randn(32, 32), jnp.float32),
+        "wk": jnp.asarray(rng.randn(32, 16), jnp.float32),
+        "wv": jnp.asarray(rng.randn(32, 16), jnp.float32),
+        "wo": jnp.asarray(rng.randn(32, 32), jnp.float32),
+    }}
+    x = jnp.asarray(rng.randn(2, 32, 32), jnp.float32)
+    a = cold(params, {"h": x})
+    b = hit(params, {"h": x})
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_patterns_and_pass_list_part_of_cache_key():
+    """Custom pattern sets and custom pass lists must not collide with the
+    default pipeline's cache entries."""
+    from repro.core.physical import DEFAULT_PATTERNS
+    cache = PlanCache()
+    s1 = compile_staged(attn_plan(), CAT, SYS, cache=cache)
+    no_dp = PlanPipeline(passes=("rewrite", "generate_candidates",
+                                 "select_candidates", "materialize_choice",
+                                 "plan_buffering"))
+    s2 = compile_staged(attn_plan(), CAT, SYS, cache=cache, pipeline=no_dp)
+    assert s2 is not s1 and s2.plan_id != s1.plan_id
+    s3 = compile_staged(attn_plan(), CAT, SYS, cache=cache,
+                        patterns=DEFAULT_PATTERNS[:1])
+    assert s3 is not s1 and s3.plan_id != s1.plan_id
+    assert cache.stats()["hits"] == 0 and cache.stats()["misses"] == 3
+
+
+def test_lru_eviction_and_clear():
+    cache = PlanCache(maxsize=2)
+    for seq in (16, 32, 64):
+        compile_staged(attn_plan(seq=seq), CAT, SYS, cache=cache)
+    assert len(cache) == 2 and cache.evictions == 1
+    # seq=16 was evicted -> recompiling it misses
+    compile_staged(attn_plan(seq=16), CAT, SYS, cache=cache)
+    assert cache.stats()["misses"] == 4
+    cache.clear()
+    assert len(cache) == 0 and cache.stats()["hits"] == 0
+
+
+# --------------------------------------------------------------------------
+# pass manager
+# --------------------------------------------------------------------------
+
+def test_pipeline_runs_all_passes_with_timing_and_deltas():
+    staged = PlanPipeline().run(attn_plan(), CAT, SYS,
+                                options=PlanOptions())
+    names = [r.name for r in staged.trace]
+    assert names == list(PlanPipeline.DEFAULT_PASSES)
+    assert all(r.wall_ms >= 0 for r in staged.trace)
+    assert all(r.nodes_before > 0 and r.nodes_after > 0
+               for r in staged.trace)
+    report = staged.explain()
+    for name in names:
+        assert name in report
+    assert staged.plan_id == staged_plan_id(attn_plan(), CAT, SYS,
+                                            PlanOptions())
+
+
+def test_pipeline_rejects_unknown_pass_and_incomplete_pipelines():
+    with pytest.raises(ValidationError):
+        PlanPipeline(passes=("rewrite", "nope"))
+    with pytest.raises(ValidationError):
+        PlanPipeline(passes=("rewrite",)).run(attn_plan(), CAT, SYS)
+
+
+def test_passes_are_individually_registered():
+    for name in PlanPipeline.DEFAULT_PASSES:
+        assert name in PASS_REGISTRY
+
+
+# --------------------------------------------------------------------------
+# engine registry
+# --------------------------------------------------------------------------
+
+def test_engine_registry_resolution():
+    assert resolve_engines(None) == ("xla",)
+    assert resolve_engines(None, allow_pallas=True) == ("xla", "pallas")
+    assert resolve_engines("xla") == ("xla",)
+    assert resolve_engines(("xla", "pallas")) == ("xla", "pallas")
+    with pytest.raises(ValidationError):
+        resolve_engines(("cuda",))
+    assert set(engine_names()) >= {"xla", "pallas"}
+
+
+def test_engines_own_their_impl_tables():
+    assert "rmsnorm_xla" in get_engine("xla")
+    assert "attn_flash_pallas" in get_engine("pallas")
+    assert "attn_flash_pallas" not in get_engine("xla")
+    assert dispatch("rmsnorm_xla", "xla") is not None
+    assert dispatch("attn_flash_pallas") is not None
+    assert dispatch("no_such_impl") is None
+
+
+def test_engine_selection_gates_candidates():
+    xla_only = generate_candidates(rewrite(attn_plan(window=0), CAT),
+                                   engines=("xla",))
+    assert not xla_only.pm           # single candidate -> direct substitution
+    both = generate_candidates(rewrite(attn_plan(window=8), CAT),
+                               engines=("xla", "pallas"))
+    (vid, cands), = both.pm.items()
+    assert {c.requires_backend for c in cands} == {"xla", "pallas"}
+
+
+def test_legacy_allow_pallas_still_maps_through():
+    fwd = plan_and_compile(attn_plan(), CAT, SYS, allow_pallas=True,
+                           cache=False)
+    # the boolean must resolve to both engines in the staged options, and
+    # the cost model must have scored the pallas flash candidate
+    assert fwd.staged.options.engines == ("xla", "pallas")
+    assert fwd.report
+    assert any("attn_flash" in r["costs"] for r in fwd.report)

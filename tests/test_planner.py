@@ -35,13 +35,13 @@ def attn_plan(window=0):
 def test_single_candidate_direct_replacement():
     """With pallas off and no window, fused attention has one candidate →
     substituted in place (Alg. 2 lines 6–7), no virtual node."""
-    pp = generate_candidates(attn_plan(), allow_pallas=False)
+    pp = generate_candidates(attn_plan(), engines=("xla",))
     assert not pp.pm
     assert any(n.impl == "sdpa_xla" for n in pp.topo())
 
 
 def test_multi_candidate_virtual_node():
-    pp = generate_candidates(attn_plan(window=8), allow_pallas=True)
+    pp = generate_candidates(attn_plan(window=8), engines=("xla", "pallas"))
     assert len(pp.pm) == 1
     (vid, cands), = pp.pm.items()
     names = {c.name for c in cands}
@@ -50,14 +50,14 @@ def test_multi_candidate_virtual_node():
 
 def test_largest_pattern_matches_first():
     """After fusion the 3-op chain matches, not the single-op sdpa."""
-    pp = generate_candidates(attn_plan(window=8), allow_pallas=True)
+    pp = generate_candidates(attn_plan(window=8), engines=("xla", "pallas"))
     (vid, cands), = pp.pm.items()
     assert pp.nodes[vid].attrs["pattern"] == "fused_attention"
 
 
 def test_materialize_choice_roundtrip():
-    pp = generate_candidates(attn_plan(window=8), allow_pallas=True)
-    choices, report = select_candidates(pp, SYS, allow_pallas=True)
+    pp = generate_candidates(attn_plan(window=8), engines=("xla", "pallas"))
+    choices, report = select_candidates(pp, SYS, engines=("xla", "pallas"))
     concrete = materialize_choice(pp, choices)
     assert not any(n.virtual for n in concrete.topo())
     assert len(report) == 1
@@ -68,7 +68,7 @@ def test_materialize_choice_roundtrip():
 # --------------------------------------------------------------------------
 
 def test_partition_inserted_for_pr_op():
-    pp = generate_candidates(attn_plan(), allow_pallas=False)
+    pp = generate_candidates(attn_plan(), engines=("xla",))
     out = add_data_parallelism(pp)
     stats = partition_stats(out)
     assert stats["partition"] >= 1
@@ -191,7 +191,7 @@ def test_fit_recovers_polynomial():
 def test_fitted_model_changes_selection():
     """§6.3: the learned weights drive argmin selection at virtual nodes."""
     plan = attn_plan(window=8)
-    pp = generate_candidates(plan, allow_pallas=True)
+    pp = generate_candidates(plan, engines=("xla", "pallas"))
     # craft a model that makes banded absurdly expensive
     bad = CostModel()
     feats = ("f_compute", "f_memory", "f_network", "tokens_m", "width_k")
@@ -199,5 +199,5 @@ def test_fitted_model_changes_selection():
     w = np.zeros(n_phi)
     w[0] = 1e9
     bad.weights["sdpa_banded_xla"] = w
-    choices, report = select_candidates(pp, SYS, bad, allow_pallas=True)
+    choices, report = select_candidates(pp, SYS, bad, engines=("xla", "pallas"))
     assert all(c.name != "attn_banded" for c in choices.values())

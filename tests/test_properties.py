@@ -2,6 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dependency: property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.buffering import partition_chains
@@ -63,8 +68,9 @@ def test_inference_is_idempotent(p):
 
 @given(dense_plan(), st.booleans())
 @settings(**SETTINGS)
-def test_candidate_generation_total_and_acyclic(p, allow_pallas):
-    out = generate_candidates(rewrite(p, CAT), allow_pallas=allow_pallas)
+def test_candidate_generation_total_and_acyclic(p, with_pallas):
+    engines = ("xla", "pallas") if with_pallas else ("xla",)
+    out = generate_candidates(rewrite(p, CAT), engines=engines)
     seen = set(out.inputs)
     for n in out.topo():                      # topological: inputs precede
         assert all(i in seen for i in n.inputs), n.id
