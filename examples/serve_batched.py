@@ -1,5 +1,6 @@
-"""Batched serving example: prefill a batch of prompts, decode with KV
-caches (ring-buffer caches for gemma3's sliding-window layers).
+"""Batched serving example over the async runtime: mixed-length prompts,
+bucketed admission, continuous batching, plan-seeded KV pool (qwen3's dense
+attention path) and the decode-replay fallback (rwkv's recurrent state).
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -7,12 +8,14 @@ from repro.launch import serve as serve_mod
 
 
 def main():
-    print("== gemma3 (local:global attention, ring-buffer local caches) ==")
-    serve_mod.main(["--arch", "gemma3-27b", "--smoke", "--batch", "2",
-                    "--prompt-len", "12", "--gen", "12", "--ring-local"])
-    print("\n== rwkv6 (attention-free, O(1) state) ==")
-    serve_mod.main(["--arch", "rwkv6-3b", "--smoke", "--batch", "2",
-                    "--prompt-len", "12", "--gen", "12"])
+    print("== qwen3 (dense GQA: planned prefill seeds the KV pool) ==")
+    serve_mod.main(["--arch", "qwen3-0.6b", "--smoke", "--requests", "6",
+                    "--prompt-lens", "5,12,8", "--gen", "12",
+                    "--max-batch", "3", "--max-seq", "64"])
+    print("\n== rwkv6 (attention-free, O(1) state: replay fallback) ==")
+    serve_mod.main(["--arch", "rwkv6-3b", "--smoke", "--requests", "4",
+                    "--prompt-lens", "6,10", "--gen", "10",
+                    "--max-batch", "2", "--max-seq", "64"])
 
 
 if __name__ == "__main__":

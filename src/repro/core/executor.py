@@ -265,10 +265,20 @@ def _prep(ctx, node, q, k):
                      rope_theta=node.attrs.get("rope_theta", 10000.0))
 
 
+def _emit_kv(ctx, node, k, v):
+    """KV export hook: inside a ``collect_kv`` scan, sdpa impls append their
+    prepped K (post qk-norm/RoPE — exactly what the decode cache stores) and
+    raw V to the sink the scan body planted in ``ctx.aux``."""
+    sink = ctx.aux.get("kv_sink")
+    if sink is not None and node.attrs.get("emit_kv"):
+        sink.append((k, v))
+
+
 @impl("sdpa_xla")
 def _i_sdpa(ctx, args, node):
     q, k, v = args[0]
     q, k = _prep(ctx, node, q, k)
+    _emit_kv(ctx, node, k, v)
     return A.sdpa_full(q, k, v, causal=node.attrs.get("causal", True),
                        window=node.attrs.get("window", 0) or 0)
 
@@ -277,6 +287,7 @@ def _i_sdpa(ctx, args, node):
 def _i_banded(ctx, args, node):
     q, k, v = args[0]
     q, k = _prep(ctx, node, q, k)
+    _emit_kv(ctx, node, k, v)
     return A.sdpa_banded(q, k, v, window=node.attrs.get("window", 0) or 0,
                          causal=node.attrs.get("causal", True))
 
@@ -285,6 +296,7 @@ def _i_banded(ctx, args, node):
 def _i_flash(ctx, args, node):
     q, k, v = args[0]
     q, k = _prep(ctx, node, q, k)
+    _emit_kv(ctx, node, k, v)
     return A.sdpa_flash(q, k, v, causal=node.attrs.get("causal", True),
                         window=node.attrs.get("window", 0) or 0,
                         interpret=ctx.interpret)
@@ -434,11 +446,16 @@ def _i_scan(ctx, args, node):
     in_names = list(sub.inputs.keys())
     extra_env = dict(zip(in_names[1:], extras))
     remat = node.attrs.get("remat", "none")
+    collect_kv = bool(node.attrs.get("collect_kv"))
 
     def body(carry, layer_p):
-        ctx2 = replace(ctx, scope=layer_p)
+        # a fresh sink per trace: emit_kv sdpa impls append (K, V) in subplan
+        # topo order; lax.scan stacks them over layers as ys
+        sink: list = []
+        aux = {**ctx.aux, "kv_sink": sink} if collect_kv else ctx.aux
+        ctx2 = replace(ctx, scope=layer_p, aux=aux)
         outs = run_plan(sub, ctx2, {in_names[0]: carry, **extra_env})
-        return outs[0], None
+        return outs[0], (tuple(sink) if collect_kv else None)
 
     if remat and remat != "none":
         policy = {
@@ -448,9 +465,18 @@ def _i_scan(ctx, args, node):
         }.get(remat)
         body = jax.checkpoint(body, policy=policy, prevent_cse=False)
 
-    y, _ = jax.lax.scan(body, carry0, p_stack,
-                        unroll=node.attrs.get("unroll", 1))
+    y, ys = jax.lax.scan(body, carry0, p_stack,
+                         unroll=node.attrs.get("unroll", 1))
+    if collect_kv:
+        # (carry, ((K, V), ...)) — K/V stacked to (layers, B, S, KV, D),
+        # exactly the decode cache layout; tuple_get nodes project the pair
+        return (y, ys)
     return y
+
+
+@impl("tuple_get_xla")
+def _i_tuple_get(ctx, args, node):
+    return args[0][node.attrs["index"]]
 
 
 @impl("map")

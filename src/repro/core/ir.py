@@ -278,6 +278,29 @@ def count_nodes(plan) -> int:
 # this is what keys the plan cache (see ``core/plan_cache.py``).
 
 
+def _const_bytes(c) -> bytes:
+    """Process-stable bytes for one code const: nested code objects recurse
+    (their ``repr`` embeds a memory address), frozensets sort (literal
+    ``in {...}`` membership sets iterate in PYTHONHASHSEED order), tuples
+    recurse element-wise."""
+    if hasattr(c, "co_code"):
+        return _code_bytes(c)
+    if isinstance(c, frozenset):
+        return b"fs{" + b",".join(sorted(_const_bytes(x) for x in c)) + b"}"
+    if isinstance(c, tuple):
+        return b"t(" + b",".join(_const_bytes(x) for x in c) + b")"
+    return repr(c).encode()
+
+
+def _code_bytes(code) -> bytes:
+    """Process-stable byte representation of a code object: bytecode plus
+    canonicalized consts.  Anything repr-unstable across processes (nested
+    code objects' addresses, frozenset iteration order) would make plan ids
+    differ between runs and defeat the persisted plan cache."""
+    return b"\x00".join([code.co_code] +
+                        [_const_bytes(c) for c in code.co_consts])
+
+
 def _canon(v):
     """Deterministic, hash-stable form of an attr value."""
     if isinstance(v, dict):
@@ -300,7 +323,7 @@ def _canon(v):
         code = getattr(v, "__code__", None)
         tag = getattr(v, "__qualname__", getattr(v, "__name__", repr(v)))
         if code is not None:
-            h = hashlib.sha256(code.co_code + repr(code.co_consts).encode())
+            h = hashlib.sha256(_code_bytes(code))
             captured = []
             try:
                 for cell in (getattr(v, "__closure__", None) or ()):
@@ -598,7 +621,40 @@ def standard_catalog() -> FunctionCatalog:
         if out_t is not None and isinstance(out_t, TensorT) and out_t.shape != t.shape:
             raise ValidationError(
                 f"scan_layers: carry {t.shape} != subplan out {out_t.shape}")
-        return t
+        if not attrs.get("collect_kv"):
+            return t
+        # KV-collecting scan (serving prefill): alongside the carry, the
+        # per-layer K/V of every ``emit_kv`` attention in the subplan are
+        # stacked over layers — TupleT((carry, ((K, V), ...))) — so the
+        # serving runtime seeds its KV pool from the planned forward instead
+        # of replaying the prompt through decode_step.
+        kv_elems = []
+        n = attrs["n_layers"]
+        b = t.dim("batch") if t.has_dim("batch") else int(t.shape[0])
+        s = t.dim("seq") if t.has_dim("seq") else int(t.shape[1])
+        for node in sub.topo():
+            if node.op in ("attention", "sdpa") and node.attrs.get("emit_kv"):
+                kv_t = TensorT(
+                    (n, b, s, node.attrs["kv_heads"], node.attrs["head_dim"]),
+                    t.dtype,
+                    ("layers", "batch", "seq", "kv_heads", "head_dim"))
+                kv_elems.append(TupleT((kv_t, kv_t)))
+        if not kv_elems:
+            raise ValidationError(
+                "scan_layers collect_kv=True but the subplan has no "
+                "emit_kv attention node")
+        return TupleT((t, TupleT(tuple(kv_elems))))
+
+    @cat.op("tuple_get", n_inputs=1, required_attrs=("index",))
+    def _tuple_get(ins, attrs, sub):
+        tt = ins[0]
+        if not isinstance(tt, TupleT):
+            raise ValidationError(f"tuple_get input must be TupleT, got {tt!r}")
+        i = int(attrs["index"])
+        if not 0 <= i < len(tt.elems):
+            raise ValidationError(
+                f"tuple_get: index {i} out of range for {tt!r}")
+        return tt.elems[i]
 
     @cat.op("map", n_inputs=1)
     def _map(ins, attrs, sub):

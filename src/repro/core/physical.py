@@ -104,6 +104,10 @@ defop("ssd_pallas", dp_cap=EX, buf_cap=SS, backend="pallas")
 
 # --- higher order
 defop("scan_layers_xla", buf_cap=B, cap_on="batch")
+# tuple projection (KV-collecting scans return (carry, kv); the serving
+# prefill plan extracts both).  Blocking for buffering purposes: the tuple
+# is produced whole by the scan.
+defop("tuple_get_xla", buf_cap=B)
 
 
 # --------------------------------------------------------------------------
@@ -261,6 +265,7 @@ DIRECT_IMPL = {
     "cross_attention": "cross_attention_xla",
     "attention": None,   # must be decomposed first; see rewrite.decompose
     "store": "store",
+    "tuple_get": "tuple_get_xla",
 }
 
 

@@ -130,6 +130,7 @@ def _pass_rewrite(ctx: PipelineContext) -> dict:
 
 @pipeline_pass("generate_candidates")
 def _pass_generate(ctx: PipelineContext) -> dict:
+    from .engines import get_engine
     ctx.pplan = generate_candidates(ctx.logical_opt, ctx.patterns,
                                     engines=ctx.options.engines)
 
@@ -143,7 +144,12 @@ def _pass_generate(ctx: PipelineContext) -> dict:
 
     nv, nc = stats(ctx.pplan)
     return {"virtual_nodes": nv, "candidates": nc,
-            "engines": list(ctx.options.engines)}
+            "engines": list(ctx.options.engines),
+            # per-engine availability gate (Engine.is_available), surfaced
+            # in the EXPLAIN report so an operator can see *why* a
+            # hardware-gated engine's candidates were not offered
+            "engine_availability": {
+                e: get_engine(e).available() for e in ctx.options.engines}}
 
 
 @pipeline_pass("select_candidates")
@@ -204,14 +210,20 @@ class StagedPhysicalPlan:
     def explain(self) -> str:
         """EXPLAIN-style report: per-pass wall time, node-count deltas, and
         the cost model's candidate choices."""
-        lines = [f"StagedPhysicalPlan {self.plan_id[:12]} "
-                 f"(engines={','.join(self.options.engines)})"]
+        avail = next((r.info["engine_availability"] for r in self.trace
+                      if "engine_availability" in r.info), None)
+        eng = ",".join(
+            self.options.engines if avail is None else
+            (f"{e}[{'up' if avail.get(e, True) else 'DOWN'}]"
+             for e in self.options.engines))
+        lines = [f"StagedPhysicalPlan {self.plan_id[:12]} (engines={eng})"]
         lines.append(f"  {'pass':<22}{'ms':>9}  {'nodes':<12}info")
         for r in self.trace:
             delta = (f"{r.nodes_before}"
                      if r.nodes_before == r.nodes_after
                      else f"{r.nodes_before} -> {r.nodes_after}")
-            info = {k: v for k, v in r.info.items() if k != "rules"}
+            info = {k: v for k, v in r.info.items()
+                    if k not in ("rules", "engine_availability")}
             lines.append(f"  {r.name:<22}{r.wall_ms:>9.2f}  {delta:<12}"
                          f"{info if info else ''}")
             for rule in r.info.get("rules", ()):

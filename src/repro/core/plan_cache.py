@@ -16,6 +16,9 @@ immutable once cached; the executor never mutates them at call time.
 """
 from __future__ import annotations
 
+import os
+import pickle
+import tempfile
 from collections import OrderedDict
 from typing import Any, Optional
 
@@ -75,6 +78,65 @@ class PlanCache:
         return (f"PlanCache(size={s['size']}/{s['maxsize']} "
                 f"hits={s['hits']} misses={s['misses']} "
                 f"hit_rate={s['hit_rate']:.2f})")
+
+
+# --------------------------------------------------------------------------
+# disk persistence: plan_id-keyed warm start
+# --------------------------------------------------------------------------
+#
+# Staged plans are content-addressed, so persisting them is safe by
+# construction: the file name *is* the plan_id, and a restart that computes
+# the same id gets the same plan (a syscat / catalog / options change
+# computes a different id and simply misses).  Used by the serving runtime
+# and launch/train for warm-started planning across process restarts.
+
+_SUFFIX = ".staged.pkl"
+
+
+def save_plan_cache(cache: PlanCache, dir_path: str) -> int:
+    """Write every cached staged plan to ``dir_path/<plan_id>.staged.pkl``
+    (atomic per entry; already-persisted ids are skipped).  Returns the
+    number of newly written entries."""
+    os.makedirs(dir_path, exist_ok=True)
+    written = 0
+    for plan_id, staged in cache._entries.items():
+        path = os.path.join(dir_path, plan_id + _SUFFIX)
+        if os.path.exists(path):
+            continue
+        fd, tmp = tempfile.mkstemp(dir=dir_path, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as fh:
+                pickle.dump(staged, fh)
+            os.replace(tmp, path)
+            written += 1
+        except Exception:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+    return written
+
+
+def load_plan_cache(dir_path: str, cache: Optional[PlanCache] = None,
+                    ) -> PlanCache:
+    """Warm-start a PlanCache from a persisted directory.  Entries load in
+    mtime order (oldest first) so LRU recency mirrors write order; corrupt
+    or unreadable files are skipped — a warm start can only help, never
+    fail the caller.  Loading counts neither hits nor misses."""
+    cache = cache if cache is not None else PlanCache()
+    if not os.path.isdir(dir_path):
+        return cache
+    entries = [e for e in os.scandir(dir_path) if e.name.endswith(_SUFFIX)]
+    entries.sort(key=lambda e: e.stat().st_mtime)
+    for e in entries:
+        plan_id = e.name[:-len(_SUFFIX)]
+        if plan_id in cache:
+            continue
+        try:
+            with open(e.path, "rb") as fh:
+                cache.insert(plan_id, pickle.load(fh))
+        except Exception:
+            continue
+    return cache
 
 
 # process-wide default, shared by every entry point (adil.Analysis.compile,

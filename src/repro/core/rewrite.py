@@ -49,7 +49,8 @@ def _decompose_attention(node: Node):
     base = _carry(node)
     proj = {**base, **{k: a[k] for k in ("heads", "kv_heads", "head_dim")}}
     sdpa = dict(proj)
-    for k in ("causal", "window", "qk_norm", "rope", "rope_theta", "sink"):
+    for k in ("causal", "window", "qk_norm", "rope", "rope_theta", "sink",
+              "emit_kv"):
         if k in a:
             sdpa[k] = a[k]
     return [

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from ..configs import SHAPES, get_config, get_smoke_config
 from ..core.executor import plan_and_compile
 from ..core.ir import SystemCatalog
+from ..core.plan_cache import (default_plan_cache, load_plan_cache,
+                               save_plan_cache)
 from ..data.pipeline import DataConfig, PrefetchPipeline
 from ..models import build_model
 from ..models.lm import CATALOG
@@ -47,6 +49,9 @@ def main(argv=None):
     ap.add_argument("--engines", default="xla",
                     help="comma-separated engine names the planner may use "
                          "(registry: xla, pallas)")
+    ap.add_argument("--plan-cache-dir", default=None,
+                    help="persist the plan cache here and warm-start "
+                         "planning from it on relaunch")
     ap.add_argument("--explain", action="store_true",
                     help="print the staged plan pipeline's EXPLAIN report")
     ap.add_argument("--ckpt-dir", default=None)
@@ -64,10 +69,18 @@ def main(argv=None):
 
     plan = model.build_plan(args.batch, args.seq, mode="train")
     # planned through the content-hashed plan cache: re-launching the same
-    # workload (or rebuilding the step in-process) reuses the staged plan
+    # workload (or rebuilding the step in-process) reuses the staged plan;
+    # with --plan-cache-dir the cache warm-starts across process restarts
+    pc = default_plan_cache()
+    if args.plan_cache_dir:
+        load_plan_cache(args.plan_cache_dir, pc)
     fwd = plan_and_compile(plan, CATALOG, syscat, buffering=args.buffering,
                            global_batch=args.batch,
                            engines=tuple(args.engines.split(",")))
+    if args.plan_cache_dir:
+        n = save_plan_cache(pc, args.plan_cache_dir)
+        print(f"[train] plan cache: {pc.stats()['hits']} hits, "
+              f"persisted {n} new staged plan(s) to {args.plan_cache_dir}")
     print(f"[train] plan {fwd.plan_id[:12]} choices: "
           f"{[(r['pattern'], r['chosen']) for r in fwd.report]}")
     if args.explain:

@@ -250,6 +250,63 @@ def decode_step(model: LM, params, cache, tokens, index, *,
     return logits, new_cache
 
 
+def decode_step_batched(model: LM, params, cache, tokens, indices, *,
+                        ring_local: bool = False):
+    """Continuous-batching decode: one token per batch slot at a **per-slot**
+    position.  tokens: (B, 1) int32; indices: (B,) int32 — slot b decodes
+    position indices[b].  Returns (logits (B, 1, V), new_cache).
+
+    Implemented as a vmap of :func:`decode_step` over the batch axis (every
+    cache leaf carries batch at axis 1), so slots at different sequence
+    positions — the continuous batch after joins/leaves — share one jitted
+    step.  The per-slot cache writes lower to batched dynamic slices."""
+
+    def one(cache_b, tok, idx):
+        c = jax.tree.map(lambda x: x[:, None], cache_b)   # re-add batch dim
+        logits, new_c = decode_step(model, params, c, tok[None], idx,
+                                    ring_local=ring_local)
+        return logits[0], jax.tree.map(lambda x: x[:, 0], new_c)
+
+    return jax.vmap(one, in_axes=(1, 0, 0), out_axes=(0, 1))(
+        cache, tokens, indices)
+
+
+def attn_block_indices(group) -> list:
+    """Block indices within a :class:`~repro.models.lm.Group` whose cache
+    entries are attention K/V — the blocks a ``prefill_kv`` plan emits, in
+    emission order (subplan topo order == block order)."""
+    return [i for i, blk in enumerate(group.blocks)
+            if blk.kind in ("attn_mlp", "attn_moe")]
+
+
+def seed_cache_from_prefill(model: LM, cache, kv_groups, prompt_len: int, *,
+                            slot=None):
+    """Write a ``prefill_kv`` plan's K/V outputs into a decode cache.
+
+    ``kv_groups``: one entry per model group — a tuple over emitting blocks
+    of (K, V) stacked as (layers, B, bucket, KV, D), i.e. the plan outputs
+    ``(kv_g0, kv_g1, ...)`` of ``build_plan(mode="prefill_kv")``.  With
+    ``slot=None`` the prefill batch must match the cache batch and all rows
+    are seeded; with an int ``slot`` the prefill must be batch-1 and lands in
+    that cache row (the KV-pool join path).  Returns the updated cache."""
+    new_cache = {g: dict(c) for g, c in cache.items()}
+    for g, kv_g in zip(model.groups, kv_groups):
+        gc = new_cache[g.name]
+        for bi, (k, v) in zip(attn_block_indices(g), kv_g):
+            if f"b{bi}_ksc" in gc or gc[f"b{bi}_k"].shape[2] < prompt_len:
+                raise ValueError(
+                    "prefill_kv seeding needs full-length, unquantized "
+                    "caches (no ring_local/quantize_kv)")
+            for key, val in ((f"b{bi}_k", k), (f"b{bi}_v", v)):
+                leaf = gc[key]
+                val = val[:, :, :prompt_len].astype(leaf.dtype)
+                if slot is None:
+                    gc[key] = leaf.at[:, :, :prompt_len].set(val)
+                else:
+                    gc[key] = leaf.at[:, slot, :prompt_len].set(val[:, 0])
+    return new_cache
+
+
 def prefill(model: LM, params, tokens, max_seq: int, *,
             frontend_embeds=None, ring_local: bool = False):
     """Sequential prefill via decode_step (small-scale serving example; the

@@ -214,7 +214,8 @@ class LM:
         return params, specs
 
     # -- logical plan ---------------------------------------------------------
-    def _block_nodes(self, sub: Plan, x: str, i: int, blk: Block) -> str:
+    def _block_nodes(self, sub: Plan, x: str, i: int, blk: Block,
+                     emit_kv: bool = False) -> str:
         cfg = self.cfg
         shared = blk.kind == "shared_attn"
         pp = "b" + str(i)
@@ -229,7 +230,8 @@ class LM:
             att = sub.add("attention", [h], {
                 "pp": (f"{pp}_attn",), **_attn_cfg(cfg),
                 "causal": blk.causal, "window": blk.window,
-                "rope_theta": cfg.rope_theta})
+                "rope_theta": cfg.rope_theta,
+                **({"emit_kv": True} if emit_kv else {})})
             x = sub.add("residual_add", [x, att])
             if blk.cross:
                 hx = norm(x, "lnx")
@@ -286,7 +288,8 @@ class LM:
         raise ValueError(blk.kind)
 
     def _group_subplan(self, g: Group, batch: int, seq: int,
-                       with_memory: bool = False) -> Plan:
+                       with_memory: bool = False,
+                       emit_kv: bool = False) -> Plan:
         cfg = self.cfg
         sub = Plan(name=f"{cfg.name}_{g.name}")
         sub.add_input("h", TensorT((batch, seq, cfg.d_model), cfg.dtype,
@@ -297,13 +300,35 @@ class LM:
                                             ("batch", "seq", "embed")))
         x = "h"
         for i, blk in enumerate(g.blocks):
-            x = self._block_nodes(sub, x, i, blk)
+            x = self._block_nodes(sub, x, i, blk, emit_kv=emit_kv)
         sub.set_outputs(x)
         return sub
 
+    def supports_prefill_kv(self) -> bool:
+        """True when the whole serving cache is attention K/V — i.e. a
+        ``prefill_kv`` plan captures the *entire* decode state.  Recurrent
+        families (mamba/rwkv) and frontend/enc-dec models carry extra state
+        the planned forward does not expose yet; the serving runtime falls
+        back to decode replay for those."""
+        return self.cfg.family in ("dense", "moe") and \
+            self.cfg.frontend == "none"
+
     def build_plan(self, batch: int, seq: int, mode: str = "train") -> Plan:
-        """The workload's logical plan (ADIL analysis block analogue)."""
+        """The workload's logical plan (ADIL analysis block analogue).
+
+        ``mode="prefill_kv"`` is the serving prefill: like ``prefill`` but
+        every attention carries ``emit_kv`` and every scan group collects the
+        per-layer K/V as an extra plan output — (logits, kv_g0, kv_g1, ...)
+        — so the KV cache is seeded directly from the planned forward
+        instead of replaying the prompt through ``decode_step``."""
         cfg = self.cfg
+        collect_kv = mode == "prefill_kv"
+        if collect_kv and not self.supports_prefill_kv():
+            raise ValueError(
+                f"prefill_kv plans need an attention-only decode state; "
+                f"{cfg.name} (family={cfg.family}, frontend={cfg.frontend}) "
+                f"carries recurrent/frontend state — use mode='prefill' and "
+                f"decode replay")
         if cfg.family == "encdec":
             return self._build_encdec_plan(batch, seq, mode)
         plan = Plan(name=f"{cfg.name}-{mode}")
@@ -320,12 +345,17 @@ class LM:
                 TensorT((batch, n_front, cfg.d_model), cfg.dtype,
                         ("batch", "seq", "embed")))
             x = plan.add("concat_seq", [front, x], {"axis": 1})
+        kv_outs = []
         for g in self.groups:
-            sub = self._group_subplan(g, batch, seq)
+            sub = self._group_subplan(g, batch, seq, emit_kv=collect_kv)
             x = plan.add("scan_layers", [x], {
                 "n_layers": g.count, "pp": (g.name,),
                 "param_group": g.name, "remat": cfg.remat,
-                "unroll": cfg.scan_unroll}, subplan=sub)
+                "unroll": cfg.scan_unroll,
+                **({"collect_kv": True} if collect_kv else {})}, subplan=sub)
+            if collect_kv:
+                kv_outs.append(plan.add("tuple_get", [x], {"index": 1}))
+                x = plan.add("tuple_get", [x], {"index": 0})
         x = plan.add("rmsnorm", [x], {"pp": ("final_norm",)})
         logits = plan.add("unembed", [x], {"pp": ("embed",),
                                            "vocab": cfg.padded_vocab,
@@ -338,7 +368,8 @@ class LM:
             plan.set_outputs(out)
         else:
             out = plan.add("store", [logits])
-            plan.set_outputs(out)
+            kv_stores = [plan.add("store", [k]) for k in kv_outs]
+            plan.set_outputs(out, *kv_stores)
         return plan
 
     def _build_encdec_plan(self, batch: int, seq: int, mode: str) -> Plan:

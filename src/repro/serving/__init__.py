@@ -1,0 +1,20 @@
+"""Async serving runtime over the plan cache (continuous batching).
+
+Request flow:  admission (bucket → cached plan) → scheduler (join/leave the
+decode batch at token boundaries) → planned prefill seeds the paged KV pool
+→ batched decode.  See ARCHITECTURE.md § "Serving runtime".
+"""
+from .admission import AdmissionController, bucket_len
+from .kv_pool import PagedKVPool, PageTable
+from .metrics import RequestMetrics, ServingMetrics
+from .runtime import (AsyncServingRuntime, ServeRequest, ServeResult,
+                      serve_sequential)
+from .scheduler import ContinuousBatchScheduler, SlotState
+
+__all__ = [
+    "AdmissionController", "bucket_len",
+    "PagedKVPool", "PageTable",
+    "RequestMetrics", "ServingMetrics",
+    "AsyncServingRuntime", "ServeRequest", "ServeResult", "serve_sequential",
+    "ContinuousBatchScheduler", "SlotState",
+]

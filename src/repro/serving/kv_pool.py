@@ -1,0 +1,186 @@
+"""Preallocated paged KV-cache pool with per-request page tables.
+
+The pool allocates the full decode cache **once** — batch axis =
+``n_slots``, sequence axis = ``max_seq`` — and batch-membership changes are
+pure bookkeeping: a joining request claims a free slot and its prefill K/V
+is written into that slot's rows; a leaving request only returns its slot
+and pages.  Nothing is reallocated, so the jitted batched decode step keeps
+its shapes for the lifetime of the runtime.
+
+Sequence capacity is accounted in fixed-size **pages**: a request holds
+``ceil(tokens / page_size)`` pages from a global budget, recorded in its
+:class:`PageTable`, and acquires its next page lazily as decode crosses a
+page boundary.  Pages are slot-local — physical page ``(slot, j)`` backs
+logical page ``j`` — which keeps every per-request cache region contiguous
+(attention needs no gather; a deliberate simplification vs fully scattered
+vLLM-style paging) while still giving the admission side a token-granular
+occupancy signal: with ``page_budget`` below ``n_slots * pages_per_slot``
+the pool refuses joins on memory pressure even when slots are free.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from ..models.decode import attn_block_indices, init_cache
+
+
+@dataclass
+class PageTable:
+    """Logical→physical page map for one request (pages are slot-local)."""
+
+    request_id: object
+    slot: int
+    page_size: int
+    pages: list = field(default_factory=list)   # [(slot, j), ...] in order
+
+    @property
+    def n_tokens_capacity(self) -> int:
+        return len(self.pages) * self.page_size
+
+    def covers(self, n_tokens: int) -> bool:
+        return n_tokens <= self.n_tokens_capacity
+
+
+class PagedKVPool:
+    def __init__(self, model, n_slots: int, max_seq: int, *,
+                 page_size: int = 16, page_budget: int | None = None):
+        if n_slots < 1 or max_seq < 1 or page_size < 1:
+            raise ValueError("n_slots, max_seq, page_size must be >= 1")
+        self.model = model
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.page_size = page_size
+        self.pages_per_slot = math.ceil(max_seq / page_size)
+        total = n_slots * self.pages_per_slot
+        self.page_budget = total if page_budget is None else \
+            min(page_budget, total)
+        # the one allocation: full-length, unquantized caches (prefill_kv
+        # seeding and per-slot decode positions need non-ring layouts)
+        self.cache = init_cache(model, n_slots, max_seq)
+        self._free_slots = list(range(n_slots))
+        self._tables: dict = {}      # request_id -> PageTable
+        self.pages_in_use = 0
+        # jitted write paths with a *traced* slot index: one XLA program per
+        # prefill bucket (seed) / one total (adopt), instead of an eager
+        # recompile per (slot, prompt_len) combination on every join.  The
+        # pool cache is donated so the update aliases in place on backends
+        # that support donation (CPU ignores it) instead of copying the
+        # whole pool on every join.
+        self._seed_jit = jax.jit(self._seed_impl, donate_argnums=0)
+        self._adopt_jit = jax.jit(self._adopt_impl, donate_argnums=0)
+
+    # -- admission-facing capacity -----------------------------------------
+    def pages_for(self, n_tokens: int) -> int:
+        return max(1, math.ceil(n_tokens / self.page_size))
+
+    def can_admit(self, n_tokens: int) -> bool:
+        if n_tokens > self.max_seq:
+            return False
+        return bool(self._free_slots) and \
+            self.pages_in_use + self.pages_for(n_tokens) <= self.page_budget
+
+    # -- page-table lifecycle ----------------------------------------------
+    def alloc(self, request_id, n_tokens: int) -> PageTable | None:
+        """Claim a slot + the pages covering ``n_tokens`` (the prompt).
+        Returns None when out of slots or pages (caller keeps queueing)."""
+        if request_id in self._tables:
+            raise ValueError(f"request {request_id!r} already in pool")
+        if not self.can_admit(n_tokens):
+            return None
+        slot = self._free_slots.pop(0)
+        n_pages = self.pages_for(n_tokens)
+        pt = PageTable(request_id, slot, self.page_size,
+                       [(slot, j) for j in range(n_pages)])
+        self._tables[request_id] = pt
+        self.pages_in_use += n_pages
+        return pt
+
+    def extend(self, request_id, n_tokens: int) -> bool:
+        """Grow a request's page table to cover ``n_tokens`` (decode crossing
+        a page boundary).  False when the budget or the slot is exhausted —
+        the runtime must finish/evict the request."""
+        pt = self._tables[request_id]
+        if pt.covers(n_tokens):
+            return True
+        if n_tokens > self.max_seq:
+            return False
+        need = self.pages_for(n_tokens) - len(pt.pages)
+        if self.pages_in_use + need > self.page_budget:
+            return False
+        start = len(pt.pages)
+        pt.pages.extend((pt.slot, j) for j in range(start, start + need))
+        self.pages_in_use += need
+        return True
+
+    def free(self, request_id) -> int:
+        """Release a request's slot and pages; returns the freed slot."""
+        pt = self._tables.pop(request_id)
+        self.pages_in_use -= len(pt.pages)
+        self._free_slots.append(pt.slot)
+        self._free_slots.sort()
+        return pt.slot
+
+    def table(self, request_id) -> PageTable:
+        return self._tables[request_id]
+
+    # -- data path ----------------------------------------------------------
+    def _seed_impl(self, cache, kv_groups, slot):
+        new = {g: dict(c) for g, c in cache.items()}
+        for g, kv_g in zip(self.model.groups, kv_groups):
+            gc = new[g.name]
+            for bi, (k, v) in zip(attn_block_indices(g), kv_g):
+                for key, val in ((f"b{bi}_k", k), (f"b{bi}_v", v)):
+                    leaf = gc[key]
+                    starts = (0, slot) + (0,) * (leaf.ndim - 2)
+                    gc[key] = jax.lax.dynamic_update_slice(
+                        leaf, val.astype(leaf.dtype), starts)
+        return new
+
+    def _adopt_impl(self, cache, cache1, slot):
+        def upd(leaf, src):
+            starts = (0, slot) + (0,) * (leaf.ndim - 2)
+            return jax.lax.dynamic_update_slice(
+                leaf, src.astype(leaf.dtype), starts)
+        return jax.tree.map(upd, cache, cache1)
+
+    def seed(self, request_id, kv_groups, prompt_len: int) -> int:
+        """Write a batch-1 ``prefill_kv`` plan output into the request's
+        slot; returns the slot.  The full bucket (prompt + right padding) is
+        written: padded positions are never read — decode overwrites
+        position p before the valid mask reaches it — and a fixed write
+        extent keeps this a single compiled program per bucket.  O(bucket)
+        data movement — the join cost."""
+        pt = self._tables[request_id]
+        for g, kv_g in zip(self.model.groups, kv_groups):
+            for _bi, (k, _v) in zip(attn_block_indices(g), kv_g):
+                if f"b{_bi}_ksc" in self.cache[g.name] or \
+                        k.shape[2] > self.max_seq:
+                    raise ValueError(
+                        "KV pool needs full-length, unquantized caches")
+        self.cache = self._seed_jit(self.cache, tuple(kv_groups),
+                                    jnp.int32(pt.slot))
+        return pt.slot
+
+    def adopt(self, request_id, cache1) -> int:
+        """Write a batch-1 decode cache (the replay-prefill fallback for
+        recurrent families) into the request's slot; returns the slot."""
+        pt = self._tables[request_id]
+        self.cache = self._adopt_jit(self.cache, cache1, jnp.int32(pt.slot))
+        return pt.slot
+
+    def occupancy(self) -> dict:
+        return {
+            "slots_used": self.n_slots - len(self._free_slots),
+            "n_slots": self.n_slots,
+            "pages_used": self.pages_in_use,
+            "page_budget": self.page_budget,
+            "page_size": self.page_size,
+            "fill": self.pages_in_use / max(self.page_budget, 1),
+        }
+
+
+__all__ = ["PagedKVPool", "PageTable", "attn_block_indices"]

@@ -1,0 +1,106 @@
+"""Serving metrics: per-request latency decomposition + runtime gauges.
+
+Per request: queue wait, TTFT (submit → first token, i.e. admission + plan
+fetch + prefill), and TPOT (mean decode seconds per generated token after
+the first).  Runtime-wide: queue-depth and pool-occupancy gauges sampled at
+every scheduler tick, plan-cache hit/miss deltas, and join/leave/reject
+counters — the signals the ISSUE's dashboards would scrape.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class RequestMetrics:
+    request_id: object
+    bucket: int = 0
+    prompt_len: int = 0
+    gen: int = 0
+    submitted_at: float = 0.0
+    joined_at: float = 0.0
+    first_token_at: float = 0.0
+    finished_at: float = 0.0
+    plan_ms: float = 0.0             # plan fetch/compile (cache hit ≈ free)
+    prefill_ms: float = 0.0
+
+    @property
+    def queue_wait_s(self) -> float:
+        return max(self.joined_at - self.submitted_at, 0.0)
+
+    @property
+    def ttft_s(self) -> float:
+        return max(self.first_token_at - self.submitted_at, 0.0)
+
+    @property
+    def tpot_s(self) -> float:
+        if self.gen <= 1:
+            return 0.0
+        return max(self.finished_at - self.first_token_at, 0.0) / \
+            (self.gen - 1)
+
+
+@dataclass
+class ServingMetrics:
+    requests: list = field(default_factory=list)   # finished RequestMetrics
+    rejected: int = 0
+    joins: int = 0
+    leaves: int = 0
+    ticks: int = 0
+    queue_depth_samples: list = field(default_factory=list)
+    pool_fill_samples: list = field(default_factory=list)
+    plan_hits: int = 0
+    plan_misses: int = 0
+
+    def observe_tick(self, queue_depth: int, pool_fill: float) -> None:
+        self.ticks += 1
+        self.queue_depth_samples.append(queue_depth)
+        self.pool_fill_samples.append(pool_fill)
+
+    def observe_plan(self, *, hit: bool) -> None:
+        if hit:
+            self.plan_hits += 1
+        else:
+            self.plan_misses += 1
+
+    def finish(self, rm: RequestMetrics) -> None:
+        self.requests.append(rm)
+        self.leaves += 1
+
+    def summary(self) -> dict:
+        rs = self.requests
+        n = len(rs)
+        mean = lambda xs: sum(xs) / len(xs) if xs else 0.0  # noqa: E731
+        total = self.plan_hits + self.plan_misses
+        return {
+            "completed": n,
+            "rejected": self.rejected,
+            "ticks": self.ticks,
+            "mean_ttft_s": mean([r.ttft_s for r in rs]),
+            "mean_tpot_s": mean([r.tpot_s for r in rs]),
+            "mean_queue_wait_s": mean([r.queue_wait_s for r in rs]),
+            "mean_queue_depth": mean(self.queue_depth_samples),
+            "max_queue_depth": max(self.queue_depth_samples, default=0),
+            "mean_pool_fill": mean(self.pool_fill_samples),
+            "plan_hits": self.plan_hits,
+            "plan_misses": self.plan_misses,
+            "plan_hit_rate": (self.plan_hits / total) if total else 0.0,
+            "generated_tokens": sum(r.gen for r in rs),
+        }
+
+    def report(self) -> str:
+        s = self.summary()
+        lines = [
+            f"[serving] {s['completed']} completed, {s['rejected']} rejected "
+            f"over {s['ticks']} ticks",
+            f"[serving] TTFT {s['mean_ttft_s'] * 1e3:.1f} ms mean; "
+            f"TPOT {s['mean_tpot_s'] * 1e3:.2f} ms/token mean; "
+            f"queue wait {s['mean_queue_wait_s'] * 1e3:.1f} ms mean",
+            f"[serving] queue depth mean {s['mean_queue_depth']:.2f} "
+            f"max {s['max_queue_depth']}; "
+            f"pool fill mean {s['mean_pool_fill']:.2f}",
+            f"[serving] plan cache: {s['plan_hits']} hits / "
+            f"{s['plan_misses']} misses "
+            f"(hit rate {s['plan_hit_rate']:.2f})",
+        ]
+        return "\n".join(lines)

@@ -1,0 +1,385 @@
+"""Async serving runtime: continuous batching over the plan cache.
+
+One :class:`AsyncServingRuntime` owns
+
+  * a **bucketed planned prefill** per power-of-two prompt bucket, fetched
+    through the content-hashed plan cache (warm buckets never re-plan) and
+    jitted once per plan_id;
+  * a fixed-width **batched decode step** (``decode_step_batched`` jitted at
+    ``max_batch``) whose slots requests join/leave at token boundaries;
+  * a :class:`~repro.serving.kv_pool.PagedKVPool` seeded **directly from the
+    planned prefill's per-layer K/V outputs** (``mode="prefill_kv"``) —
+    no decode replay of the prompt — with a replay fallback for families
+    whose decode state is not pure attention K/V (mamba/rwkv hybrids);
+  * an asyncio event loop that interleaves admission, planned prefill of
+    incoming requests, and decode of in-flight ones at token boundaries
+    (continuous batching; JAX's async dispatch pipelines the prefill and
+    decode computations it enqueues).
+
+The runtime never re-plans a warm bucket: each request's prefill goes
+through ``plan_and_compile`` against the shared plan cache, so steady-state
+traffic is 100 % cache hits (asserted by ``benchmarks/serving_throughput``).
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.executor import plan_and_compile
+from ..core.ir import SystemCatalog
+from ..core.plan_cache import (PlanCache, default_plan_cache,
+                               load_plan_cache, save_plan_cache)
+from ..models.decode import decode_step, decode_step_batched, init_cache
+from ..models.lm import CATALOG, LM
+from .admission import AdmissionController, bucket_len
+from .kv_pool import PagedKVPool
+from .metrics import RequestMetrics, ServingMetrics
+from .scheduler import ContinuousBatchScheduler
+
+
+@dataclass(frozen=True)
+class ServeRequest:
+    rid: object
+    prompt: tuple                    # token ids
+    gen: int
+    arrival: float = 0.0             # seconds after run() start
+
+    @property
+    def prompt_len(self) -> int:
+        return len(self.prompt)
+
+
+@dataclass
+class ServeResult:
+    rid: object
+    tokens: list = field(default_factory=list)
+    status: str = "ok"               # ok | rejected | truncated
+    metrics: Optional[RequestMetrics] = None
+
+
+class AsyncServingRuntime:
+    def __init__(self, model: LM, params, *, max_batch: int = 4,
+                 max_seq: int = 128, page_size: int = 16,
+                 page_budget: int | None = None,
+                 bucket_lo: int = 8, engines=("xla",),
+                 syscat: Optional[SystemCatalog] = None,
+                 plan_cache: Optional[PlanCache] = None,
+                 plan_cache_dir: Optional[str] = None,
+                 admission: Optional[AdmissionController] = None,
+                 use_prefill_kv: Optional[bool] = None):
+        self.model = model
+        self.cfg = model.cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.bucket_lo = bucket_lo
+        self.engines = tuple(engines)
+        self.syscat = syscat or SystemCatalog()
+        self.pc = plan_cache if plan_cache is not None else \
+            default_plan_cache()
+        self.plan_cache_dir = plan_cache_dir
+        if plan_cache_dir:
+            load_plan_cache(plan_cache_dir, self.pc)   # warm start
+        self.kv_mode = model.supports_prefill_kv() if use_prefill_kv is None \
+            else bool(use_prefill_kv)
+        self.pool = PagedKVPool(model, max_batch, max_seq,
+                                page_size=page_size, page_budget=page_budget)
+        self.scheduler = ContinuousBatchScheduler(max_batch)
+        self.admission = admission or AdmissionController()
+        self.metrics = ServingMetrics()
+        self._prefill_fns: dict = {}     # bucket -> (PlannedFunction, jitted)
+        self._jitted_by_plan: dict = {}  # plan_id -> jitted callable
+        # the pool cache is donated (argnums 1): on backends with donation
+        # the per-tick cache update aliases the preallocated pool instead of
+        # copying it; every call site rebinds pool.cache to the result
+        self._dstep = jax.jit(lambda p, c, t, i: decode_step_batched(
+            self.model, p, c, t, i), donate_argnums=1)
+        self._dstep1 = jax.jit(lambda p, c, t, i: decode_step(
+            self.model, p, c, t, i), donate_argnums=1)
+        self._results: dict = {}
+        self._t0 = time.perf_counter()
+
+    # -- planning ----------------------------------------------------------
+    def _now(self) -> float:
+        return time.perf_counter() - self._t0
+
+    def bucket_of(self, prompt_len: int) -> int:
+        return bucket_len(prompt_len, lo=self.bucket_lo, hi=self.max_seq)
+
+    def is_warm(self, bucket: int) -> bool:
+        return bucket in self._prefill_fns
+
+    def _plan_prefill(self, bucket: int):
+        """Fetch (or plan, on a cold bucket) the bucket's prefill through the
+        plan cache; jit once per plan_id.  The jitted function also extracts
+        the first generated token at a *traced* prompt length, so serving
+        never triggers a per-request recompile."""
+        mode = "prefill_kv" if self.kv_mode else "prefill"
+        t0 = time.perf_counter()
+        hits0 = self.pc.hits
+        plan = self.model.build_plan(1, bucket, mode=mode)
+        fwd = plan_and_compile(plan, CATALOG, self.syscat,
+                               engines=self.engines, cache=self.pc)
+        self.metrics.observe_plan(hit=self.pc.hits > hits0)
+        jitted = self._jitted_by_plan.get(fwd.plan_id)
+        if jitted is None:
+            vocab = self.cfg.vocab
+
+            def _prefill_call(p, toks, n, _f=fwd):
+                outs = _f(p, {"tokens": toks})
+                logits = outs[0] if isinstance(outs, tuple) else outs
+                row = jax.lax.dynamic_index_in_dim(logits, n - 1, axis=1,
+                                                   keepdims=False)
+                return outs, jnp.argmax(row[0, :vocab]).astype(jnp.int32)
+
+            jitted = jax.jit(_prefill_call)
+            self._jitted_by_plan[fwd.plan_id] = jitted
+        self._prefill_fns[bucket] = (fwd, jitted)
+        return fwd, jitted, (time.perf_counter() - t0) * 1e3
+
+    def warmup(self, prompt_lens: Sequence[int]) -> None:
+        """Plan + compile every bucket the trace will touch (prefill *and*
+        its pool-seed program), and trace the batched decode step, so
+        serving-time work is pure execution."""
+        for n in sorted({self.bucket_of(n) for n in prompt_lens}):
+            _, jitted, _ = self._plan_prefill(n)
+            outs, _ = jitted(self.params, jnp.zeros((1, n), jnp.int32),
+                             jnp.int32(n))
+            if self.kv_mode and self.pool.alloc("__warmup__", 1) is not None:
+                # compiling the bucket's seed program writes zero-token K/V
+                # into a scratch slot; harmless — any join overwrites it
+                self.pool.seed("__warmup__", outs[1:], n)
+                self.pool.free("__warmup__")
+        toks = jnp.zeros((self.max_batch, 1), jnp.int32)
+        idxs = jnp.zeros((self.max_batch,), jnp.int32)
+        # keep the returned cache: the input buffers were donated, and the
+        # position-0 write of token 0 is overwritten by any join
+        _, self.pool.cache = self._dstep(self.params, self.pool.cache,
+                                         toks, idxs)
+        if not self.kv_mode:
+            # trace the replay-fallback step too, so the first real
+            # request's TTFT is execution, not compilation
+            self._dstep1(self.params, init_cache(self.model, 1, self.max_seq),
+                         toks[:1], jnp.int32(0))
+
+    # -- admission ----------------------------------------------------------
+    def _reject(self, req: ServeRequest, reason: str) -> None:
+        self.metrics.rejected += 1
+        self._results[req.rid] = ServeResult(req.rid, [], "rejected", None)
+
+    def submit(self, req: ServeRequest) -> None:
+        if req.prompt_len < 1 or req.gen < 1:
+            self._reject(req, "empty prompt or zero gen")
+            return
+        if req.prompt_len + req.gen > self.max_seq:
+            self._reject(req, "exceeds max_seq")
+            return
+        try:
+            bucket = self.bucket_of(req.prompt_len)
+        except ValueError:
+            self._reject(req, "unbucketable")
+            return
+        action = self.admission.decide(
+            warm=self.is_warm(bucket),
+            queue_depth=self.scheduler.queue_depth(),
+            active=self.scheduler.n_active(), max_batch=self.max_batch)
+        if action == "reject":
+            self._reject(req, "queue full")
+            return
+        # "admit" and "queue" both enqueue; a cold bucket's head is only
+        # *planned* once the decode batch drains (scheduler-side gate)
+        self.scheduler.enqueue(req, bucket, self._now())
+
+    # -- prefill + join ------------------------------------------------------
+    def _prefill_and_join(self, req: ServeRequest, bucket: int,
+                          enqueued_at: float) -> None:
+        rm = RequestMetrics(req.rid, bucket=bucket,
+                            prompt_len=req.prompt_len, gen=req.gen,
+                            submitted_at=enqueued_at)
+        fwd, jitted, plan_ms = self._plan_prefill(bucket)
+        rm.plan_ms = plan_ms
+        t0 = time.perf_counter()
+        padded_np = np.zeros((1, bucket), np.int32)
+        padded_np[0, :req.prompt_len] = req.prompt
+        padded = jnp.asarray(padded_np)
+        outs, first_dev = jitted(self.params, padded,
+                                 jnp.int32(req.prompt_len))
+        # reserve prompt + the first decode write (position prompt_len is
+        # written by the first tick, before extend() is consulted)
+        self.pool.alloc(req.rid, req.prompt_len + 1)
+        if self.kv_mode:
+            self.pool.seed(req.rid, outs[1:], req.prompt_len)
+        else:
+            # replay fallback: families with recurrent state (mamba/rwkv)
+            # rebuild the prompt state through the cached decode path
+            c1 = init_cache(self.model, 1, self.max_seq)
+            for t in range(req.prompt_len):
+                _, c1 = self._dstep1(self.params, c1,
+                                     jnp.asarray(padded_np[:, t:t + 1]),
+                                     jnp.int32(t))
+            self.pool.adopt(req.rid, c1)
+        first = int(first_dev)
+        rm.prefill_ms = (time.perf_counter() - t0) * 1e3
+        now = self._now()
+        rm.joined_at = rm.first_token_at = now
+        st = self.scheduler.join(req, pos=req.prompt_len, tok=first,
+                                 first_out=first, now=now)
+        st.rm = rm
+        self.metrics.joins += 1
+        if st.done:                          # gen == 1: prefill was enough
+            self._finish(st, "ok")
+
+    def _try_join(self) -> bool:
+        """Fill free decode slots from the wait queues: FIFO within bucket,
+        longest-waiting-first across buckets; cold buckets only when the
+        batch has drained enough to afford planning."""
+        joined = False
+        while self.scheduler.free_slot() is not None:
+            warm = {b for b in self.scheduler.queues if self.is_warm(b)}
+            w = self.scheduler.peek_next(warm_buckets=warm)
+            if w is None and self.admission.can_plan_cold(
+                    active=self.scheduler.n_active(),
+                    max_batch=self.max_batch):
+                w = self.scheduler.peek_next()
+            if w is None:
+                break
+            if not self.pool.can_admit(w.request.prompt_len + 1):
+                break                        # memory pressure: keep queueing
+            req = self.scheduler.pop(w)
+            self._prefill_and_join(req, w.bucket, w.enqueued_at)
+            joined = True
+        return joined
+
+    # -- decode -------------------------------------------------------------
+    def _finish(self, st, status: str) -> None:
+        self.scheduler.leave(st.slot)
+        self.pool.free(st.request.rid)
+        st.rm.finished_at = self._now()
+        self.metrics.finish(st.rm)
+        self._results[st.request.rid] = ServeResult(
+            st.request.rid, list(st.out), status, st.rm)
+
+    def _decode_tick(self) -> bool:
+        """One continuous-batching step: every active slot decodes one token
+        at its own position; finished requests leave at this boundary."""
+        active = self.scheduler.active()
+        self.metrics.observe_tick(self.scheduler.queue_depth(),
+                                  self.pool.occupancy()["fill"])
+        if not active:
+            return False
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        idxs = np.zeros((self.max_batch,), np.int32)
+        for st in active:
+            toks[st.slot, 0] = st.tok
+            idxs[st.slot] = st.pos
+        logits, self.pool.cache = self._dstep(
+            self.params, self.pool.cache, jnp.asarray(toks),
+            jnp.asarray(idxs))
+        logits = np.asarray(logits)
+        for st in active:
+            st.tok = int(np.argmax(logits[st.slot, 0, :self.cfg.vocab]))
+            st.pos += 1
+            st.out.append(st.tok)
+            if st.done:
+                self._finish(st, "ok")
+            elif not self.pool.extend(st.request.rid, st.pos + 1):
+                self._finish(st, "truncated")   # page budget exhausted
+        return True
+
+    # -- event loop ----------------------------------------------------------
+    async def _submit_all(self, pending) -> None:
+        for r in pending:
+            delay = r.arrival - self._now()
+            if delay > 0:
+                await asyncio.sleep(delay)
+            self.submit(r)
+
+    async def run(self, requests: Sequence[ServeRequest],
+                  timeout_s: float = 300.0) -> list:
+        """Serve a trace of requests; returns ServeResults in input order."""
+        self._t0 = time.perf_counter()
+        pending = sorted(requests, key=lambda r: r.arrival)
+        n_expected = len(pending)
+        submitter = asyncio.ensure_future(self._submit_all(pending))
+        try:
+            while len(self._results) < n_expected:
+                if self._now() > timeout_s:
+                    raise TimeoutError(
+                        f"serving loop exceeded {timeout_s}s with "
+                        f"{len(self._results)}/{n_expected} done "
+                        f"(queue={self.scheduler.queue_depth()}, "
+                        f"active={self.scheduler.n_active()})")
+                progressed = self._try_join()
+                progressed = self._decode_tick() or progressed
+                # yield so arrivals interleave with serving; back off when
+                # idle (waiting on future arrivals)
+                await asyncio.sleep(0 if progressed else 0.0005)
+        finally:
+            submitter.cancel()
+        if self.plan_cache_dir:
+            save_plan_cache(self.pc, self.plan_cache_dir)
+        return [self._results[r.rid] for r in requests]
+
+    def serve(self, requests: Sequence[ServeRequest],
+              timeout_s: float = 300.0) -> list:
+        """Synchronous wrapper around :meth:`run`."""
+        return asyncio.run(self.run(requests, timeout_s=timeout_s))
+
+
+def serve_sequential(model: LM, params, requests: Sequence[ServeRequest], *,
+                     max_seq: int = 128, bucket_lo: int = 8,
+                     engines=("xla",), syscat=None, plan_cache=None,
+                     jit_memo: Optional[dict] = None) -> list:
+    """The sequential seed path, as a baseline: one request at a time —
+    planned (bucketed, cached) prefill for the prompt logits, prompt replay
+    through the cached decode path to build the KV cache, then
+    token-by-token decode at batch 1.  What ``launch/serve.py`` did before
+    the async runtime; kept for the throughput benchmark's comparison."""
+    syscat = syscat or SystemCatalog()
+    pc = plan_cache if plan_cache is not None else default_plan_cache()
+    cfg = model.cfg
+    # ``jit_memo`` (caller-held) keeps the jitted step/prefills warm across
+    # invocations — the benchmark warms the baseline with it so the
+    # comparison against the runtime excludes compile time on both sides
+    jitted = jit_memo if jit_memo is not None else {}
+    if "__dstep__" not in jitted:
+        jitted["__dstep__"] = jax.jit(
+            lambda p, c, t, i: decode_step(model, p, c, t, i))
+    dstep = jitted["__dstep__"]
+    results = []
+    for req in requests:
+        bucket = bucket_len(req.prompt_len, lo=bucket_lo, hi=max_seq)
+        plan = model.build_plan(1, bucket, mode="prefill")
+        fwd = plan_and_compile(plan, CATALOG, syscat, engines=engines,
+                               cache=pc)
+        jf = jitted.get(fwd.plan_id)
+        if jf is None:
+            def jf(p, toks, n, _f=fwd):
+                logits = _f(p, {"tokens": toks})
+                row = jax.lax.dynamic_index_in_dim(logits, n - 1, axis=1,
+                                                   keepdims=False)
+                return jnp.argmax(row[0, :cfg.vocab]).astype(jnp.int32)
+            jf = jitted[fwd.plan_id] = jax.jit(jf)
+        padded_np = np.zeros((1, bucket), np.int32)
+        padded_np[0, :req.prompt_len] = req.prompt
+        tok = int(jf(params, jnp.asarray(padded_np),
+                     jnp.int32(req.prompt_len)))
+        cache = init_cache(model, 1, max_seq)
+        for t in range(req.prompt_len):
+            _, cache = dstep(params, cache,
+                             jnp.asarray(padded_np[:, t:t + 1]),
+                             jnp.int32(t))
+        out = [tok]
+        for t in range(req.prompt_len, req.prompt_len + req.gen - 1):
+            lg, cache = dstep(params, cache,
+                              jnp.asarray([[tok]], jnp.int32), jnp.int32(t))
+            tok = int(jnp.argmax(lg[0, 0, :cfg.vocab]))
+            out.append(tok)
+        results.append(ServeResult(req.rid, out, "ok", None))
+    return results

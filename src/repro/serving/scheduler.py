@@ -1,0 +1,111 @@
+"""Continuous batching scheduler.
+
+The decode batch has a fixed capacity (``max_batch`` slots — the jitted
+batched decode step compiles once at that width).  Requests join a free slot
+at a token boundary after their planned prefill, decode one token per
+scheduler tick at their own sequence position, and leave at the boundary
+where their generation completes — no batch-wide barrier, no reallocation.
+
+Queueing policy: FIFO within a bucket, **longest-waiting-first across
+buckets** — the head chosen for the next free slot is the earliest-enqueued
+head among all bucket queues (ties broken by bucket for determinism).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+@dataclass
+class SlotState:
+    """One in-flight request occupying a decode-batch slot."""
+
+    request: object                  # ServeRequest
+    slot: int
+    pos: int                         # next cache position to write
+    tok: int                         # token to feed at ``pos``
+    out: list = field(default_factory=list)   # generated token ids
+    joined_at: float = 0.0
+    rm: object = None                # RequestMetrics, attached by the runtime
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.request.gen
+
+
+@dataclass
+class _Waiting:
+    request: object
+    bucket: int
+    enqueued_at: float
+    seq: int                         # arrival tiebreaker
+
+
+class ContinuousBatchScheduler:
+    def __init__(self, max_batch: int):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = max_batch
+        self.slots: list = [None] * max_batch
+        self.queues: dict = {}       # bucket -> deque[_Waiting]
+        self._seq = 0
+
+    # -- waiting side ------------------------------------------------------
+    def enqueue(self, request, bucket: int, now: float) -> None:
+        self.queues.setdefault(bucket, deque()).append(
+            _Waiting(request, bucket, now, self._seq))
+        self._seq += 1
+
+    def queue_depth(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def peek_next(self, *, warm_buckets=None) -> Optional[_Waiting]:
+        """The longest-waiting head across bucket FIFOs.  With
+        ``warm_buckets`` given, only heads whose bucket is warm qualify
+        (cold heads wait for a planning window)."""
+        best = None
+        for bucket, q in self.queues.items():
+            if not q:
+                continue
+            if warm_buckets is not None and bucket not in warm_buckets:
+                continue
+            head = q[0]
+            if best is None or (head.enqueued_at, head.seq) < \
+                    (best.enqueued_at, best.seq):
+                best = head
+        return best
+
+    def pop(self, waiting: _Waiting):
+        q = self.queues[waiting.bucket]
+        assert q[0] is waiting, "pop must take the queue head"
+        return q.popleft().request
+
+    # -- batch side --------------------------------------------------------
+    def free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return None
+
+    def join(self, request, *, pos: int, tok: int, first_out: int,
+             now: float) -> SlotState:
+        slot = self.free_slot()
+        if slot is None:
+            raise RuntimeError("no free decode slot")
+        st = SlotState(request, slot, pos, tok, [first_out], now)
+        self.slots[slot] = st
+        return st
+
+    def leave(self, slot: int) -> SlotState:
+        st = self.slots[slot]
+        if st is None:
+            raise RuntimeError(f"slot {slot} already free")
+        self.slots[slot] = None
+        return st
+
+    def active(self) -> list:
+        return [s for s in self.slots if s is not None]
+
+    def n_active(self) -> int:
+        return sum(1 for s in self.slots if s is not None)

@@ -16,7 +16,8 @@ from repro.core.ir import (HardwareSpec, Plan, SystemCatalog, TensorT,
 from repro.core.pipeline import (PASS_REGISTRY, PlanOptions, PlanPipeline,
                                  compile_staged, staged_plan_id)
 from repro.core.physical import generate_candidates
-from repro.core.plan_cache import PlanCache
+from repro.core.plan_cache import (PlanCache, load_plan_cache,
+                                   save_plan_cache)
 from repro.core.rewrite import rewrite
 
 CAT = standard_catalog()
@@ -120,6 +121,41 @@ def test_callable_attrs_hash_captured_state():
         plan_fingerprint(filter_plan(mk(3)))
 
 
+def test_callable_canonicalization_is_process_stable():
+    """Callables with nested code objects (genexprs/comprehensions) must
+    canonicalize without memory addresses — otherwise plan ids differ
+    across processes and the persisted plan cache never hits."""
+    from repro.core.ir import _canon
+    from repro.core.physical import _has_window
+
+    def with_genexpr(nodes):
+        return any(n for n in nodes if n)
+
+    for fn in (_has_window, with_genexpr, lambda xs: [x + 1 for x in xs]):
+        assert "0x" not in repr(_canon(fn)), fn
+
+
+def test_callable_canonicalization_stable_across_hash_seeds():
+    """Frozenset literals inside hashed callables (``x in {...}``) iterate
+    in PYTHONHASHSEED order; their canonical form must not — otherwise
+    plan ids differ per process and persisted warm starts never hit."""
+    import os
+    import subprocess
+    import sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = ("from repro.core.ir import _canon\n"
+            "def pred(n):\n"
+            "    return n in {'sdpa', 'attention', 'moe', 'wkv6', 'ssd'}\n"
+            "print(repr(_canon(pred)))\n")
+    outs = set()
+    for seed in ("0", "1", "2"):
+        env = {**os.environ, "PYTHONHASHSEED": seed,
+               "PYTHONPATH": os.path.join(root, "src")}
+        outs.add(subprocess.check_output(
+            [sys.executable, "-c", code], env=env).decode())
+    assert len(outs) == 1, "canonical form varies with PYTHONHASHSEED"
+
+
 def test_options_and_cost_model_part_of_staged_id():
     p = attn_plan()
     a = staged_plan_id(p, CAT, SYS, PlanOptions())
@@ -180,6 +216,104 @@ def test_patterns_and_pass_list_part_of_cache_key():
                         patterns=DEFAULT_PATTERNS[:1])
     assert s3 is not s1 and s3.plan_id != s1.plan_id
     assert cache.stats()["hits"] == 0 and cache.stats()["misses"] == 3
+
+
+def test_plan_cache_persists_and_warm_starts(tmp_path):
+    """Disk persistence keyed by plan_id (ROADMAP open item): a restarted
+    process warm-starts from the persisted directory and its first compile
+    of the same workload is a pure cache hit."""
+    d = str(tmp_path / "plans")
+    cache = PlanCache()
+    s1 = compile_staged(attn_plan(), CAT, SYS, cache=cache)
+    s2 = compile_staged(attn_plan(seq=64), CAT, SYS, cache=cache)
+    assert save_plan_cache(cache, d) == 2
+    assert save_plan_cache(cache, d) == 0      # idempotent: ids on disk
+
+    warm = load_plan_cache(d)                  # "restarted process"
+    assert len(warm) == 2
+    assert warm.stats()["hits"] == 0 and warm.stats()["misses"] == 0
+    s1b = compile_staged(attn_plan(), CAT, SYS, cache=warm)
+    assert warm.stats()["hits"] == 1 and s1b.plan_id == s1.plan_id
+    assert s1b.options == s1.options
+    assert [r.name for r in s1b.trace] == [r.name for r in s1.trace]
+    # the warm-started plan executes identically to the original
+    rng = np.random.RandomState(0)
+    params = {"attn": {
+        "wq": jnp.asarray(rng.randn(32, 32), jnp.float32),
+        "wk": jnp.asarray(rng.randn(32, 16), jnp.float32),
+        "wv": jnp.asarray(rng.randn(32, 16), jnp.float32),
+        "wo": jnp.asarray(rng.randn(32, 32), jnp.float32),
+    }}
+    x = jnp.asarray(rng.randn(2, 32, 32), jnp.float32)
+    from repro.core.executor import PlannedFunction
+    a = PlannedFunction.from_staged(s1, SYS)(params, {"h": x})
+    b = PlannedFunction.from_staged(s1b, SYS)(params, {"h": x})
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+    # a corrupt file is skipped, not fatal
+    (tmp_path / "plans" / (s2.plan_id + ".staged.pkl")).write_bytes(b"junk")
+    assert len(load_plan_cache(d)) == 1
+    # a missing directory is an empty warm start
+    assert len(load_plan_cache(str(tmp_path / "nope"))) == 0
+
+
+def test_cost_model_fit_invalidates_cached_plans():
+    """CostModel.fit changes the weight fingerprint, which is part of
+    staged_plan_id — so calibration invalidates cached plans (ROADMAP
+    plumbing, previously untested)."""
+    from repro.core.cost_model import CostModel, FEATURE_NAMES
+    p = attn_plan()
+    cm = CostModel()
+    assert cm.fingerprint() == "analytic"
+    id_analytic = staged_plan_id(p, CAT, SYS, PlanOptions(), cost_model=cm)
+    assert id_analytic == staged_plan_id(p, CAT, SYS, PlanOptions(),
+                                         cost_model=None)
+
+    feats = {k: 1.0 for k in FEATURE_NAMES}
+    cm.fit([("sdpa_xla", feats, 1e-3), ("sdpa_xla", feats, 2e-3)])
+    fp1 = cm.fingerprint()
+    assert fp1 != "analytic"
+    id_fit = staged_plan_id(p, CAT, SYS, PlanOptions(), cost_model=cm)
+    assert id_fit != id_analytic
+
+    # the cache sees calibration as a different planning problem
+    cache = PlanCache()
+    compile_staged(p, CAT, SYS, cache=cache, cost_model=None)
+    compile_staged(p, CAT, SYS, cache=cache, cost_model=cm)
+    assert cache.stats() == {**cache.stats(), "hits": 0, "misses": 2}
+    # refit with different measurements -> different fingerprint again
+    cm2 = CostModel()
+    cm2.fit([("sdpa_xla", feats, 5e-3)])
+    assert cm2.fingerprint() != fp1
+    assert staged_plan_id(p, CAT, SYS, PlanOptions(), cost_model=cm2) not in \
+        (id_analytic, id_fit)
+    # identical fits agree (content hash, not identity)
+    cm3 = CostModel()
+    cm3.fit([("sdpa_xla", feats, 5e-3)])
+    assert cm3.fingerprint() == cm2.fingerprint()
+
+
+def test_engine_availability_surfaces_in_explain():
+    """Engine.is_available is reported per engine in the EXPLAIN trace
+    (ROADMAP open item): a hardware-gated engine shows up/DOWN."""
+    from repro.core.engines import get_engine
+    staged = PlanPipeline().run(attn_plan(window=8), CAT, SYS,
+                                options=PlanOptions(
+                                    engines=("xla", "pallas")))
+    gen = next(r for r in staged.trace if r.name == "generate_candidates")
+    assert gen.info["engine_availability"] == {"xla": True, "pallas": True}
+    assert "xla[up]" in staged.explain() and "pallas[up]" in staged.explain()
+
+    pallas = get_engine("pallas")
+    old = pallas.is_available
+    pallas.is_available = lambda: False
+    try:
+        staged2 = PlanPipeline().run(attn_plan(window=8), CAT, SYS,
+                                     options=PlanOptions(
+                                         engines=("xla", "pallas")))
+        assert staged2.trace[1].info["engine_availability"]["pallas"] is False
+        assert "pallas[DOWN]" in staged2.explain()
+    finally:
+        pallas.is_available = old
 
 
 def test_lru_eviction_and_clear():

@@ -1,0 +1,380 @@
+"""Serving subsystem: bucketed admission, continuous-batching scheduler,
+paged KV pool, plan-output KV seeding, batched decode, and the async
+runtime end-to-end against the sequential seed path."""
+import asyncio
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.executor import plan_and_compile
+from repro.core.ir import SystemCatalog, TupleT, ValidationError
+from repro.core.plan_cache import PlanCache
+from repro.models import build_model
+from repro.models.decode import (attn_block_indices, decode_step,
+                                 decode_step_batched, init_cache,
+                                 seed_cache_from_prefill)
+from repro.models.lm import CATALOG
+from repro.serving import (AdmissionController, AsyncServingRuntime,
+                           ContinuousBatchScheduler, PagedKVPool,
+                           ServeRequest, bucket_len, serve_sequential)
+
+SYS = SystemCatalog()
+
+
+def smoke_model(arch="qwen3-0.6b"):
+    cfg = get_smoke_config(arch).replace(dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init_params(jax.random.key(1))
+    return cfg, model, params
+
+
+# --------------------------------------------------------------------------
+# bucket_len edge cases (ISSUE satellite)
+# --------------------------------------------------------------------------
+
+def test_bucket_len_rounds_up_to_power_of_two():
+    assert bucket_len(9) == 16
+    assert bucket_len(17) == 32
+    assert bucket_len(100) == 128
+
+
+def test_bucket_len_short_prompts_share_the_floor_bucket():
+    assert bucket_len(0) == 8
+    assert bucket_len(1) == 8
+    assert bucket_len(7, lo=8) == 8
+    assert bucket_len(3, lo=4) == 4
+
+
+def test_bucket_len_exact_power_of_two_is_its_own_bucket():
+    for n in (8, 16, 32, 64, 1024):
+        assert bucket_len(n) == n          # no promotion to the next bucket
+
+
+def test_bucket_len_max_context():
+    assert bucket_len(100, hi=128) == 128
+    with pytest.raises(ValueError):
+        bucket_len(129, hi=128)            # longer than the model's context
+    # a non-power-of-two ceiling caps the top bucket at the ceiling itself
+    assert bucket_len(100, hi=100) == 100
+    assert bucket_len(65, hi=100) == 100
+
+
+def test_bucket_len_invalid_inputs():
+    with pytest.raises(ValueError):
+        bucket_len(-1)
+    with pytest.raises(ValueError):
+        bucket_len(4, lo=0)
+
+
+# --------------------------------------------------------------------------
+# admission controller
+# --------------------------------------------------------------------------
+
+def test_admission_matrix():
+    ac = AdmissionController(max_queue=2, cold_plan_occupancy=0.5)
+    # warm buckets admit while there is queue room
+    assert ac.decide(warm=True, queue_depth=0, active=4, max_batch=4) == \
+        "admit"
+    # full queue sheds regardless of warmth
+    assert ac.decide(warm=True, queue_depth=2, active=0, max_batch=4) == \
+        "reject"
+    # cold bucket on a quiet system may plan
+    assert ac.decide(warm=False, queue_depth=0, active=1, max_batch=4) == \
+        "admit"
+    # cold bucket under load waits
+    assert ac.decide(warm=False, queue_depth=1, active=4, max_batch=4) == \
+        "queue"
+    assert ac.can_plan_cold(active=2, max_batch=4)
+    assert not ac.can_plan_cold(active=3, max_batch=4)
+
+
+# --------------------------------------------------------------------------
+# scheduler: FIFO + longest-waiting-first, token-boundary join/leave
+# --------------------------------------------------------------------------
+
+def test_scheduler_longest_waiting_first_across_buckets():
+    sch = ContinuousBatchScheduler(max_batch=2)
+
+    class R:                              # minimal request stub
+        def __init__(self, rid):
+            self.rid = rid
+            self.gen = 4
+
+    sch.enqueue(R("a"), bucket=16, now=0.0)
+    sch.enqueue(R("b"), bucket=32, now=1.0)
+    sch.enqueue(R("c"), bucket=16, now=2.0)
+    assert sch.queue_depth() == 3
+    # oldest head overall wins, regardless of bucket
+    w = sch.peek_next()
+    assert w.request.rid == "a"
+    # bucket filter: only warm buckets qualify
+    w32 = sch.peek_next(warm_buckets={32})
+    assert w32.request.rid == "b"
+    # FIFO within a bucket: popping "a" exposes "c" behind "b"
+    sch.pop(w)
+    assert sch.peek_next().request.rid == "b"
+
+    st = sch.join(R("a"), pos=5, tok=7, first_out=7, now=3.0)
+    assert sch.n_active() == 1 and st.slot == 0
+    st2 = sch.join(R("b"), pos=9, tok=1, first_out=1, now=3.0)
+    assert st2.slot == 1 and sch.free_slot() is None
+    sch.leave(0)
+    assert sch.free_slot() == 0           # slot reusable at token boundary
+
+
+# --------------------------------------------------------------------------
+# paged KV pool
+# --------------------------------------------------------------------------
+
+def test_kv_pool_pages_and_slots():
+    _, model, _ = smoke_model()
+    pool = PagedKVPool(model, n_slots=2, max_seq=32, page_size=8)
+    assert pool.pages_per_slot == 4 and pool.page_budget == 8
+    pt = pool.alloc("r1", 9)              # 9 tokens -> 2 pages
+    assert len(pt.pages) == 2 and pt.covers(16) and not pt.covers(17)
+    assert pool.pages_in_use == 2
+    # lazy growth as decode crosses a page boundary
+    assert pool.extend("r1", 17)
+    assert len(pool.table("r1").pages) == 3
+    assert not pool.extend("r1", 33)      # beyond max_seq
+    # second slot
+    assert pool.alloc("r2", 30) is not None
+    assert pool.alloc("r3", 1) is None    # out of slots
+    occ = pool.occupancy()
+    assert occ["slots_used"] == 2 and occ["pages_used"] == 7
+    slot = pool.free("r1")
+    assert slot in (0, 1) and pool.pages_in_use == 4
+    assert pool.alloc("r3", 1) is not None   # slot recycled, no realloc
+
+
+def test_kv_pool_page_budget_gates_admission():
+    _, model, _ = smoke_model()
+    pool = PagedKVPool(model, n_slots=4, max_seq=32, page_size=8,
+                       page_budget=5)
+    assert pool.alloc("a", 32) is not None        # 4 pages
+    # a free slot exists, but only 1 page remains -> memory admission holds
+    assert not pool.can_admit(9)
+    assert pool.alloc("b", 9) is None
+    assert pool.alloc("c", 8) is not None         # exactly 1 page fits
+
+
+# --------------------------------------------------------------------------
+# prefill_kv: per-layer K/V as plan outputs
+# --------------------------------------------------------------------------
+
+def test_prefill_kv_plan_types_and_structure():
+    _, model, _ = smoke_model()
+    plan = model.build_plan(1, 16, mode="prefill_kv")
+    assert len(plan.outputs) == 1 + len(model.groups)
+    from repro.core.ir import infer_types
+    infer_types(plan, CATALOG)
+    scan = next(n for n in plan.topo() if n.op == "scan_layers")
+    out_t = plan.type_of(scan.id)
+    assert isinstance(out_t, TupleT) and len(out_t.elems) == 2
+    kv_t = out_t.elems[1]
+    n_attn = len(attn_block_indices(model.groups[0]))
+    assert isinstance(kv_t, TupleT) and len(kv_t.elems) == n_attn
+    k_t = kv_t.elems[0].elems[0]
+    assert k_t.dims == ("layers", "batch", "seq", "kv_heads", "head_dim")
+    # a different plan identity than the plain prefill (separate cache entry)
+    from repro.core.ir import plan_id
+    assert plan_id(plan, CATALOG, SYS) != \
+        plan_id(model.build_plan(1, 16, mode="prefill"), CATALOG, SYS)
+
+
+def test_prefill_kv_rejected_for_recurrent_families():
+    _, model, _ = smoke_model("rwkv6-3b")
+    assert not model.supports_prefill_kv()
+    with pytest.raises(ValueError):
+        model.build_plan(1, 16, mode="prefill_kv")
+
+
+def test_collect_kv_without_emitters_fails_validation():
+    _, model, _ = smoke_model()
+    plan = model.build_plan(1, 16, mode="prefill")
+    scan = next(n for n in plan.topo() if n.op == "scan_layers")
+    scan.attrs["collect_kv"] = True       # no emit_kv attention inside
+    from repro.core.ir import infer_types
+    with pytest.raises(ValidationError):
+        infer_types(plan, CATALOG)
+
+
+@pytest.mark.parametrize("arch", [
+    "qwen3-0.6b",
+    pytest.param("gemma3-27b", marks=pytest.mark.slow),
+])
+def test_plan_seeded_cache_matches_decode_replay(arch, rng):
+    """The tentpole equivalence: seeding the KV cache from the planned
+    prefill's K/V outputs must match replaying the prompt through
+    decode_step — both in cache contents and in subsequent decode logits."""
+    cfg, model, params = smoke_model(arch)
+    b, s, max_seq = 1, 8, 16
+    tokens = jnp.asarray(rng.randint(0, cfg.vocab, (b, s)), jnp.int32)
+
+    fwd = plan_and_compile(model.build_plan(b, s, mode="prefill_kv"),
+                           CATALOG, SYS, cache=False)
+    outs = fwd(params, {"tokens": tokens})
+    logits_plan, kv_groups = outs[0], outs[1:]
+
+    cache_ref = init_cache(model, b, max_seq)
+    for t in range(s):
+        lg, cache_ref = decode_step(model, params, cache_ref,
+                                    tokens[:, t:t + 1], jnp.int32(t))
+    cache_kv = seed_cache_from_prefill(model, init_cache(model, b, max_seq),
+                                       kv_groups, s)
+    for g in model.groups:
+        for key in cache_ref[g.name]:
+            np.testing.assert_allclose(
+                np.asarray(cache_ref[g.name][key])[:, :, :s],
+                np.asarray(cache_kv[g.name][key])[:, :, :s],
+                atol=2e-4, rtol=2e-4, err_msg=f"{g.name}/{key}")
+    # prefill logits at the last prompt position == replay's last logits
+    np.testing.assert_allclose(
+        np.asarray(logits_plan[:, s - 1, :cfg.vocab]),
+        np.asarray(lg[:, 0, :cfg.vocab]), atol=2e-2, rtol=2e-2)
+    # and decode continues identically from either cache
+    tok = jnp.argmax(logits_plan[:, s - 1, :cfg.vocab],
+                     axis=-1).astype(jnp.int32)[:, None]
+    l_ref, _ = decode_step(model, params, cache_ref, tok, jnp.int32(s))
+    l_kv, _ = decode_step(model, params, cache_kv, tok, jnp.int32(s))
+    np.testing.assert_allclose(np.asarray(l_ref), np.asarray(l_kv),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_decode_step_batched_matches_per_request_decode(rng):
+    """Slots at *different* positions (the continuous batch) must decode
+    exactly as each request would alone."""
+    cfg, model, params = smoke_model()
+    B, max_seq = 3, 12
+    cache = init_cache(model, B, max_seq)
+    idx = jnp.asarray([0, 3, 7], jnp.int32)
+    toks = jnp.asarray(rng.randint(0, cfg.vocab, (B, 1)), jnp.int32)
+    lb, cb = decode_step_batched(model, params, cache, toks, idx)
+    for i in range(B):
+        c1 = jax.tree.map(lambda x: x[:, i:i + 1], cache)
+        l1, c1n = decode_step(model, params, c1, toks[i:i + 1], idx[i])
+        np.testing.assert_allclose(np.asarray(l1[0]), np.asarray(lb[i]),
+                                   atol=1e-4, rtol=1e-4)
+        for g in model.groups:
+            for key in c1n[g.name]:
+                np.testing.assert_allclose(
+                    np.asarray(c1n[g.name][key][:, 0]),
+                    np.asarray(cb[g.name][key][:, i]),
+                    atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# the async runtime end-to-end
+# --------------------------------------------------------------------------
+
+def test_runtime_matches_sequential_and_never_replans(rng):
+    cfg, model, params = smoke_model()
+    lens = [5, 12, 8, 16, 3]
+    reqs = [ServeRequest(i, tuple(rng.randint(0, cfg.vocab, n).tolist()), 8)
+            for i, n in enumerate(lens)]
+    pc = PlanCache()
+    rt = AsyncServingRuntime(model, params, max_batch=2, max_seq=64,
+                             plan_cache=pc)
+    assert rt.kv_mode
+    rt.warmup(lens)
+    misses0 = pc.stats()["misses"]
+    res = rt.serve(reqs, timeout_s=120)
+    assert [r.status for r in res] == ["ok"] * len(reqs)
+    assert pc.stats()["misses"] == misses0          # no warm-bucket re-plan
+    assert pc.stats()["hits"] >= len(reqs)
+    seq = serve_sequential(model, params, reqs, max_seq=64,
+                           plan_cache=PlanCache())
+    for a, b in zip(res, seq):
+        assert a.tokens == b.tokens and len(a.tokens) == 8
+    # metrics populated
+    s = rt.metrics.summary()
+    assert s["completed"] == len(reqs) and s["generated_tokens"] == 40
+    assert s["plan_hit_rate"] > 0
+    # pool drained after the trace
+    occ = rt.pool.occupancy()
+    assert occ["slots_used"] == 0 and occ["pages_used"] == 0
+
+
+def test_runtime_replay_fallback_for_recurrent_family(rng):
+    cfg, model, params = smoke_model("rwkv6-3b")
+    reqs = [ServeRequest(i, tuple(rng.randint(0, cfg.vocab, n).tolist()), 5)
+            for i, n in enumerate([4, 9])]
+    rt = AsyncServingRuntime(model, params, max_batch=2, max_seq=32,
+                             plan_cache=PlanCache())
+    assert not rt.kv_mode
+    rt.warmup([4, 9])
+    res = rt.serve(reqs, timeout_s=120)
+    seq = serve_sequential(model, params, reqs, max_seq=32,
+                           plan_cache=PlanCache())
+    for a, b in zip(res, seq):
+        assert a.status == "ok" and a.tokens == b.tokens
+
+
+def test_runtime_staggered_arrivals_async(rng):
+    """Late arrivals join mid-flight at token boundaries; results are
+    identical to the all-at-once trace (greedy decode is order-free)."""
+    cfg, model, params = smoke_model()
+    lens = [5, 12, 8]
+    mk = lambda arr: [                                        # noqa: E731
+        ServeRequest(i, tuple(rng2.randint(0, cfg.vocab, n).tolist()), 6,
+                     arrival=arr * i)
+        for i, n in enumerate(lens)]
+    rng2 = np.random.RandomState(7)
+    reqs0 = mk(0.0)
+    rng2 = np.random.RandomState(7)
+    reqs_lag = mk(0.01)
+    rt = AsyncServingRuntime(model, params, max_batch=2, max_seq=64,
+                             plan_cache=PlanCache())
+    rt.warmup(lens)
+    res0 = rt.serve(reqs0, timeout_s=120)
+
+    rt2 = AsyncServingRuntime(model, params, max_batch=2, max_seq=64,
+                              plan_cache=PlanCache())
+    rt2.warmup(lens)
+    res_lag = asyncio.run(rt2.run(reqs_lag, timeout_s=120))
+    for a, b in zip(res0, res_lag):
+        assert a.tokens == b.tokens
+
+
+def test_runtime_page_pressure_queues_instead_of_truncating(rng):
+    """Admission reserves prompt+1 pages (the first decode tick writes
+    position prompt_len before extend() runs): under a tight page budget a
+    request that cannot fit waits for a leaver instead of being admitted
+    and immediately truncated."""
+    cfg, model, params = smoke_model()
+    # 2 slots x 4 pages of 8 tokens, but a global budget of 5 pages:
+    # r0 (prompt 24 -> reserves 25 tokens = 4 pages) leaves 1 page, so
+    # r1 (prompt 8 -> reserves 9 tokens = 2 pages) must wait for r0
+    reqs = [
+        ServeRequest(0, tuple(rng.randint(0, cfg.vocab, 24).tolist()), 8),
+        ServeRequest(1, tuple(rng.randint(0, cfg.vocab, 8).tolist()), 8),
+    ]
+    rt = AsyncServingRuntime(model, params, max_batch=2, max_seq=32,
+                             page_size=8, page_budget=5,
+                             plan_cache=PlanCache())
+    rt.warmup([24, 8])
+    res = rt.serve(reqs, timeout_s=120)
+    assert [r.status for r in res] == ["ok", "ok"]    # nobody truncated
+    assert len(res[0].tokens) == 8 and len(res[1].tokens) == 8
+    # r1 really waited: it joined only after r0 finished
+    m0, m1 = res[0].metrics, res[1].metrics
+    assert m1.joined_at >= m0.finished_at
+
+
+def test_runtime_rejects_oversized_and_sheds_overload(rng):
+    cfg, model, params = smoke_model()
+    rt = AsyncServingRuntime(
+        model, params, max_batch=1, max_seq=32, plan_cache=PlanCache(),
+        admission=AdmissionController(max_queue=2))
+    rt.warmup([8])
+    too_long = ServeRequest("big", tuple(rng.randint(0, cfg.vocab, 40)), 8)
+    rt.submit(too_long)
+    assert rt._results["big"].status == "rejected"
+    # queue overload: capacity 2, submit 4 -> at least one rejection
+    for i in range(4):
+        rt.submit(ServeRequest(
+            i, tuple(rng.randint(0, cfg.vocab, 8).tolist()), 4))
+    assert rt.metrics.rejected >= 2      # "big" + queue-full sheds
