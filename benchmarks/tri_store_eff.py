@@ -1,0 +1,168 @@
+"""Tri-store placement efficiency: planned cross-engine placement vs naive
+per-op materialization.
+
+Both paths run the *same* tri-model analysis (scan/filter/aggregate a tweet
+table -> expand + PageRank a hashtag co-mention graph -> TF-IDF top-k over
+the tweet corpus -> join + rank) through the same ``PlanPipeline``; the only
+difference is the final rewrite rule:
+
+  * **planned** — ``place_xfers``: xfer nodes only at true engine
+    boundaries, and the cost model picks ``xfer_pin`` (value stays
+    device-resident) per boundary: AWESOME's in-memory placement;
+  * **naive**   — ``place_xfers_naive``: every store-engine operator's
+    output is materialized through the host (``xfer_spill``), the way a
+    naive federated mediator hands each engine result back per call.
+
+Spill is an exact copy, so the two paths must produce **bitwise-identical**
+results; the planned path must be **>= 2x** faster.  Run with ``--smoke``
+for the CI-sized workload.
+
+    PYTHONPATH=src python -m benchmarks.tri_store_eff [--smoke]
+"""
+import argparse
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.adil import Analysis
+from repro.core.ir import SystemCatalog, TensorT, standard_catalog
+from repro.core.rewrite import DEFAULT_PIPELINE
+from repro.stores import ColumnStore, GraphStore, TextStore, store_engines
+
+# the naive pipeline swaps only the placement rule
+NAIVE_PIPELINE = tuple(p for p in DEFAULT_PIPELINE if p != "place_xfers") \
+    + ("place_xfers_naive",)
+
+
+def build_workload(rng, *, tweets, docs, hashtags, edges, vocab, terms_hi,
+                   iters):
+    user = rng.randint(0, max(tweets // 20, 2), tweets).astype(np.int32)
+    tag = (rng.zipf(1.3, tweets) % hashtags).astype(np.int32)
+    cols = {
+        "user": user,
+        "hashtag": tag,
+        "doc": np.arange(tweets, dtype=np.int32),
+        "engagement": (rng.gamma(2.0, 12.0, tweets)).astype(np.float32),
+        "retweets": rng.randint(0, 500, tweets).astype(np.int32),
+        "ts": rng.randint(0, 1 << 20, tweets).astype(np.int32),
+    }
+    # ride-along metric columns (likes, replies, quotes, ...): the analysis
+    # never reads them, so planned placement never moves them — but naive
+    # per-op materialization round-trips the *whole* relation every call.
+    # This is AWESOME's in-memory placement argument in its purest form.
+    for i in range(28):
+        cols[f"metric{i}"] = rng.rand(tweets).astype(np.float32)
+    table = ColumnStore(cols)
+    e = rng.randint(0, hashtags, (2, edges))
+    graph = GraphStore.from_edges(e[0], e[1], hashtags, symmetric=True)
+    # the first ``docs`` tweets have indexed text (a corpus is typically a
+    # filtered slice of the relation, not 1:1 with it)
+    lens = rng.randint(3, terms_hi, docs)
+    flat = (rng.zipf(1.4, int(lens.sum())) % vocab).astype(np.int64)
+    corpus = TextStore.from_docs(np.split(flat, np.cumsum(lens)[:-1]), vocab)
+
+    cat = standard_catalog()
+    with Analysis("tri_store_eff", cat) as a:
+        tw = a.bind("tweets", table)
+        gr = a.bind("g", graph)
+        cx = a.bind("cx", corpus)
+        q = a.input("q", TensorT((vocab,), "float32", ("vocab",)))
+        t = a.op("rel_scan", tw)
+        hot = a.op("rel_filter", t, col="engagement", cmp="ge", value=25.0)
+        viral = a.op("rel_filter", hot, col="retweets", cmp="ge", value=10)
+        seeds = a.op("rel_group_agg", viral, key="hashtag",
+                     num_groups=hashtags, aggs=(("seed", "count", None),))
+        sv = a.op("col_tensor", seeds, col="seed", dim="nodes")
+        fr = a.op("graph_expand", gr, sv, hops=2)
+        pr = a.op("graph_pagerank", gr, fr, iters=iters, damping=0.85)
+        hits = a.op("text_topk", cx, q, k=64)
+        # probe the tweet relation against the top-k hits (unique build
+        # keys); unmatched rows mask out, so the per-hashtag score sum
+        # equals summing over the hits alone — but the wide joined relation
+        # is exactly the intermediate naive placement round-trips
+        j = a.op("rel_join", t, hits, left_on="doc", right_on="doc")
+        trel = a.op("rel_group_agg", j, key="hashtag", num_groups=hashtags,
+                    aggs=(("textrel", "sum", "score"),))
+        tv = a.op("col_tensor", trel, col="textrel", dim="nodes")
+        comb = a.op("residual_add", pr, tv)
+        a.store(comb)
+
+    inputs = {"tweets": table.payload(), "g": graph.payload(),
+              "cx": corpus.payload(),
+              "q": jnp.asarray(corpus.query_vector(rng.randint(0, vocab, 6)))}
+    return a, inputs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized workload (seconds, not minutes)")
+    ap.add_argument("--min-speedup", type=float, default=2.0)
+    args = ap.parse_args(argv)
+
+    rng = np.random.RandomState(0)
+    size = (dict(tweets=120_000, docs=6_000, hashtags=1024, edges=4_000,
+                 vocab=256, terms_hi=6, iters=2) if args.smoke else
+            dict(tweets=250_000, docs=30_000, hashtags=2048, edges=20_000,
+                 vocab=512, terms_hi=6, iters=3))
+    analysis, inputs = build_workload(rng, **size)
+
+    # identical engine set for both paths (no pallas: the point under test
+    # is placement, and identical impls guarantee bitwise-equal results)
+    engines = store_engines()
+    syscat = SystemCatalog()
+    planned = analysis.compile(syscat, engines=engines, cache=False)
+    naive = analysis.compile(syscat, engines=engines, cache=False,
+                             rewrite_pipeline=NAIVE_PIPELINE)
+
+    n_pin = sum(1 for r in planned.report
+                if r["pattern"] == "xfer_op" and r["chosen"] == "xfer_pin")
+    n_spill = sum(1 for n in naive.concrete.topo()
+                  if n.impl == "xfer_spill")
+    print(f"[tri_store_eff] planned: {n_pin} boundaries pinned; "
+          f"naive: {n_spill} per-op host materializations")
+
+    fp = jax.jit(lambda i: planned({}, i))
+    fn = jax.jit(lambda i: naive({}, i))
+    out_p = np.asarray(fp(inputs))
+    out_n = np.asarray(fn(inputs))
+    identical = np.array_equal(out_p, out_n)
+    print(f"[tri_store_eff] bitwise-identical results: {identical}")
+
+    # min-of-N: background noise in shared CI runners is strictly additive,
+    # so the minimum is the clean estimate of each path's true cost
+    def t_min(f, warmup=2, iters=10):
+        for _ in range(warmup):
+            jax.block_until_ready(f(inputs))
+        best = float("inf")
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(inputs))
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_planned = t_min(fp)
+    t_naive = t_min(fn)
+    speedup = t_naive / t_planned
+    emit([
+        ("tri_planned", t_planned * 1e6, f"speedup={speedup:.2f}x"),
+        ("tri_naive_per_op", t_naive * 1e6, ""),
+    ])
+    print(f"[tri_store_eff] planned {t_planned * 1e3:.1f} ms vs naive "
+          f"{t_naive * 1e3:.1f} ms -> {speedup:.2f}x")
+
+    ok = identical and speedup >= args.min_speedup
+    if not identical:
+        print("[tri_store_eff] FAIL: results differ")
+    if speedup < args.min_speedup:
+        print(f"[tri_store_eff] FAIL: speedup {speedup:.2f}x < "
+              f"{args.min_speedup:.1f}x")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,8 +20,8 @@ from dataclasses import dataclass
 from typing import Any, Optional
 
 from .executor import PlannedFunction, plan_and_compile
-from .ir import (FunctionCatalog, Plan, SystemCatalog, Type, ValidationError,
-                 infer_types)
+from .ir import (CorpusT, FunctionCatalog, GraphT, Plan, SystemCatalog,
+                 TableT, Type, ValidationError, infer_types)
 
 
 @dataclass(frozen=True)
@@ -52,6 +52,29 @@ class Analysis:
     def input(self, name: str, typ: Type) -> Var:
         self.plan.add_input(name, typ)
         return Var(name, self)
+
+    # -- native store declarations (the paper's table/graph/corpus types) ----
+    def table(self, name: str, rows: int, cols) -> Var:
+        """Declare a relational store input: ``cols`` is ``((name, dtype),
+        ...)``.  At call time the caller binds ``ColumnStore.payload()``."""
+        return self.input(name, TableT(tuple((str(c), str(d))
+                                             for c, d in cols), int(rows)))
+
+    def graph(self, name: str, nodes: int, edges: int,
+              weighted: bool = False) -> Var:
+        """Declare a CSR graph store input (``GraphStore.payload()``)."""
+        return self.input(name, GraphT(int(nodes), int(edges),
+                                       bool(weighted)))
+
+    def corpus(self, name: str, docs: int, vocab: int, postings: int) -> Var:
+        """Declare a text store input (``TextStore.payload()``)."""
+        return self.input(name, CorpusT(int(docs), int(vocab),
+                                        int(postings)))
+
+    def bind(self, name: str, store) -> Var:
+        """Declare a store input directly from a Store object (its ``type``
+        carries the size metadata the planner prices movement with)."""
+        return self.input(name, store.type)
 
     def op(self, op_name: str, *inputs, subplan: Optional[Plan] = None,
            **attrs) -> Var:

@@ -129,6 +129,8 @@ class _Parser:
     def expr(self, lhs: str) -> Var:
         head = self.next("ident")
         self.next("punct", "(")
+        if head in ("table", "graph", "corpus"):
+            return self._store_decl(head, lhs)
         if head == "input":
             shape = tuple(self.value())
             self.next("punct", ",")
@@ -167,6 +169,31 @@ class _Parser:
             self.accept(",")
         self.next("punct", ")")
         return self.analysis.op(head, *args, **kwargs)
+
+    def _store_decl(self, kind: str, lhs: str) -> Var:
+        """Native store types (paper §2.1): ``table(rows=N, cols=[[name,
+        dtype], ...])``, ``graph(nodes=N, edges=E)``, ``corpus(docs=D,
+        vocab=V, postings=P)`` declare typed tri-store inputs."""
+        kwargs = {}
+        while self.peek()[1] != ")":
+            key = self.next("ident")
+            self.next("punct", "=")
+            kwargs[key] = self.value()
+            self.accept(",")
+        self.next("punct", ")")
+        try:
+            if kind == "table":
+                cols = tuple((str(c[0]), str(c[1]))
+                             for c in kwargs["cols"])
+                return self.analysis.table(lhs, kwargs["rows"], cols)
+            if kind == "graph":
+                return self.analysis.graph(
+                    lhs, kwargs["nodes"], kwargs["edges"],
+                    kwargs.get("weighted", False))
+            return self.analysis.corpus(
+                lhs, kwargs["docs"], kwargs["vocab"], kwargs["postings"])
+        except (KeyError, IndexError, TypeError) as e:
+            raise ValidationError(f"ADIL: bad {kind}() declaration: {e}")
 
     def _lambda_body(self, local: str) -> Plan:
         """`x -> op(x, k=v, ...)` becomes a single-op subplan."""

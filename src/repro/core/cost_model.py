@@ -25,7 +25,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from .ir import ScalarT, SystemCatalog, TensorT, TupleT, dtype_bytes
+from .ir import (CorpusT, GraphT, ScalarT, SystemCatalog, TableT, TensorT,
+                 TupleT, dtype_bytes)
 from .physical import PhysPlan, Candidate
 
 # --------------------------------------------------------------------------
@@ -67,7 +68,7 @@ def _sum_bytes(types):
     for t in types:
         if isinstance(t, TupleT):
             out += _sum_bytes(t.elems)
-        elif isinstance(t, TensorT):
+        elif isinstance(t, (TensorT, TableT, GraphT, CorpusT)):
             out += t.bytesize()
     return out
 
@@ -246,6 +247,100 @@ def _e_embed(in_types, attrs, syscat):
 @estimator("unembed_matmul")
 def _e_unembed(in_types, attrs, syscat):
     return _proj_cost(in_types[0], attrs["vocab"], syscat)
+
+
+# -- tri-store operators (raw features = the paper's table sizes / node
+#    counts / keyword-list sizes, here rows / edges / postings) -------------
+
+
+@estimator("rel_scan_col", "rel_filter_col", "col_tensor_rel")
+def _e_rel_stream(in_types, attrs, syscat):
+    t = in_types[0]
+    b = _sum_bytes([t])
+    rows = t.rows if isinstance(t, TableT) else 1
+    return OpCost(float(rows), 2.0 * b, 0.0)
+
+
+@estimator("rel_hash_join")
+def _e_rel_join(in_types, attrs, syscat):
+    lb, rb = _sum_bytes([in_types[0]]), _sum_bytes([in_types[1]])
+    lr = in_types[0].rows if isinstance(in_types[0], TableT) else 1
+    rr = in_types[1].rows if isinstance(in_types[1], TableT) else 1
+    # build (sort right) + probe (binary search per left row)
+    logr = max(1.0, math.log2(max(rr, 2)))
+    return OpCost(rr * logr + lr * logr, 2.0 * (lb + rb), 0.0)
+
+
+@estimator("rel_group_agg_col")
+def _e_rel_group(in_types, attrs, syscat):
+    t = in_types[0]
+    rows = t.rows if isinstance(t, TableT) else 1
+    n_aggs = max(1, len(attrs.get("aggs", ())))
+    out_b = int(attrs.get("num_groups", 1)) * 4 * (n_aggs + 1)
+    return OpCost(float(rows * n_aggs), 2.0 * _sum_bytes([t]) + out_b, 0.0)
+
+
+def _graph_cost(g, passes, syscat, pallas=False):
+    e, n = int(g.edges), int(g.nodes)
+    flops = 2.0 * e * passes
+    # CSR pass: per-edge (src gather + dst scatter) + per-node frontier r/w
+    bts = passes * (e * 12.0 + n * 8.0)
+    if pallas:
+        bts /= 2  # frontier accumulator stays VMEM-resident per node block
+    return OpCost(flops, bts, 0.0)
+
+
+@estimator("graph_expand_csr", "graph_expand_pallas")
+def _e_graph_expand(in_types, attrs, syscat):
+    g = in_types[0]
+    if not isinstance(g, GraphT):
+        return OpCost(0.0, _sum_bytes(in_types), 0.0)
+    return _graph_cost(g, int(attrs.get("hops", 1)), syscat,
+                       pallas=attrs.get("_impl_pallas", False))
+
+
+@estimator("graph_pagerank_csr", "graph_pagerank_pallas")
+def _e_graph_pagerank(in_types, attrs, syscat):
+    g = in_types[0]
+    if not isinstance(g, GraphT):
+        return OpCost(0.0, _sum_bytes(in_types), 0.0)
+    return _graph_cost(g, int(attrs.get("iters", 10)), syscat,
+                       pallas=attrs.get("_impl_pallas", False))
+
+
+@estimator("graph_tricount_csr")
+def _e_graph_tricount(in_types, attrs, syscat):
+    g = in_types[0]
+    if not isinstance(g, GraphT):
+        return OpCost(0.0, _sum_bytes(in_types), 0.0)
+    n, e = int(g.nodes), int(g.edges)
+    # A·A over the densified adjacency (small-graph realization)
+    return OpCost(2.0 * n * n * max(1, e // max(n, 1)), n * n * 8.0, 0.0)
+
+
+@estimator("text_topk_inv")
+def _e_text_topk(in_types, attrs, syscat):
+    c = in_types[0]
+    if not isinstance(c, CorpusT):
+        return OpCost(0.0, _sum_bytes(in_types), 0.0)
+    # one pass over the postings + a top-k over doc scores
+    k = int(attrs.get("k", 10))
+    return OpCost(2.0 * c.postings + c.docs * max(1.0, math.log2(max(k, 2))),
+                  float(c.bytesize()) + c.docs * 4.0, 0.0)
+
+
+@estimator("xfer_pin")
+def _e_xfer_pin(in_types, attrs, syscat):
+    # stays device-resident: one HBM pass at most (often free after fusion)
+    return OpCost(0.0, _sum_bytes(in_types), 0.0)
+
+
+@estimator("xfer_spill")
+def _e_xfer_spill(in_types, attrs, syscat):
+    # materialize through the host: device->host->device round trip, priced
+    # on the interconnect (the cross-engine wire of the paper's tri-store)
+    b = _sum_bytes(in_types)
+    return OpCost(0.0, 2.0 * b, 2.0 * b)
 
 
 def op_cost(impl: str, in_types, attrs, syscat: SystemCatalog) -> OpCost:

@@ -577,7 +577,8 @@ def plan_and_compile(logical: Plan, catalog: FunctionCatalog,
                      rewrite_pipeline=None,
                      interpret: bool = True,
                      cache=None,
-                     pipeline=None) -> PlannedFunction:
+                     pipeline=None,
+                     plan_threads: int = 1) -> PlannedFunction:
     """Thin compatibility wrapper over the staged plan pipeline.
 
     Resolves the engine selection (``engines`` names from the registry;
@@ -593,7 +594,8 @@ def plan_and_compile(logical: Plan, catalog: FunctionCatalog,
         data_parallel=data_parallel,
         buffering=buffering,
         global_batch=global_batch,
-        rewrite_pipeline=tuple(rewrite_pipeline or DEFAULT_PIPELINE))
+        rewrite_pipeline=tuple(rewrite_pipeline or DEFAULT_PIPELINE),
+        plan_threads=plan_threads)
     staged = compile_staged(logical, catalog, syscat, options=opts,
                             cost_model=cost_model, pipeline=pipeline,
                             cache=cache)

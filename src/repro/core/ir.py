@@ -111,6 +111,90 @@ class ScalarT(Type):
         return f"ScalarT[{self.dtype}]"
 
 
+# -- tri-store data-model types (paper Table 1: Relation / Graph / Text) ----
+#
+# AWESOME's ADIL is natively aware of its three data models.  The tensor
+# reproduction mirrors that: a Table is a struct-of-arrays relation, a Graph
+# is CSR adjacency, and a Corpus is a tokenized document set with an
+# inverted index.  Each type carries the metadata the planner needs to price
+# cross-engine movement (rows / edges / postings -> bytes).
+
+
+@dataclass(frozen=True)
+class TableT(Type):
+    """Relational table: named, typed columns over a fixed row count.
+
+    The runtime value is a struct-of-JAX-arrays dict (one (rows,) array per
+    column) plus a boolean ``_mask`` selection vector — filters narrow the
+    mask rather than the physical row count, so every relational kernel
+    stays static-shaped and jittable.
+    """
+
+    columns: tuple            # ((name, dtype), ...)
+    rows: int
+
+    def __post_init__(self):
+        names = [c[0] for c in self.columns]
+        if len(set(names)) != len(names):
+            raise ValidationError(f"duplicate column names in {names}")
+
+    def col_names(self) -> tuple:
+        return tuple(c[0] for c in self.columns)
+
+    def has_col(self, name: str) -> bool:
+        return name in self.col_names()
+
+    def col_dtype(self, name: str) -> str:
+        for n, d in self.columns:
+            if n == name:
+                return d
+        raise ValidationError(f"no column {name!r} in {self}")
+
+    def bytesize(self) -> int:
+        per_row = sum(dtype_bytes(d) for _, d in self.columns) + 1  # + _mask
+        return int(self.rows) * per_row
+
+    def __repr__(self):
+        cols = ", ".join(f"{n}:{d}" for n, d in self.columns)
+        return f"TableT({cols}; rows={self.rows})"
+
+
+@dataclass(frozen=True)
+class GraphT(Type):
+    """Graph in CSR form: ``nodes`` vertices, ``edges`` directed edges."""
+
+    nodes: int
+    edges: int
+    weighted: bool = False
+
+    def bytesize(self) -> int:
+        # indptr + indices + per-edge src expansion (+ weights) + out-degree
+        per_edge = 8 + (4 if self.weighted else 0)
+        return (self.nodes + 1) * 4 + int(self.edges) * per_edge + self.nodes * 4
+
+    def __repr__(self):
+        w = ", weighted" if self.weighted else ""
+        return f"GraphT(nodes={self.nodes}, edges={self.edges}{w})"
+
+
+@dataclass(frozen=True)
+class CorpusT(Type):
+    """Tokenized corpus with an inverted index: ``postings`` = nnz of the
+    term-document matrix (what TF-IDF scoring streams over)."""
+
+    docs: int
+    vocab: int
+    postings: int
+
+    def bytesize(self) -> int:
+        # (doc, term, tf) per posting + doc lengths + idf table
+        return int(self.postings) * 12 + self.docs * 4 + self.vocab * 4
+
+    def __repr__(self):
+        return (f"CorpusT(docs={self.docs}, vocab={self.vocab}, "
+                f"postings={self.postings})")
+
+
 _DTYPE_BYTES = {
     "float64": 8, "int64": 8,
     "float32": 4, "int32": 4, "uint32": 4,
@@ -409,6 +493,11 @@ class OpSignature:
 
     ``infer``     : (input_types, attrs) -> Type         (raises ValidationError)
     ``n_inputs``  : exact arity, or (min, max) tuple, or None (any)
+    ``engine``    : the named engine this op logically executes on (the
+                    tri-store's per-op engine attribution — "rel"/"graph"/
+                    "text" for store ops, "xla" for tensor ops).  The
+                    ``place_xfers`` rewrite consults it to insert cross-
+                    engine transfer nodes at engine boundaries.
     """
 
     name: str
@@ -416,6 +505,7 @@ class OpSignature:
     n_inputs: Any = None
     required_attrs: tuple = ()
     doc: str = ""
+    engine: str = "xla"
 
 
 class FunctionCatalog:
@@ -429,11 +519,13 @@ class FunctionCatalog:
         self._sigs[sig.name] = sig
         self._sig_cache = None
 
-    def op(self, name: str, n_inputs=None, required_attrs=(), doc=""):
+    def op(self, name: str, n_inputs=None, required_attrs=(), doc="",
+           engine="xla"):
         """Decorator form: ``@catalog.op("matmul", n_inputs=2)``."""
 
         def deco(fn):
-            self.register(OpSignature(name, fn, n_inputs, tuple(required_attrs), doc))
+            self.register(OpSignature(name, fn, n_inputs, tuple(required_attrs),
+                                      doc, engine))
             return fn
 
         return deco
@@ -455,7 +547,7 @@ class FunctionCatalog:
         different op library is a different planning problem.  Memoized,
         invalidated by ``register``."""
         if self._sig_cache is None:
-            rows = tuple((name, repr(s.n_inputs), s.required_attrs)
+            rows = tuple((name, repr(s.n_inputs), s.required_attrs, s.engine)
                          for name, s in sorted(self._sigs.items()))
             self._sig_cache = hashlib.sha256(repr(rows).encode()).hexdigest()
         return self._sig_cache
@@ -513,6 +605,24 @@ def infer_types(plan: Plan, catalog: FunctionCatalog) -> Plan:
 def expect_tensor(t: Type, what: str = "input") -> TensorT:
     if not isinstance(t, TensorT):
         raise ValidationError(f"{what}: expected TensorT, got {t!r}")
+    return t
+
+
+def expect_table(t: Type, what: str = "input") -> "TableT":
+    if not isinstance(t, TableT):
+        raise ValidationError(f"{what}: expected TableT, got {t!r}")
+    return t
+
+
+def expect_graph(t: Type, what: str = "input") -> "GraphT":
+    if not isinstance(t, GraphT):
+        raise ValidationError(f"{what}: expected GraphT, got {t!r}")
+    return t
+
+
+def expect_corpus(t: Type, what: str = "input") -> "CorpusT":
+    if not isinstance(t, CorpusT):
+        raise ValidationError(f"{what}: expected CorpusT, got {t!r}")
     return t
 
 
@@ -764,6 +874,119 @@ def standard_catalog() -> FunctionCatalog:
         t = expect_tensor(ins[0])
         return TensorT(t.shape[:-1] + (attrs["embed"],), t.dtype,
                        t.dims[:-1] + ("embed",))
+
+    # -- tri-store ops (relational / graph / text engines + cross-engine
+    #    movement).  Each op declares the engine it logically runs on; the
+    #    ``place_xfers`` rewrite turns engine boundaries into explicit
+    #    ``xfer`` nodes whose materialization the cost model decides.
+
+    @cat.op("rel_scan", n_inputs=1, engine="rel")
+    def _rel_scan(ins, attrs, sub):
+        t = expect_table(ins[0], "rel_scan")
+        cols = attrs.get("cols")
+        if not cols:
+            return t
+        for c in cols:
+            if not t.has_col(c):
+                raise ValidationError(f"rel_scan: no column {c!r} in {t!r}")
+        return TableT(tuple((n, d) for n, d in t.columns if n in tuple(cols)),
+                      t.rows)
+
+    @cat.op("rel_filter", n_inputs=1, required_attrs=("col", "cmp", "value"),
+            engine="rel")
+    def _rel_filter(ins, attrs, sub):
+        t = expect_table(ins[0], "rel_filter")
+        if not t.has_col(attrs["col"]):
+            raise ValidationError(
+                f"rel_filter: no column {attrs['col']!r} in {t!r}")
+        if attrs["cmp"] not in ("eq", "ne", "lt", "le", "gt", "ge"):
+            raise ValidationError(f"rel_filter: bad cmp {attrs['cmp']!r}")
+        return t  # selection narrows the mask, not the row count
+
+    @cat.op("rel_join", n_inputs=2, required_attrs=("left_on", "right_on"),
+            engine="rel")
+    def _rel_join(ins, attrs, sub):
+        lt = expect_table(ins[0], "rel_join left")
+        rt = expect_table(ins[1], "rel_join right")
+        lo, ro = attrs["left_on"], attrs["right_on"]
+        if not lt.has_col(lo):
+            raise ValidationError(f"rel_join: no left column {lo!r}")
+        if not rt.has_col(ro):
+            raise ValidationError(f"rel_join: no right column {ro!r}")
+        taken = set(lt.col_names())
+        extra = tuple((n, d) for n, d in rt.columns
+                      if n != ro and n not in taken)
+        return TableT(lt.columns + extra, lt.rows)
+
+    @cat.op("rel_group_agg", n_inputs=1,
+            required_attrs=("key", "num_groups", "aggs"), engine="rel")
+    def _rel_group_agg(ins, attrs, sub):
+        t = expect_table(ins[0], "rel_group_agg")
+        if not t.has_col(attrs["key"]):
+            raise ValidationError(
+                f"rel_group_agg: no key column {attrs['key']!r}")
+        key_dt = str(t.col_dtype(attrs["key"]))
+        if not (key_dt.startswith("int") or key_dt.startswith("uint")):
+            raise ValidationError(
+                f"rel_group_agg: key column {attrs['key']!r} must be "
+                f"integer (group ids), got {key_dt}")
+        cols = [(attrs["key"], "int32")]
+        for out_name, fn, col in attrs["aggs"]:
+            if fn not in ("sum", "count", "mean", "max"):
+                raise ValidationError(f"rel_group_agg: bad agg fn {fn!r}")
+            if fn != "count" and not t.has_col(col):
+                raise ValidationError(f"rel_group_agg: no column {col!r}")
+            cols.append((out_name, "float32"))
+        return TableT(tuple(cols), int(attrs["num_groups"]))
+
+    @cat.op("col_tensor", n_inputs=1, required_attrs=("col",), engine="rel")
+    def _col_tensor(ins, attrs, sub):
+        t = expect_table(ins[0], "col_tensor")
+        if not t.has_col(attrs["col"]):
+            raise ValidationError(f"col_tensor: no column {attrs['col']!r}")
+        dim = attrs.get("dim", "rows")
+        return TensorT((t.rows,), attrs.get("dtype", "float32"), (dim,))
+
+    @cat.op("graph_expand", n_inputs=2, engine="graph")
+    def _graph_expand(ins, attrs, sub):
+        g = expect_graph(ins[0], "graph_expand")
+        f = expect_tensor(ins[1], "graph_expand frontier")
+        if f.shape != (g.nodes,):
+            raise ValidationError(
+                f"graph_expand: frontier {f.shape} vs nodes {g.nodes}")
+        return TensorT((g.nodes,), "float32", ("nodes",))
+
+    @cat.op("graph_pagerank", n_inputs=(1, 2), engine="graph")
+    def _graph_pagerank(ins, attrs, sub):
+        g = expect_graph(ins[0], "graph_pagerank")
+        if len(ins) == 2:
+            p = expect_tensor(ins[1], "graph_pagerank personalization")
+            if p.shape != (g.nodes,):
+                raise ValidationError(
+                    f"graph_pagerank: personalization {p.shape} vs "
+                    f"nodes {g.nodes}")
+        return TensorT((g.nodes,), "float32", ("nodes",))
+
+    @cat.op("graph_tricount", n_inputs=1, engine="graph")
+    def _graph_tricount(ins, attrs, sub):
+        expect_graph(ins[0], "graph_tricount")
+        return ScalarT("float32")
+
+    @cat.op("text_topk", n_inputs=2, required_attrs=("k",), engine="text")
+    def _text_topk(ins, attrs, sub):
+        c = expect_corpus(ins[0], "text_topk")
+        q = expect_tensor(ins[1], "text_topk query")
+        if q.shape != (c.vocab,):
+            raise ValidationError(
+                f"text_topk: query {q.shape} vs vocab {c.vocab}")
+        k = int(attrs["k"])
+        if not 0 < k <= c.docs:
+            raise ValidationError(f"text_topk: k={k} out of range")
+        return TableT((("doc", "int32"), ("score", "float32")), k)
+
+    @cat.op("xfer", n_inputs=1)
+    def _xfer(ins, attrs, sub):
+        return ins[0]  # pure movement: the value is unchanged
 
     return cat
 

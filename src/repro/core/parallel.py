@@ -21,10 +21,21 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from .ir import TensorT
 from .physical import PHYS_OPS, PR, ST, EX, PhysPlan, defop
 
 # semantic dims that the 'data' mesh axis may partition (capOn universe)
 DATA_PARTITIONABLE = ("batch",)
+
+
+def _type_has_dim(t, dim: str) -> bool:
+    """Whether a value of type ``t`` can be partitioned on ``dim``.  A
+    TensorT with semantic dim names must actually carry the dim (a (nodes,)
+    graph frontier has no batch axis to shard); unknown / un-annotated
+    types keep the historical always-partitionable behaviour."""
+    if isinstance(t, TensorT) and t.dims:
+        return t.has_dim(dim)
+    return True
 
 
 def _cap(n):
@@ -69,7 +80,8 @@ def add_data_parallelism(pp: PhysPlan) -> PhysPlan:
             src_part = partitioned.get(i, False)
             is_cap_input = cap_all or (idx == n.attrs.get("cap_idx", 0))
             if cap == PR and is_cap_input and not src_part and \
-                    cap_on in DATA_PARTITIONABLE:
+                    cap_on in DATA_PARTITIONABLE and \
+                    _type_has_dim(pp.types.get(i), cap_on):
                 # rule 1: partition the capOn input
                 src = emit("partition", [src],
                            {"dim": cap_on, "mesh_axis": "data"},

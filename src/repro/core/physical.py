@@ -109,6 +109,32 @@ defop("scan_layers_xla", buf_cap=B, cap_on="batch")
 # is produced whole by the scan.
 defop("tuple_get_xla", buf_cap=B)
 
+# --- tri-store engines (relational / graph / text) + cross-engine movement.
+# Store operators are ST (they run whole-relation/whole-graph inside their
+# engine, excluded from batch partitioning exactly as the paper excludes
+# external engines), and the graph Pallas kernels are EX like the other
+# Pallas ops.
+defop("rel_scan_col", dp_cap=ST, buf_cap=SO, cap_on=None, backend="rel")
+defop("rel_filter_col", dp_cap=ST, buf_cap=SS, cap_on=None, backend="rel")
+defop("rel_hash_join", dp_cap=ST, buf_cap=SI, cap_on=None, backend="rel")
+defop("rel_group_agg_col", dp_cap=ST, buf_cap=SI, cap_on=None, backend="rel")
+defop("col_tensor_rel", dp_cap=ST, buf_cap=SO, cap_on=None, backend="rel")
+defop("graph_expand_csr", dp_cap=ST, buf_cap=SS, cap_on=None, backend="graph")
+defop("graph_expand_pallas", dp_cap=EX, buf_cap=SS, cap_on=None,
+      backend="pallas")
+defop("graph_pagerank_csr", dp_cap=ST, buf_cap=SS, cap_on=None,
+      backend="graph")
+defop("graph_pagerank_pallas", dp_cap=EX, buf_cap=SS, cap_on=None,
+      backend="pallas")
+defop("graph_tricount_csr", dp_cap=ST, buf_cap=SI, cap_on=None,
+      backend="graph")
+defop("text_topk_inv", dp_cap=ST, buf_cap=SI, cap_on=None, backend="text")
+# cross-engine transfer: pin keeps the value device-resident (AWESOME's
+# in-memory placement), spill materializes it through the host (the
+# federated-baseline behaviour).  Spill is blocking for buffering purposes.
+defop("xfer_pin", dp_cap=ST, buf_cap=SS, cap_on=None)
+defop("xfer_spill", dp_cap=ST, buf_cap=B, cap_on=None)
+
 
 # --------------------------------------------------------------------------
 # Physical plan structure
@@ -192,6 +218,10 @@ def _has_window(nodes):
     return any(n.attrs.get("window") for n in nodes)
 
 
+def _not_spill_only(nodes):
+    return not any(n.attrs.get("spill_only") for n in nodes)
+
+
 DEFAULT_PATTERNS = (
     # fused attention: the map-fusion product (Fig. 7's larger-pattern win)
     Pattern(
@@ -238,6 +268,37 @@ DEFAULT_PATTERNS = (
             Candidate("ssd_pallas", ("ssd_pallas",), requires_backend="pallas"),
         ),
     ),
+    # graph frontier ops: Pallas scatter-add kernel on TPU-capable engines,
+    # segment_sum CSR fallback otherwise (the paper's external-engine story)
+    Pattern(
+        "graph_expand_op", ("graph_expand",),
+        (
+            Candidate("expand_csr", ("graph_expand_csr",),
+                      requires_backend="graph"),
+            Candidate("expand_pallas", ("graph_expand_pallas",),
+                      requires_backend="pallas"),
+        ),
+    ),
+    Pattern(
+        "graph_pagerank_op", ("graph_pagerank",),
+        (
+            Candidate("pagerank_csr", ("graph_pagerank_csr",),
+                      requires_backend="graph"),
+            Candidate("pagerank_pallas", ("graph_pagerank_pallas",),
+                      requires_backend="pallas"),
+        ),
+    ),
+    # cross-engine transfer: the cost model chooses the materialization
+    # point per boundary (pin = stay in device memory, spill = host
+    # round-trip).  ``spill_only`` xfers (the naive-placement baseline)
+    # exclude the pin candidate.
+    Pattern(
+        "xfer_op", ("xfer",),
+        (
+            Candidate("xfer_pin", ("xfer_pin",), when=_not_spill_only),
+            Candidate("xfer_spill", ("xfer_spill",)),
+        ),
+    ),
 )
 
 # single-candidate direct mappings (Alg. 2 lines 6–7)
@@ -266,6 +327,14 @@ DIRECT_IMPL = {
     "attention": None,   # must be decomposed first; see rewrite.decompose
     "store": "store",
     "tuple_get": "tuple_get_xla",
+    # tri-store single-candidate ops
+    "rel_scan": "rel_scan_col",
+    "rel_filter": "rel_filter_col",
+    "rel_join": "rel_hash_join",
+    "rel_group_agg": "rel_group_agg_col",
+    "col_tensor": "col_tensor_rel",
+    "graph_tricount": "graph_tricount_csr",
+    "text_topk": "text_topk_inv",
 }
 
 
@@ -303,7 +372,8 @@ def _find_chain_matches(plan: Plan, seq, claimed):
 
 
 def generate_candidates(plan: Plan, patterns=DEFAULT_PATTERNS,
-                        engines=None, allow_pallas=None) -> PhysPlan:
+                        engines=None, allow_pallas=None,
+                        threads: int = 1) -> PhysPlan:
     """Alg. 2: largest-first pattern matching over the optimized logical plan.
 
     ``engines`` names the execution engines whose candidates may be offered
@@ -311,9 +381,29 @@ def generate_candidates(plan: Plan, patterns=DEFAULT_PATTERNS,
     dry-runs the Pallas engines are excluded, exactly as the paper excludes
     EX engines from optimization choices it cannot calibrate).  The legacy
     ``allow_pallas`` boolean is still accepted and maps onto the registry.
+
+    ``threads > 1`` generates the candidate sub-plans of scan-groups
+    (``scan_layers``/higher-order subplans) in a thread pool.  Generation is
+    pure per subplan, so the product is identical to the serial path — only
+    wall time changes.
     """
     from .engines import resolve_engines
     engines = resolve_engines(engines, allow_pallas=allow_pallas)
+
+    # parallel scan-group prepass: each higher-order node's subplan is an
+    # independent generation problem
+    pregen: dict = {}
+    sub_nodes = [n for n in plan.topo()
+                 if n.subplan is not None
+                 and n.op in ("scan_layers", "map", "filter", "reduce")]
+    if threads and threads > 1 and len(sub_nodes) > 1:
+        from concurrent.futures import ThreadPoolExecutor
+        with ThreadPoolExecutor(max_workers=int(threads)) as ex:
+            futs = {n.id: ex.submit(generate_candidates, n.subplan, patterns,
+                                    engines, None, threads)
+                    for n in sub_nodes}
+            pregen = {nid: f.result() for nid, f in futs.items()}
+
     ordered = sorted(patterns, key=lambda p: -p.size)
     claimed: set = set()
     pat_of: dict = {}           # head node id -> (Pattern, chain)
@@ -367,11 +457,13 @@ def generate_candidates(plan: Plan, patterns=DEFAULT_PATTERNS,
         sub = None
         if node.op == "scan_layers":
             impl = "scan_layers_xla"
-            sub = generate_candidates(node.subplan, patterns, engines)
+            sub = pregen.get(node.id) or generate_candidates(
+                node.subplan, patterns, engines, threads=threads)
         elif node.op in ("map", "filter", "reduce"):
             impl = node.op  # handled natively by the executor
             if node.subplan is not None:
-                sub = generate_candidates(node.subplan, patterns, engines)
+                sub = pregen.get(node.id) or generate_candidates(
+                    node.subplan, patterns, engines, threads=threads)
             if impl not in PHYS_OPS:
                 defop(impl, dp_cap=PR, buf_cap=SS, cap_on="elem")
         if impl is None:

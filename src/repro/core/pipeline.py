@@ -48,13 +48,18 @@ from .rewrite import rewrite_with_trace
 class PlanOptions:
     """Everything that changes *what plan comes out* for a given logical
     plan + catalogs.  Hashed into ``plan_id``; runtime-only bindings (mesh
-    object, sharding rules, interpret mode) deliberately live outside."""
+    object, sharding rules, interpret mode) deliberately live outside.
+
+    ``plan_threads`` parallelizes candidate generation per scan-group; it
+    changes only planning wall time, never the chosen plan, so it is
+    deliberately **excluded** from ``cache_key``."""
 
     engines: tuple = ("xla",)
     data_parallel: bool = True
     buffering: bool = False
     global_batch: int = 1
     rewrite_pipeline: tuple = DEFAULT_REWRITES
+    plan_threads: int = 1
 
     def cache_key(self) -> tuple:
         return ("opts", tuple(self.engines), self.data_parallel,
@@ -132,7 +137,8 @@ def _pass_rewrite(ctx: PipelineContext) -> dict:
 def _pass_generate(ctx: PipelineContext) -> dict:
     from .engines import get_engine
     ctx.pplan = generate_candidates(ctx.logical_opt, ctx.patterns,
-                                    engines=ctx.options.engines)
+                                    engines=ctx.options.engines,
+                                    threads=ctx.options.plan_threads)
 
     def stats(pp):
         nv, nc = len(pp.pm), sum(len(c) for c in pp.pm.values())
@@ -349,9 +355,14 @@ def compile_staged(logical: Plan, catalog: FunctionCatalog,
     pl = pipeline or PlanPipeline()
     pid = staged_plan_id(logical, catalog, syscat, opts, cost_model,
                          patterns, pl.passes)
+    # the cost-model fit fingerprint doubles as the cache's calibration
+    # marker: entries planned under an older fit are preferred eviction
+    # victims (see PlanCache)
+    cm_fp = cost_model.fingerprint() if cost_model is not None else "analytic"
     pc = None
     if cache is not False:
         pc = cache if isinstance(cache, PlanCache) else default_plan_cache()
+        pc.note_fingerprint(cm_fp)
         hit = pc.lookup(pid)
         if hit is not None:
             return hit
@@ -359,5 +370,5 @@ def compile_staged(logical: Plan, catalog: FunctionCatalog,
         logical, catalog, syscat, options=opts, cost_model=cost_model,
         patterns=patterns, plan_id=pid)
     if pc is not None:
-        pc.insert(pid, staged)
+        pc.insert(pid, staged, fingerprint=cm_fp)
     return staged

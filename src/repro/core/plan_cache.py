@@ -24,16 +24,50 @@ from typing import Any, Optional
 
 
 class PlanCache:
-    """LRU map: plan_id -> StagedPhysicalPlan, with hit/miss accounting."""
+    """LRU map: plan_id -> StagedPhysicalPlan, with hit/miss accounting.
+
+    Eviction is **calibration-aware**: each entry remembers the cost-model
+    fit fingerprint it was planned under (``insert(..., fingerprint=)``),
+    and ``note_fingerprint`` records the fingerprint of the current cost
+    model.  An entry is **stale** when its fingerprint differs from the
+    current one *and* it has not been touched since the current fingerprint
+    took effect — i.e. it was planned under a superseded fit and nobody is
+    using it.  Stale entries are evicted first (LRU among themselves); with
+    none, eviction is plain LRU.  The not-touched-since condition keeps a
+    *concurrently active* second cost model's hot entries protected: being
+    looked up under the new calibration re-proves an entry live, so two
+    callers sharing one cache cannot thrash each other's working sets.
+    """
 
     def __init__(self, maxsize: int = 128):
         if maxsize < 1:
             raise ValueError(f"maxsize must be >= 1, got {maxsize}")
         self.maxsize = maxsize
         self._entries: "OrderedDict[str, Any]" = OrderedDict()
+        self._fps: dict = {}                 # plan_id -> fit fingerprint
+        self._seen_epoch: dict = {}          # plan_id -> epoch of last touch
+        self._epoch = 0                      # bumps when the fit changes
+        self.current_fingerprint: Optional[str] = None
         self.hits = 0
         self.misses = 0
         self.evictions = 0
+        self.stale_evictions = 0
+
+    def note_fingerprint(self, fingerprint: str) -> None:
+        """Record the fingerprint of the cost model in current use (called
+        by ``compile_staged`` on every cached planning request, so pure-hit
+        workloads still see calibration refreshes).
+
+        The uncalibrated ``"analytic"`` fallback never *displaces* a fitted
+        fingerprint: many call sites pass no cost model at all, and letting
+        each of their compiles flip currency back and forth would churn the
+        staleness epoch on every interleaving.  Calibration only moves
+        forward."""
+        if fingerprint == "analytic" and self.current_fingerprint is not None:
+            return
+        if fingerprint != self.current_fingerprint:
+            self._epoch += 1
+        self.current_fingerprint = fingerprint
 
     def lookup(self, plan_id: str):
         """Return the cached staged plan (refreshing recency) or None."""
@@ -42,19 +76,48 @@ class PlanCache:
             self.misses += 1
             return None
         self._entries.move_to_end(plan_id)
+        self._seen_epoch[plan_id] = self._epoch
         self.hits += 1
         return entry
 
-    def insert(self, plan_id: str, staged) -> None:
+    def insert(self, plan_id: str, staged, fingerprint: Optional[str] = None
+               ) -> None:
         self._entries[plan_id] = staged
+        if fingerprint is not None:
+            self._fps[plan_id] = fingerprint
+            self.note_fingerprint(fingerprint)
+        self._seen_epoch[plan_id] = self._epoch
         self._entries.move_to_end(plan_id)
         while len(self._entries) > self.maxsize:
-            self._entries.popitem(last=False)
-            self.evictions += 1
+            self._evict_one()
+
+    def _is_stale(self, plan_id: str) -> bool:
+        fp = self._fps.get(plan_id)
+        return (fp is not None and fp != self.current_fingerprint
+                and self._seen_epoch.get(plan_id, -1) < self._epoch)
+
+    def _evict_one(self) -> None:
+        victim = None
+        if self.current_fingerprint is not None:
+            victim = next((p for p in self._entries if self._is_stale(p)),
+                          None)
+        if victim is None:
+            victim = next(iter(self._entries))
+        else:
+            self.stale_evictions += 1
+        del self._entries[victim]
+        self._fps.pop(victim, None)
+        self._seen_epoch.pop(victim, None)
+        self.evictions += 1
 
     def clear(self) -> None:
         self._entries.clear()
+        self._fps.clear()
+        self._seen_epoch.clear()
+        self._epoch = 0
+        self.current_fingerprint = None
         self.hits = self.misses = self.evictions = 0
+        self.stale_evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -70,6 +133,7 @@ class PlanCache:
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "stale_evictions": self.stale_evictions,
             "hit_rate": (self.hits / total) if total else 0.0,
         }
 
@@ -106,7 +170,10 @@ def save_plan_cache(cache: PlanCache, dir_path: str) -> int:
         fd, tmp = tempfile.mkstemp(dir=dir_path, suffix=".tmp")
         try:
             with os.fdopen(fd, "wb") as fh:
-                pickle.dump(staged, fh)
+                # fingerprint rides along so calibration-aware eviction
+                # classifies warm-started entries too
+                pickle.dump({"staged": staged,
+                             "fingerprint": cache._fps.get(plan_id)}, fh)
             os.replace(tmp, path)
             written += 1
         except Exception:
@@ -133,9 +200,17 @@ def load_plan_cache(dir_path: str, cache: Optional[PlanCache] = None,
             continue
         try:
             with open(e.path, "rb") as fh:
-                cache.insert(plan_id, pickle.load(fh))
+                obj = pickle.load(fh)
         except Exception:
             continue
+        if isinstance(obj, dict) and "staged" in obj:
+            cache.insert(plan_id, obj["staged"])
+            if obj.get("fingerprint") is not None:
+                # classify the entry for stale-first eviction, but loading
+                # old plans must not make their fit the *current* one
+                cache._fps[plan_id] = obj["fingerprint"]
+        else:                      # pre-fingerprint format: bare staged plan
+            cache.insert(plan_id, obj)
     return cache
 
 

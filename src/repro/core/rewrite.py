@@ -299,16 +299,147 @@ def _attr_key(attrs):
 
 
 # --------------------------------------------------------------------------
+# 4. cross-engine transfer placement (tri-store: AWESOME §2 / tech-report §4)
+# --------------------------------------------------------------------------
+#
+# AWESOME's optimizer is aware that a workload straddles engines: data moving
+# between the relational, graph, and text stores is an explicit, costed
+# operation, and the in-memory optimization decides *where* intermediates
+# materialize.  ``place_xfers`` makes every engine boundary an explicit
+# ``xfer`` node; the physical pattern set then offers two candidates per
+# xfer — ``xfer_pin`` (keep the value device-resident) and ``xfer_spill``
+# (materialize through the host) — and the cost model picks per boundary.
+# ``place_xfers_naive`` models the federated-baseline strawman instead:
+# every store-engine operator's output is materialized through the host
+# (spill-only xfer), the per-op materialization AWESOME's placement beats.
+
+
+def _engine_of_type(t) -> str:
+    from .ir import CorpusT, GraphT, TableT
+    if isinstance(t, TableT):
+        return "rel"
+    if isinstance(t, GraphT):
+        return "graph"
+    if isinstance(t, CorpusT):
+        return "text"
+    return "xla"
+
+
+def _engine_of(plan: Plan, nid: str, catalog: FunctionCatalog) -> str:
+    """Engine a value lives on: plan inputs by their data-model type, xfer
+    nodes by their destination, other ops by their catalog attribution."""
+    if nid in plan.inputs:
+        return _engine_of_type(plan.inputs[nid])
+    node = plan.nodes[nid]
+    if node.op == "xfer":
+        return node.attrs.get("dst_engine", "xla")
+    return catalog.get(node.op).engine
+
+
+def _pure_xla(plan: Plan, catalog: FunctionCatalog) -> bool:
+    """No store-typed inputs and no store-engine ops, recursively — the
+    overwhelmingly common tensor-only case, where xfer placement is a
+    guaranteed no-op."""
+    if any(_engine_of_type(t) != "xla" for t in plan.inputs.values()):
+        return False
+    for n in plan.topo():
+        if n.op != "xfer" and catalog.get(n.op).engine != "xla":
+            return False
+        if n.subplan is not None and not _pure_xla(n.subplan, catalog):
+            return False
+    return True
+
+
+def place_xfers(plan: Plan, catalog: FunctionCatalog) -> Plan:
+    """Insert an ``xfer`` node on every edge that crosses an engine boundary.
+
+    One xfer is shared per (producer, destination-engine) pair, so a value
+    consumed by several same-engine operators moves once.  Pure-tensor plans
+    (every op on the ``xla`` engine) are returned unchanged — and without
+    paying the plan copy, since this pass runs on every default compile.
+    """
+    if _pure_xla(plan, catalog):
+        return plan
+    infer_types(plan, catalog)
+    out = Plan(plan.name, {}, dict(plan.inputs), plan.outputs, {}, plan._ctr)
+    remap: dict = {i: i for i in plan.inputs}
+    xfer_for: dict = {}   # (producer id in out, dst engine) -> xfer id
+
+    def crossed(src_old: str, src_new: str, dst_engine: str) -> str:
+        src_engine = _engine_of(plan, src_old, catalog)
+        if src_engine == dst_engine:
+            return src_new
+        key = (src_new, dst_engine)
+        if key not in xfer_for:
+            xfer_for[key] = out.add(
+                "xfer", [src_new],
+                {"src_engine": src_engine, "dst_engine": dst_engine},
+                id=f"xfer_{src_old}_{dst_engine}")
+        return xfer_for[key]
+
+    for node in plan.topo():
+        sub = node.subplan
+        if sub is not None:
+            sub = place_xfers(sub, catalog)
+        dst_engine = ("xla" if node.op == "xfer"
+                      else catalog.get(node.op).engine)
+        ins = []
+        for i in node.inputs:
+            src = remap[i]
+            if node.op != "xfer":
+                src = crossed(i, src, dst_engine)
+            ins.append(src)
+        nid = out.add(node.op, ins, dict(node.attrs), sub, id=node.id)
+        remap[node.id] = nid
+
+    out.outputs = tuple(remap[o] for o in plan.outputs)
+    return infer_types(out, catalog)
+
+
+def place_xfers_naive(plan: Plan, catalog: FunctionCatalog) -> Plan:
+    """The per-op-materialization baseline: every store-engine operator's
+    output round-trips through the host (a spill-only xfer), the way a
+    naive federated system hands each engine result back to the mediator.
+    Used by ``benchmarks/tri_store_eff.py`` as the strawman that planned
+    placement must beat."""
+    infer_types(plan, catalog)
+    out = Plan(plan.name, {}, dict(plan.inputs), plan.outputs, {}, plan._ctr)
+    remap: dict = {i: i for i in plan.inputs}
+
+    for node in plan.topo():
+        sub = node.subplan
+        if sub is not None:
+            sub = place_xfers_naive(sub, catalog)
+        nid = out.add(node.op, [remap[i] for i in node.inputs],
+                      dict(node.attrs), sub, id=node.id)
+        remap[node.id] = nid
+        engine = ("xla" if node.op == "xfer"
+                  else catalog.get(node.op).engine)
+        if engine != "xla":
+            remap[node.id] = out.add(
+                "xfer", [nid],
+                {"src_engine": engine, "dst_engine": "xla",
+                 "spill_only": True},
+                id=f"spill_{node.id}")
+
+    out.outputs = tuple(remap[o] for o in plan.outputs)
+    return infer_types(out, catalog)
+
+
+# --------------------------------------------------------------------------
 # driver
 # --------------------------------------------------------------------------
 
-DEFAULT_PIPELINE = ("decompose", "cse", "fuse_qkv", "fuse_scans", "cse")
+DEFAULT_PIPELINE = ("decompose", "cse", "fuse_qkv", "fuse_scans", "cse",
+                    "place_xfers")
 
 _PASSES: dict = {
     "decompose": decompose,
     "cse": eliminate_redundancy,
     "fuse_qkv": fuse_qkv,
     "fuse_scans": fuse_scans,
+    "place_xfers": place_xfers,
+    "place_xfers_naive": place_xfers_naive,
 }
 
 

@@ -52,6 +52,10 @@ def main(argv=None):
     ap.add_argument("--plan-cache-dir", default=None,
                     help="persist the plan cache here and warm-start "
                          "planning from it on relaunch")
+    ap.add_argument("--plan-threads", type=int, default=1,
+                    help="generate physical candidates per scan-group in "
+                         "this many threads (identical plans, lower "
+                         "planning wall time)")
     ap.add_argument("--explain", action="store_true",
                     help="print the staged plan pipeline's EXPLAIN report")
     ap.add_argument("--ckpt-dir", default=None)
@@ -76,7 +80,8 @@ def main(argv=None):
         load_plan_cache(args.plan_cache_dir, pc)
     fwd = plan_and_compile(plan, CATALOG, syscat, buffering=args.buffering,
                            global_batch=args.batch,
-                           engines=tuple(args.engines.split(",")))
+                           engines=tuple(args.engines.split(",")),
+                           plan_threads=args.plan_threads)
     if args.plan_cache_dir:
         n = save_plan_cache(pc, args.plan_cache_dir)
         print(f"[train] plan cache: {pc.stats()['hits']} hits, "

@@ -1,0 +1,18 @@
+"""AWESOME tri-store: columnar relational, CSR graph, and inverted-text
+stores behind one Store protocol, registered as planner engines.
+
+Importing this package registers the ``rel``/``graph``/``text`` engines and
+their physical-op implementations (``runtime``), so any module that plans
+or executes tri-model workloads just imports ``repro.stores``.
+"""
+from .base import (GRAPH_ENGINE, REL_ENGINE, STORE_ENGINE_NAMES, TEXT_ENGINE,
+                   Store, store_engines)
+from .column_store import ColumnStore
+from .graph_store import GraphStore
+from .text_store import TextStore
+from . import runtime as _runtime  # noqa: F401  (impl registration)
+
+__all__ = [
+    "ColumnStore", "GraphStore", "TextStore", "Store", "store_engines",
+    "STORE_ENGINE_NAMES", "REL_ENGINE", "GRAPH_ENGINE", "TEXT_ENGINE",
+]

@@ -1,0 +1,64 @@
+"""Tri-store foundation: the ``Store`` protocol and the three store engines.
+
+AWESOME's tri-store registers a relational, a graph, and a text engine with
+the mediator and plans *across* them (paper §2).  Here each store is
+
+  * a **named engine** in the planner's engine registry — candidate
+    generation and cost-model selection gate store candidates on the engine
+    names exactly as they gate ``pallas`` kernels;
+  * a **host-side container** implementing the :class:`Store` protocol: it
+    owns the store's on-device representation (``payload()`` — a pytree of
+    JAX arrays bound to a plan input at call time) and the ADIL type
+    describing it (``type`` — TableT / GraphT / CorpusT, the metadata the
+    cost model prices cross-engine movement with).
+
+The executor binds stores positionally: a store is declared as a typed plan
+input (``Analysis.table/graph/corpus``), and the caller passes
+``store.payload()`` for that input name.  Planning never touches the data —
+only the type metadata — so staged plans over stores cache and persist like
+any other plan.
+"""
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+from ..core.engines import register_engine
+from ..core.ir import Type
+
+# the three store engines of the paper's tri-store, registered alongside
+# xla/pallas so planning options can name them (engines=("xla", "rel", ...))
+REL_ENGINE = register_engine(
+    "rel", "columnar relational store: struct-of-JAX-arrays tables with "
+           "filter/project/hash-join/group-agg kernels")
+GRAPH_ENGINE = register_engine(
+    "graph", "CSR graph store: frontier expansion, PageRank iteration, "
+             "triangle counting (segment_sum path; Pallas kernels register "
+             "under the pallas engine)")
+TEXT_ENGINE = register_engine(
+    "text", "inverted-index text store: tokenized corpus with top-k TF-IDF "
+            "scoring")
+
+STORE_ENGINE_NAMES = ("rel", "graph", "text")
+
+
+def store_engines(*, pallas: bool = False) -> tuple:
+    """The engine tuple a tri-model analysis plans against: the interpreter
+    engine, the three store engines, and optionally the Pallas kernels."""
+    base = ("xla",) + STORE_ENGINE_NAMES
+    return base + ("pallas",) if pallas else base
+
+
+@runtime_checkable
+class Store(Protocol):
+    """What every store exposes to the planner and the executor."""
+
+    @property
+    def type(self) -> Type:
+        """The ADIL data-model type (TableT/GraphT/CorpusT) of this store —
+        the size metadata the cost model prices movement with."""
+        ...
+
+    def payload(self) -> Any:
+        """The on-device representation: a pytree of JAX arrays, bound to
+        this store's plan input at call time."""
+        ...

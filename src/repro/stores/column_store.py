@@ -1,0 +1,141 @@
+"""Columnar relational store: struct-of-JAX-arrays tables.
+
+A table value at run time is a dict ``{col_name: (rows,) array, ...,
+"_mask": (rows,) bool}`` — the boolean selection vector realizes filters
+without changing the physical row count, so every relational kernel below
+is static-shaped and jittable (the columnar analogue of a late-materialized
+selection vector).
+
+Kernels:
+
+  * :func:`filter_mask`     — predicate over one column, narrows the mask;
+  * :func:`hash_join`       — equi-join against a unique-key build side
+    (sort + binary-search probe, the static-shape realization of a hash
+    join's build/probe phases);
+  * :func:`group_agg`       — segment-reduce per group id (sum / count /
+    mean / max), mask-weighted.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ir import TableT, ValidationError
+
+MASK = "_mask"
+
+_CMP = {
+    "eq": lambda a, b: a == b,
+    "ne": lambda a, b: a != b,
+    "lt": lambda a, b: a < b,
+    "le": lambda a, b: a <= b,
+    "gt": lambda a, b: a > b,
+    "ge": lambda a, b: a >= b,
+}
+
+
+class ColumnStore:
+    """Host-side container for one table: named columns of equal length.
+
+    Columns are canonicalized to 32-bit on ingest (the device
+    representation: JAX without x64 silently degrades 64-bit arrays, so the
+    store does the narrowing *explicitly* and refuses integer columns whose
+    values would wrap rather than corrupting keys silently).
+    """
+
+    def __init__(self, columns: Dict[str, np.ndarray]):
+        if not columns:
+            raise ValidationError("ColumnStore needs >= 1 column")
+        lens = {k: len(v) for k, v in columns.items()}
+        if len(set(lens.values())) != 1:
+            raise ValidationError(f"ragged columns: {lens}")
+        self._cols = {k: self._canon_col(k, np.asarray(v))
+                      for k, v in columns.items()}
+        self.rows = next(iter(lens.values()))
+
+    @staticmethod
+    def _canon_col(name: str, col: np.ndarray) -> np.ndarray:
+        if col.dtype in (np.int64, np.uint64, np.uint32):
+            info = np.iinfo(np.int32)
+            if col.size and (col.min() < info.min or col.max() > info.max):
+                raise ValidationError(
+                    f"column {name!r}: int values exceed int32 range; "
+                    f"re-key before ingest (device tables are 32-bit)")
+            return col.astype(np.int32)
+        if col.dtype == np.float64:
+            return col.astype(np.float32)
+        return col
+
+    @property
+    def type(self) -> TableT:
+        return TableT(tuple((k, str(v.dtype)) for k, v in self._cols.items()),
+                      self.rows)
+
+    def payload(self) -> dict:
+        out = {k: jnp.asarray(v) for k, v in self._cols.items()}
+        out[MASK] = jnp.ones((self.rows,), jnp.bool_)
+        return out
+
+    def column(self, name: str) -> np.ndarray:
+        return self._cols[name]
+
+
+# --------------------------------------------------------------------------
+# relational kernels (pure functions over column arrays)
+# --------------------------------------------------------------------------
+
+
+def table_mask(tbl: dict) -> jnp.ndarray:
+    if MASK in tbl:
+        return tbl[MASK]
+    any_col = next(v for k, v in tbl.items() if k != MASK)
+    return jnp.ones(any_col.shape[:1], jnp.bool_)
+
+
+def filter_mask(col: jnp.ndarray, cmp: str, value) -> jnp.ndarray:
+    if cmp not in _CMP:
+        raise ValidationError(f"filter: unknown cmp {cmp!r}")
+    return _CMP[cmp](col, value)
+
+
+def hash_join(lkeys: jnp.ndarray, rkeys: jnp.ndarray):
+    """Equi-join probe: for every left key, the index of the matching right
+    row and a match flag.  The build side must have unique keys (the
+    dimension-table convention); duplicate build keys would make the output
+    size dynamic, which a static-shape engine cannot express.
+
+    Returns ``(idx, matched)`` with ``idx.shape == lkeys.shape``.
+    """
+    if rkeys.shape[0] == 0:   # empty build side: every probe row unmatched
+        return (jnp.zeros(lkeys.shape, jnp.int32),
+                jnp.zeros(lkeys.shape, jnp.bool_))
+    order = jnp.argsort(rkeys)
+    sorted_r = rkeys[order]
+    pos = jnp.searchsorted(sorted_r, lkeys)
+    pos = jnp.clip(pos, 0, rkeys.shape[0] - 1)
+    idx = order[pos]
+    matched = sorted_r[pos] == lkeys
+    return idx, matched
+
+
+def group_agg(values: Optional[jnp.ndarray], keys: jnp.ndarray,
+              num_groups: int, mask: jnp.ndarray, fn: str) -> jnp.ndarray:
+    """Mask-weighted segment aggregate of ``values`` per group id."""
+    w = mask.astype(jnp.float32)
+    if fn == "count":
+        return jax.ops.segment_sum(w, keys, num_segments=num_groups)
+    v = values.astype(jnp.float32)
+    if fn == "sum":
+        return jax.ops.segment_sum(v * w, keys, num_segments=num_groups)
+    if fn == "mean":
+        s = jax.ops.segment_sum(v * w, keys, num_segments=num_groups)
+        c = jax.ops.segment_sum(w, keys, num_segments=num_groups)
+        return s / jnp.maximum(c, 1.0)
+    if fn == "max":
+        neg = jnp.where(mask, v, -jnp.inf)
+        m = jax.ops.segment_max(neg, keys, num_segments=num_groups)
+        return jnp.where(jnp.isfinite(m), m, 0.0)
+    raise ValidationError(f"group_agg: unknown fn {fn!r}")

@@ -1,0 +1,92 @@
+"""Pure-NumPy references for the store kernels.
+
+Used by the property tests (and nothing else): every JAX/Pallas store
+kernel must agree with the straightforward NumPy computation below.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def hash_join_ref(lkeys, rkeys):
+    """Reference equi-join probe against a unique-key build side."""
+    lkeys = np.asarray(lkeys)
+    rkeys = np.asarray(rkeys)
+    lut = {int(k): i for i, k in enumerate(rkeys)}
+    idx = np.zeros(lkeys.shape, np.int64)
+    matched = np.zeros(lkeys.shape, bool)
+    for i, k in enumerate(lkeys):
+        j = lut.get(int(k))
+        if j is not None:
+            idx[i] = j
+            matched[i] = True
+    return idx, matched
+
+
+def group_agg_ref(values, keys, num_groups, mask, fn):
+    """Reference mask-respecting groupby aggregate."""
+    keys = np.asarray(keys)
+    mask = np.asarray(mask, bool)
+    out = np.zeros(num_groups, np.float64)
+    for g in range(num_groups):
+        sel = (keys == g) & mask
+        if fn == "count":
+            out[g] = sel.sum()
+            continue
+        v = np.asarray(values, np.float64)[sel]
+        if v.size == 0:
+            out[g] = 0.0
+        elif fn == "sum":
+            out[g] = v.sum()
+        elif fn == "mean":
+            out[g] = v.mean()
+        elif fn == "max":
+            out[g] = v.max()
+        else:
+            raise ValueError(fn)
+    return out.astype(np.float32)
+
+
+def spmv_ref(src, dst, weights, n_nodes, x):
+    """y[v] = sum over edges (u -> v) of x[u] * w."""
+    y = np.zeros(n_nodes, np.float64)
+    np.add.at(y, np.asarray(dst), np.asarray(x, np.float64)[src]
+              * np.asarray(weights, np.float64))
+    return y
+
+
+def expand_ref(src, dst, weights, n_nodes, frontier, hops=1):
+    x = np.asarray(frontier, np.float64)
+    for _ in range(hops):
+        x = spmv_ref(src, dst, weights, n_nodes, x)
+    return x
+
+
+def pagerank_ref(src, dst, weights, n_nodes, iters=10, damping=0.85,
+                 personalization=None):
+    counts = np.bincount(np.asarray(src), minlength=n_nodes)
+    out_deg = np.maximum(counts, 1).astype(np.float64)
+    if personalization is None:
+        p0 = np.full(n_nodes, 1.0 / n_nodes)
+    else:
+        p = np.asarray(personalization, np.float64)
+        p0 = p / max(p.sum(), 1e-30)
+    r = p0.copy()
+    for _ in range(iters):
+        r = (1 - damping) * p0 + damping * spmv_ref(
+            src, dst, weights, n_nodes, r / out_deg)
+    return r
+
+
+def triangle_count_ref(src, dst, n_nodes):
+    a = np.zeros((n_nodes, n_nodes))
+    a[np.asarray(src), np.asarray(dst)] = 1.0
+    return float((a * (a @ a)).sum() / 6.0)
+
+
+def tfidf_scores_ref(doc_ids, term_ids, tf, doc_len, idf, query):
+    scores = np.zeros(len(doc_len), np.float64)
+    q = np.asarray(query, np.float64)
+    for d, t, f in zip(doc_ids, term_ids, np.asarray(tf, np.float64)):
+        scores[d] += q[t] * idf[t] * f / doc_len[d]
+    return scores

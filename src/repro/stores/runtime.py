@@ -1,0 +1,166 @@
+"""Executor implementations for the tri-store physical operators.
+
+Each store engine owns its impl table (``engines.py``); importing this
+module registers the relational / graph / text implementations plus the two
+cross-engine transfer realizations.  Store values travel through the plan
+as pytrees of JAX arrays (tables as column dicts with a ``_mask`` selection
+vector, graphs/corpora as their CSR/COO payload dicts), so a whole
+tri-model plan stays jittable end to end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engines import get_engine
+from .base import GRAPH_ENGINE, REL_ENGINE, TEXT_ENGINE
+from .column_store import MASK, filter_mask, group_agg, hash_join, table_mask
+from .graph_store import expand_frontier, pagerank, triangle_count
+from .text_store import tfidf_topk
+
+_XLA = get_engine("xla")
+_PALLAS = get_engine("pallas")
+
+
+# --------------------------------------------------------------------------
+# relational engine
+# --------------------------------------------------------------------------
+
+
+@REL_ENGINE.impl("rel_scan_col")
+def _i_rel_scan(ctx, args, node):
+    tbl = dict(args[0])
+    mask = table_mask(tbl)
+    cols = node.attrs.get("cols")
+    if cols:
+        tbl = {c: tbl[c] for c in cols}
+    tbl.pop(MASK, None)
+    tbl[MASK] = mask
+    return tbl
+
+
+@REL_ENGINE.impl("rel_filter_col")
+def _i_rel_filter(ctx, args, node):
+    tbl = dict(args[0])
+    m = filter_mask(tbl[node.attrs["col"]], node.attrs["cmp"],
+                    node.attrs["value"])
+    tbl[MASK] = table_mask(tbl) & m
+    return tbl
+
+
+@REL_ENGINE.impl("rel_hash_join")
+def _i_rel_join(ctx, args, node):
+    left, right = dict(args[0]), dict(args[1])
+    lo, ro = node.attrs["left_on"], node.attrs["right_on"]
+    idx, matched = hash_join(left[lo], right[ro])
+    lmask = table_mask(left)
+    rmask = table_mask(right)[idx]
+    out = {k: v for k, v in left.items() if k != MASK}
+    for k, v in right.items():
+        if k in (ro, MASK) or k in out:
+            continue
+        out[k] = v[idx]
+    out[MASK] = lmask & matched & rmask
+    return out
+
+
+@REL_ENGINE.impl("rel_group_agg_col")
+def _i_rel_group(ctx, args, node):
+    tbl = args[0]
+    key = tbl[node.attrs["key"]]
+    g = int(node.attrs["num_groups"])
+    mask = table_mask(tbl)
+    out = {node.attrs["key"]: jnp.arange(g, dtype=jnp.int32)}
+    for out_name, fn, col in node.attrs["aggs"]:
+        vals = None if fn == "count" else tbl[col]
+        out[out_name] = group_agg(vals, key, g, mask, fn)
+    count = group_agg(None, key, g, mask, "count")
+    out[MASK] = count > 0
+    return out
+
+
+@REL_ENGINE.impl("col_tensor_rel")
+def _i_col_tensor(ctx, args, node):
+    tbl = args[0]
+    v = tbl[node.attrs["col"]].astype(node.attrs.get("dtype", "float32"))
+    return jnp.where(table_mask(tbl), v, jnp.zeros_like(v))
+
+
+# --------------------------------------------------------------------------
+# graph engine (CSR fallback) + Pallas frontier kernels
+# --------------------------------------------------------------------------
+
+
+@GRAPH_ENGINE.impl("graph_expand_csr")
+def _i_expand_csr(ctx, args, node):
+    return expand_frontier(args[0], args[1],
+                           hops=int(node.attrs.get("hops", 1)))
+
+
+@_PALLAS.impl("graph_expand_pallas")
+def _i_expand_pallas(ctx, args, node):
+    return expand_frontier(args[0], args[1],
+                           hops=int(node.attrs.get("hops", 1)),
+                           use_pallas=True, interpret=ctx.interpret)
+
+
+@GRAPH_ENGINE.impl("graph_pagerank_csr")
+def _i_pagerank_csr(ctx, args, node):
+    return pagerank(args[0], iters=int(node.attrs.get("iters", 10)),
+                    damping=float(node.attrs.get("damping", 0.85)),
+                    personalization=args[1] if len(args) > 1 else None)
+
+
+@_PALLAS.impl("graph_pagerank_pallas")
+def _i_pagerank_pallas(ctx, args, node):
+    return pagerank(args[0], iters=int(node.attrs.get("iters", 10)),
+                    damping=float(node.attrs.get("damping", 0.85)),
+                    personalization=args[1] if len(args) > 1 else None,
+                    use_pallas=True, interpret=ctx.interpret)
+
+
+@GRAPH_ENGINE.impl("graph_tricount_csr")
+def _i_tricount(ctx, args, node):
+    return triangle_count(args[0])
+
+
+# --------------------------------------------------------------------------
+# text engine
+# --------------------------------------------------------------------------
+
+
+@TEXT_ENGINE.impl("text_topk_inv")
+def _i_text_topk(ctx, args, node):
+    ids, scores = tfidf_topk(args[0], args[1], int(node.attrs["k"]))
+    return {"doc": ids, "score": scores,
+            MASK: jnp.ones(ids.shape, jnp.bool_)}
+
+
+# --------------------------------------------------------------------------
+# cross-engine transfer
+# --------------------------------------------------------------------------
+
+
+@_XLA.impl("xfer_pin")
+def _i_xfer_pin(ctx, args, node):
+    # AWESOME's in-memory placement: the value stays device-resident; the
+    # receiving engine reads it in place (a no-op at run time — the win is
+    # exactly that nothing happens here)
+    return args[0]
+
+
+def _host_roundtrip(v):
+    return jax.tree.map(lambda a: np.array(a, copy=True), v)
+
+
+@_XLA.impl("xfer_spill")
+def _i_xfer_spill(ctx, args, node):
+    # per-op materialization: the value round-trips device -> host -> device
+    # (what a naive federated mediator does between every engine call).
+    # pure_callback keeps this expressible under jit while still forcing
+    # the host copy at every execution.
+    x = args[0]
+    shapes = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)), x)
+    return jax.pure_callback(_host_roundtrip, shapes, x)

@@ -1,0 +1,102 @@
+"""Inverted-index text store: tokenized corpus + top-k TF-IDF scoring.
+
+The corpus is stored as the COO of its term-document matrix — one
+``(doc_id, term_id, tf)`` triple per posting — plus per-document lengths
+and the idf table.  Scoring a dense query vector is then one gather + one
+segment-sum over the postings (static shapes, jittable):
+
+    score[d] = Σ_{postings (d, t)}  q[t] · idf[t] · tf[d,t] / len[d]
+
+followed by ``lax.top_k`` over documents.  The result is handed back as a
+*relation* (a (k,)-row table of ``doc``/``score``) — cross-engine by
+construction, which is what the planner's ``xfer`` placement operates on.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.ir import CorpusT, ValidationError
+
+
+class TextStore:
+    """Host-side container: tokenized documents -> inverted-index COO."""
+
+    def __init__(self, doc_ids, term_ids, tf, doc_len, idf, vocab: int):
+        self.doc_ids = np.asarray(doc_ids, np.int32)
+        self.term_ids = np.asarray(term_ids, np.int32)
+        self.tf = np.asarray(tf, np.float32)
+        self.doc_len = np.asarray(doc_len, np.float32)
+        self.idf = np.asarray(idf, np.float32)
+        self.vocab = int(vocab)
+        self.n_docs = int(self.doc_len.shape[0])
+        self.n_postings = int(self.doc_ids.shape[0])
+
+    @classmethod
+    def from_docs(cls, docs: Sequence[Iterable[int]], vocab: int
+                  ) -> "TextStore":
+        """``docs``: one iterable of term ids per document."""
+        doc_ids, term_ids, tfs = [], [], []
+        doc_len = np.zeros(len(docs), np.float32)
+        df = np.zeros(vocab, np.int64)
+        for d, terms in enumerate(docs):
+            terms = np.asarray(list(terms), np.int64)
+            if terms.size and (terms.min() < 0 or terms.max() >= vocab):
+                raise ValidationError(f"doc {d}: term id out of range")
+            doc_len[d] = max(terms.size, 1)
+            uniq, counts = np.unique(terms, return_counts=True)
+            doc_ids.append(np.full(uniq.shape, d, np.int64))
+            term_ids.append(uniq)
+            tfs.append(counts)
+            df[uniq] += 1
+        doc_ids = np.concatenate(doc_ids) if doc_ids else np.zeros(0, np.int64)
+        term_ids = (np.concatenate(term_ids) if term_ids
+                    else np.zeros(0, np.int64))
+        tfs = np.concatenate(tfs) if tfs else np.zeros(0, np.int64)
+        idf = np.log((1.0 + len(docs)) / (1.0 + df)) + 1.0   # smoothed idf
+        return cls(doc_ids, term_ids, tfs, doc_len, idf, vocab)
+
+    @property
+    def type(self) -> CorpusT:
+        return CorpusT(self.n_docs, self.vocab, self.n_postings)
+
+    def payload(self) -> dict:
+        return {
+            "doc_ids": jnp.asarray(self.doc_ids),
+            "term_ids": jnp.asarray(self.term_ids),
+            "tf": jnp.asarray(self.tf),
+            "doc_len": jnp.asarray(self.doc_len),
+            "idf": jnp.asarray(self.idf),
+        }
+
+    def query_vector(self, terms: Iterable[int]) -> np.ndarray:
+        """Dense (vocab,) query term-count vector for :func:`tfidf_scores`."""
+        q = np.zeros(self.vocab, np.float32)
+        for t in terms:
+            q[int(t)] += 1.0
+        return q
+
+
+# --------------------------------------------------------------------------
+# scoring kernels (pure functions over the payload)
+# --------------------------------------------------------------------------
+
+
+def tfidf_scores(corpus: dict, query):
+    """TF-IDF score of every document against a dense query vector."""
+    w = query.astype(jnp.float32) * corpus["idf"]
+    contrib = (w[corpus["term_ids"]] * corpus["tf"]
+               / corpus["doc_len"][corpus["doc_ids"]])
+    n_docs = corpus["doc_len"].shape[0]
+    return jax.ops.segment_sum(contrib, corpus["doc_ids"],
+                               num_segments=n_docs)
+
+
+def tfidf_topk(corpus: dict, query, k: int):
+    """Top-k documents by TF-IDF: ``(doc ids (k,), scores (k,))``."""
+    scores = tfidf_scores(corpus, query)
+    vals, ids = jax.lax.top_k(scores, int(k))
+    return ids.astype(jnp.int32), vals

@@ -316,6 +316,108 @@ def test_engine_availability_surfaces_in_explain():
         pallas.is_available = old
 
 
+def test_calibration_aware_eviction_prefers_stale_entries():
+    """Eviction order (ROADMAP open item): entries planned under a
+    superseded cost-model fit and untouched since the fit changed are
+    evicted first; entries re-proven live by a lookup under the current
+    fit stay protected (two callers sharing a cache must not thrash each
+    other); with no stale entries eviction is plain LRU."""
+    cache = PlanCache(maxsize=3)
+    cache.insert("A", "staged-a", fingerprint="fit-old")
+    cache.insert("B", "staged-b", fingerprint="fit-old")
+    cache.insert("C", "staged-c", fingerprint="fit-new")  # refit: epoch bump
+    assert cache.current_fingerprint == "fit-new"
+    cache.lookup("A")            # A touched after the refit -> proven live
+    cache.insert("D", "staged-d", fingerprint="fit-new")
+    assert "B" not in cache      # stale victim: old fit, untouched since
+    assert "A" in cache
+    assert cache.stale_evictions == 1
+    cache.insert("E", "staged-e", fingerprint="fit-new")
+    assert "A" in cache          # live-under-new-fit entries never stale...
+    assert "C" not in cache      # ...so plain LRU evicts C
+    assert cache.stale_evictions == 1 and cache.evictions == 2
+    assert set(cache._entries) == {"A", "D", "E"}
+    # the uncalibrated fallback never displaces a fitted fingerprint, so
+    # interleaved no-cost-model compiles cannot mark fitted entries stale
+    cache.note_fingerprint("analytic")
+    assert cache.current_fingerprint == "fit-new"
+
+
+def test_persisted_entries_keep_fit_fingerprints(tmp_path):
+    """Warm-started entries stay classified for stale-first eviction: the
+    fingerprint rides along on disk (without claiming currency on load)."""
+    d = str(tmp_path / "plans")
+    cache = PlanCache()
+    cache.insert("A", "staged-a", fingerprint="fit-1")
+    cache.insert("B", "staged-b")               # no fingerprint recorded
+    assert save_plan_cache(cache, d) == 2
+    warm = load_plan_cache(d)
+    assert warm._fps.get("A") == "fit-1" and "B" not in warm._fps
+    assert warm.current_fingerprint is None     # loading != calibrating
+
+
+def test_compile_refit_marks_cached_entries_stale():
+    """compile_staged threads the fit fingerprint into the cache: after a
+    refit, the next overflow evicts the pre-refit entry first."""
+    from repro.core.cost_model import CostModel, FEATURE_NAMES
+    cache = PlanCache(maxsize=2)
+    compile_staged(attn_plan(seq=16), CAT, SYS, cache=cache)      # analytic
+    compile_staged(attn_plan(seq=32), CAT, SYS, cache=cache)      # analytic
+    stale_id = next(iter(cache._entries))
+    cm = CostModel().fit([("sdpa_xla", {k: 1.0 for k in FEATURE_NAMES},
+                           1e-3)])
+    compile_staged(attn_plan(seq=64), CAT, SYS, cache=cache, cost_model=cm)
+    assert cache.stale_evictions == 1
+    assert stale_id not in cache
+
+
+def test_parallel_candidate_generation_identical_plans():
+    """Scan-group-parallel generation (ROADMAP open item): plan_threads
+    changes planning wall time only — the chosen plan, the choices, and the
+    plan_id are identical to the serial path (and plan_threads is not part
+    of the cache key)."""
+    from repro.core.ir import standard_catalog
+
+    def two_scan_plan():
+        p = Plan("ms")
+        t = TensorT((2, 8, 32), "float32", ("batch", "seq", "embed"))
+        p.add_input("h", t)
+        bodies = []
+        for i, n_layers in enumerate((2, 3)):   # different trip counts: no
+            b = Plan(f"body{i}")                # scan fusion, two groups
+            b.add_input("x", t)
+            a = b.add("attention", ["x"],
+                      {"heads": 4, "kv_heads": 2, "head_dim": 8, "embed": 32,
+                       "window": 4, "pp": ("attn",)})
+            m = b.add("mlp", [a], {"ffn": 64, "embed": 32, "pp": ("mlp",)})
+            b.set_outputs(m)
+            bodies.append((n_layers, b))
+        prev = "h"
+        for i, (n_layers, b) in enumerate(bodies):
+            prev = p.add("scan_layers", [prev],
+                         {"n_layers": n_layers, "pp": (f"blk{i}",)}, b)
+        p.set_outputs(prev)
+        return p
+
+    def concrete_shape(pp):
+        out = []
+        for n in pp.topo():
+            out.append((n.id, n.impl, n.inputs))
+            if n.subplan is not None:
+                out.extend(concrete_shape(n.subplan))
+        return out
+
+    serial = compile_staged(two_scan_plan(), CAT, SYS, cache=False,
+                            options=PlanOptions(engines=("xla", "pallas")))
+    threaded = compile_staged(
+        two_scan_plan(), CAT, SYS, cache=False,
+        options=PlanOptions(engines=("xla", "pallas"), plan_threads=4))
+    assert threaded.plan_id == serial.plan_id
+    assert concrete_shape(threaded.concrete) == concrete_shape(serial.concrete)
+    assert [(r["pattern"], r["chosen"]) for r in threaded.report] == \
+        [(r["pattern"], r["chosen"]) for r in serial.report]
+
+
 def test_lru_eviction_and_clear():
     cache = PlanCache(maxsize=2)
     for seq in (16, 32, 64):

@@ -1,0 +1,383 @@
+"""Tri-store subsystem: store containers, relational/graph/text kernels,
+cross-engine xfer placement, and end-to-end tri-model planning."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.adil import Analysis
+from repro.core.adil_parser import parse_adil
+from repro.core.engines import engine_names
+from repro.core.ir import (CorpusT, GraphT, SystemCatalog, TableT, TensorT,
+                           ValidationError, plan_id, standard_catalog)
+from repro.core.rewrite import (DEFAULT_PIPELINE, place_xfers,
+                                place_xfers_naive, rewrite)
+from repro.stores import (ColumnStore, GraphStore, TextStore, store_engines)
+from repro.stores import ref as R
+from repro.stores.column_store import filter_mask, group_agg, hash_join
+from repro.stores.graph_kernels import scatter_add_pallas
+from repro.stores.graph_store import expand_frontier, pagerank, triangle_count
+from repro.stores.text_store import tfidf_scores, tfidf_topk
+
+CAT = standard_catalog()
+SYS = SystemCatalog()
+
+
+# --------------------------------------------------------------------------
+# store containers
+# --------------------------------------------------------------------------
+
+def test_column_store_type_and_payload():
+    cs = ColumnStore({"id": np.arange(5, dtype=np.int32),
+                      "v": np.ones(5, np.float32)})
+    assert cs.type == TableT((("id", "int32"), ("v", "float32")), 5)
+    p = cs.payload()
+    assert set(p) == {"id", "v", "_mask"}
+    assert bool(p["_mask"].all())
+    with pytest.raises(ValidationError):
+        ColumnStore({"a": np.zeros(3), "b": np.zeros(4)})
+
+
+def test_column_store_canonicalizes_64bit_columns():
+    """64-bit host columns narrow to the 32-bit device representation
+    explicitly: the declared type matches what actually executes, and keys
+    that would wrap are refused instead of silently corrupted."""
+    cs = ColumnStore({"id": np.arange(4),            # int64 on Linux
+                      "v": np.ones(4, np.float64)})
+    assert cs.type == TableT((("id", "int32"), ("v", "float32")), 4)
+    assert str(cs.payload()["id"].dtype) == "int32"
+    with pytest.raises(ValidationError):             # snowflake-scale ids
+        ColumnStore({"id": np.array([2 ** 40, 1])})
+
+
+def test_graph_store_csr_and_type():
+    #  0 -> 1, 0 -> 2, 1 -> 2  (made symmetric)
+    g = GraphStore.from_edges([0, 0, 1], [1, 2, 2], 3, symmetric=True)
+    assert g.type == GraphT(3, 6)
+    assert list(g.indptr) == [0, 2, 4, 6]
+    assert sorted(zip(g.src.tolist(), g.indices.tolist())) == [
+        (0, 1), (0, 2), (1, 0), (1, 2), (2, 0), (2, 1)]
+    with pytest.raises(ValidationError):
+        GraphStore.from_edges([0], [5], 3)
+
+
+def test_text_store_index_and_type():
+    tx = TextStore.from_docs([[0, 0, 1], [1, 2]], vocab=4)
+    assert tx.type == CorpusT(2, 4, 4)     # (d0,t0) (d0,t1) (d1,t1) (d1,t2)
+    assert tx.n_postings == 4
+    # term 1 appears in both docs -> lowest idf among used terms
+    assert tx.idf[1] < tx.idf[0] and tx.idf[1] < tx.idf[2]
+
+
+# --------------------------------------------------------------------------
+# kernels vs references (deterministic spot checks; property tests live in
+# test_stores_properties.py)
+# --------------------------------------------------------------------------
+
+def test_hash_join_matches_reference(rng):
+    lkeys = rng.randint(0, 50, 64)
+    rkeys = rng.permutation(50)[:32]
+    idx, matched = hash_join(jnp.asarray(lkeys), jnp.asarray(rkeys))
+    ridx, rmatched = R.hash_join_ref(lkeys, rkeys)
+    np.testing.assert_array_equal(np.asarray(matched), rmatched)
+    np.testing.assert_array_equal(np.asarray(idx)[rmatched], ridx[rmatched])
+
+
+def test_group_agg_matches_reference(rng):
+    keys = rng.randint(0, 8, 100).astype(np.int32)
+    vals = rng.randn(100).astype(np.float32)
+    mask = rng.rand(100) > 0.3
+    for fn in ("sum", "count", "mean", "max"):
+        got = group_agg(jnp.asarray(vals), jnp.asarray(keys), 8,
+                        jnp.asarray(mask), fn)
+        want = R.group_agg_ref(vals, keys, 8, mask, fn)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_graph_ops_match_reference(rng):
+    n, e = 32, 200
+    src, dst = rng.randint(0, n, e), rng.randint(0, n, e)
+    g = GraphStore.from_edges(src, dst, n, symmetric=True)
+    gp = g.payload()
+    x = rng.rand(n).astype(np.float32)
+    got = expand_frontier(gp, jnp.asarray(x), hops=2)
+    want = R.expand_ref(g.src, g.indices, g.weights, n, x, hops=2)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4)
+
+    got_pr = pagerank(gp, iters=6, personalization=jnp.asarray(x))
+    want_pr = R.pagerank_ref(g.src, g.indices, g.weights, n, iters=6,
+                             personalization=x)
+    np.testing.assert_allclose(np.asarray(got_pr), want_pr, rtol=1e-4)
+
+    got_t = float(triangle_count(gp))
+    assert got_t == pytest.approx(R.triangle_count_ref(g.src, g.indices, n))
+
+
+def test_scatter_add_pallas_matches_segment_sum(rng):
+    n, e = 100, 500
+    dst = rng.randint(0, n, e).astype(np.int32)
+    vals = rng.randn(e).astype(np.float32)
+    got = scatter_add_pallas(jnp.asarray(vals), jnp.asarray(dst),
+                             num_nodes=n, interpret=True)
+    want = jax.ops.segment_sum(jnp.asarray(vals), jnp.asarray(dst),
+                               num_segments=n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_empty_edge_and_build_sides():
+    """Degenerate stores must degrade, not crash: a zero-edge graph scatters
+    to zeros on both backends, and an empty join build side leaves every
+    probe row unmatched."""
+    z = scatter_add_pallas(jnp.zeros((0,)), jnp.zeros((0,), jnp.int32),
+                           num_nodes=7, interpret=True)
+    np.testing.assert_array_equal(np.asarray(z), np.zeros(7))
+    g = GraphStore.from_edges(np.zeros(0, int), np.zeros(0, int), 5)
+    got = expand_frontier(g.payload(), jnp.ones(5), hops=1, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got), np.zeros(5))
+    idx, matched = hash_join(jnp.asarray([1, 2, 3]),
+                             jnp.asarray([], dtype=jnp.int32))
+    assert not bool(np.asarray(matched).any())
+    assert idx.shape == (3,)
+
+
+def test_tfidf_matches_reference(rng):
+    docs = [rng.randint(0, 16, rng.randint(2, 8)) for _ in range(20)]
+    tx = TextStore.from_docs(docs, 16)
+    q = tx.query_vector([1, 3, 5])
+    got = tfidf_scores(tx.payload(), jnp.asarray(q))
+    want = R.tfidf_scores_ref(tx.doc_ids, tx.term_ids, tx.tf, tx.doc_len,
+                              tx.idf, q)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
+    ids, scores = tfidf_topk(tx.payload(), jnp.asarray(q), 5)
+    np.testing.assert_allclose(np.asarray(scores),
+                               np.sort(want)[::-1][:5], rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# xfer placement
+# --------------------------------------------------------------------------
+
+def _attn_plan():
+    from repro.core.ir import Plan
+    p = Plan("ap")
+    p.add_input("h", TensorT((2, 16, 32), "float32",
+                             ("batch", "seq", "embed")))
+    a = p.add("attention", ["h"], {"heads": 4, "kv_heads": 2, "head_dim": 8,
+                                   "embed": 32, "pp": ("attn",)})
+    p.set_outputs(a)
+    return p
+
+
+def test_place_xfers_noop_on_tensor_plans():
+    out = rewrite(_attn_plan(), CAT)
+    assert not any(n.op == "xfer" for n in out.topo())
+
+
+def _tri_analysis(table, graph, corpus):
+    with Analysis("tri", CAT) as a:
+        tw = a.bind("tweets", table)
+        gr = a.bind("g", graph)
+        cx = a.bind("cx", corpus)
+        q = a.input("q", TensorT((corpus.vocab,), "float32", ("vocab",)))
+        t = a.op("rel_scan", tw)
+        hot = a.op("rel_filter", t, col="engagement", cmp="ge", value=20.0)
+        seeds = a.op("rel_group_agg", hot, key="hashtag", num_groups=graph.n_nodes,
+                     aggs=(("seed", "count", None),))
+        sv = a.op("col_tensor", seeds, col="seed", dim="nodes")
+        fr = a.op("graph_expand", gr, sv, hops=2)
+        pr = a.op("graph_pagerank", gr, fr, iters=4)
+        hits = a.op("text_topk", cx, q, k=8)
+        j = a.op("rel_join", t, hits, left_on="doc", right_on="doc")
+        trel = a.op("rel_group_agg", j, key="hashtag",
+                    num_groups=graph.n_nodes,
+                    aggs=(("textrel", "sum", "score"),))
+        tv = a.op("col_tensor", trel, col="textrel", dim="nodes")
+        comb = a.op("residual_add", pr, tv)
+        a.store(comb)
+    return a
+
+
+def _small_social(rng):
+    rows, nodes, vocab, docs = 300, 24, 32, 300
+    table = ColumnStore({
+        "user": rng.randint(0, 30, rows).astype(np.int32),
+        "hashtag": rng.randint(0, nodes, rows).astype(np.int32),
+        "doc": np.arange(rows, dtype=np.int32),
+        "engagement": (rng.rand(rows) * 50).astype(np.float32),
+    })
+    e = rng.randint(0, nodes, (2, 200))
+    graph = GraphStore.from_edges(e[0], e[1], nodes, symmetric=True)
+    corpus = TextStore.from_docs(
+        [rng.randint(0, vocab, rng.randint(2, 8)) for _ in range(docs)],
+        vocab)
+    return table, graph, corpus
+
+
+def test_place_xfers_marks_engine_boundaries(rng):
+    a = _tri_analysis(*_small_social(rng))
+    placed = place_xfers(a.plan, CAT)
+    xfers = [n for n in placed.topo() if n.op == "xfer"]
+    assert len(xfers) >= 4
+    crossings = {(n.attrs["src_engine"], n.attrs["dst_engine"])
+                 for n in xfers}
+    # rel -> graph (frontier seed), text -> rel (topk relation), and the
+    # store-engine -> xla boundaries of the final ranking
+    assert ("rel", "graph") in crossings
+    assert ("text", "rel") in crossings
+    assert not any(n.attrs.get("spill_only") for n in xfers)
+    naive = place_xfers_naive(a.plan, CAT)
+    spills = [n for n in naive.topo() if n.op == "xfer"]
+    assert all(n.attrs["spill_only"] for n in spills)
+    n_store_ops = sum(1 for n in a.plan.topo()
+                      if CAT.get(n.op).engine != "xla")
+    assert len(spills) == n_store_ops
+
+
+# --------------------------------------------------------------------------
+# end-to-end tri-model planning + execution
+# --------------------------------------------------------------------------
+
+def test_store_engines_registered():
+    assert set(engine_names()) >= {"xla", "pallas", "rel", "graph", "text"}
+    assert store_engines() == ("xla", "rel", "graph", "text")
+    assert store_engines(pallas=True)[-1] == "pallas"
+
+
+def test_tri_model_end_to_end_matches_numpy(rng):
+    table, graph, corpus = _small_social(rng)
+    a = _tri_analysis(table, graph, corpus)
+    fn = a.compile(SYS, engines=store_engines(), cache=False)
+
+    # planner pins every cross-engine boundary in device memory
+    xfer_choices = [r for r in fn.report if r["pattern"] == "xfer_op"]
+    assert xfer_choices and all(r["chosen"] == "xfer_pin"
+                                for r in xfer_choices)
+
+    q = corpus.query_vector([1, 2, 3])
+    inputs = {"tweets": table.payload(), "g": graph.payload(),
+              "cx": corpus.payload(), "q": jnp.asarray(q)}
+    got = np.asarray(fn({}, inputs))
+
+    # pure-NumPy reference pipeline
+    eng = table.column("engagement")
+    tags = table.column("hashtag")
+    mask = eng >= 20.0
+    seeds = R.group_agg_ref(None, tags, graph.n_nodes, mask, "count")
+    fr = R.expand_ref(graph.src, graph.indices, graph.weights,
+                      graph.n_nodes, seeds, hops=2)
+    pr = R.pagerank_ref(graph.src, graph.indices, graph.weights,
+                        graph.n_nodes, iters=4, personalization=fr)
+    scores = R.tfidf_scores_ref(corpus.doc_ids, corpus.term_ids, corpus.tf,
+                                corpus.doc_len, corpus.idf, q)
+    top = np.argsort(-scores, kind="stable")[:8]
+    trel = np.zeros(graph.n_nodes)
+    for d in top:
+        trel[tags[d]] += scores[d]          # doc id == row id here
+    np.testing.assert_allclose(got, pr + trel, rtol=1e-4, atol=1e-6)
+
+
+def test_naive_and_planned_placement_agree_bitwise(rng):
+    table, graph, corpus = _small_social(rng)
+    a = _tri_analysis(table, graph, corpus)
+    naive_pipeline = tuple(p for p in DEFAULT_PIPELINE
+                           if p != "place_xfers") + ("place_xfers_naive",)
+    planned = a.compile(SYS, engines=store_engines(), cache=False)
+    naive = a.compile(SYS, engines=store_engines(), cache=False,
+                      rewrite_pipeline=naive_pipeline)
+    assert any(n.impl == "xfer_spill" for n in naive.concrete.topo())
+    inputs = {"tweets": table.payload(), "g": graph.payload(),
+              "cx": corpus.payload(),
+              "q": jnp.asarray(corpus.query_vector([4, 5]))}
+    out_p = np.asarray(jax.jit(lambda i: planned({}, i))(inputs))
+    out_n = np.asarray(jax.jit(lambda i: naive({}, i))(inputs))
+    np.testing.assert_array_equal(out_p, out_n)
+
+
+def test_pallas_graph_candidates_selected_and_close(rng):
+    table, graph, corpus = _small_social(rng)
+    a = _tri_analysis(table, graph, corpus)
+    fn = a.compile(SYS, engines=store_engines(pallas=True), cache=False)
+    chosen = {r["pattern"]: r["chosen"] for r in fn.report}
+    assert chosen["graph_expand_op"] == "expand_pallas"
+    assert chosen["graph_pagerank_op"] == "pagerank_pallas"
+    fb = a.compile(SYS, engines=store_engines(), cache=False)
+    inputs = {"tweets": table.payload(), "g": graph.payload(),
+              "cx": corpus.payload(),
+              "q": jnp.asarray(corpus.query_vector([4, 5]))}
+    np.testing.assert_allclose(np.asarray(fn({}, inputs)),
+                               np.asarray(fb({}, inputs)), rtol=1e-4,
+                               atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# ADIL front ends: native table/graph/corpus declarations
+# --------------------------------------------------------------------------
+
+TRI_SRC = """
+USE socialDB;
+create analysis tiny_tri as {
+  tweets := table(rows=100, cols=[[hashtag, int32], [engagement, float32]]);
+  g      := graph(nodes=16, edges=64);
+  cx     := corpus(docs=100, vocab=32, postings=400);
+  q      := input([32], float32, dims=[vocab]);
+  t      := rel_scan(tweets);
+  hot    := rel_filter(t, col=engagement, cmp=ge, value=10.0);
+  seeds  := rel_group_agg(hot, key=hashtag, num_groups=16,
+                          aggs=[[seed, count, hashtag]]);
+  sv     := col_tensor(seeds, col=seed, dim=nodes);
+  pr     := graph_pagerank(g, sv, iters=3);
+  hits   := text_topk(cx, q, k=5);
+  store(pr);
+  store(hits);
+}
+"""
+
+
+def test_parser_store_declarations_match_builder():
+    parsed = parse_adil(TRI_SRC, CAT)
+    assert parsed.plan.inputs["tweets"] == TableT(
+        (("hashtag", "int32"), ("engagement", "float32")), 100)
+    assert parsed.plan.inputs["g"] == GraphT(16, 64)
+    assert parsed.plan.inputs["cx"] == CorpusT(100, 32, 400)
+
+    with Analysis("tiny_tri", CAT) as b:
+        tw = b.table("tweets", 100, (("hashtag", "int32"),
+                                     ("engagement", "float32")))
+        gr = b.graph("g", 16, 64)
+        cx = b.corpus("cx", 100, 32, 400)
+        q = b.input("q", TensorT((32,), "float32", ("vocab",)))
+        t = b.op("rel_scan", tw)
+        hot = b.op("rel_filter", t, col="engagement", cmp="ge", value=10.0)
+        seeds = b.op("rel_group_agg", hot, key="hashtag", num_groups=16,
+                     aggs=(("seed", "count", "hashtag"),))
+        sv = b.op("col_tensor", seeds, col="seed", dim="nodes")
+        pr = b.op("graph_pagerank", gr, sv, iters=3)
+        hits = b.op("text_topk", cx, q, k=5)
+        b.store(pr)
+        b.store(hits)
+    assert plan_id(parsed.plan, CAT, SYS) == plan_id(b.plan, CAT, SYS)
+
+
+def test_tri_store_type_validation():
+    with pytest.raises(ValidationError):        # filter on missing column
+        with Analysis("bad", CAT) as a:
+            tw = a.table("t", 10, (("x", "int32"),))
+            a.store(a.op("rel_filter", tw, col="nope", cmp="ge", value=1))
+    with pytest.raises(ValidationError):        # frontier shape mismatch
+        with Analysis("bad2", CAT) as a:
+            g = a.graph("g", 8, 16)
+            f = a.input("f", TensorT((4,), "float32", ("nodes",)))
+            a.store(a.op("graph_expand", g, f))
+    with pytest.raises(ValidationError):        # query vocab mismatch
+        with Analysis("bad3", CAT) as a:
+            cx = a.corpus("c", 10, 32, 50)
+            q = a.input("q", TensorT((16,), "float32", ("vocab",)))
+            a.store(a.op("text_topk", cx, q, k=3))
+    with pytest.raises(ValidationError):        # float group key
+        with Analysis("bad4", CAT) as a:
+            tw = a.table("t", 10, (("x", "float32"),))
+            a.store(a.op("rel_group_agg", tw, key="x", num_groups=4,
+                         aggs=(("n", "count", None),)))
+    with pytest.raises(ValidationError):        # weights/edges mismatch
+        GraphStore.from_edges([0, 1], [1, 0], 2, weights=[1.0, 2.0, 3.0])

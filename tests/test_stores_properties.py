@@ -1,0 +1,131 @@
+"""Property-based tests (hypothesis) for the tri-store kernels: every
+JAX/Pallas store kernel must agree with its pure-NumPy reference on
+arbitrary inputs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dependency: property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.stores import GraphStore, TextStore
+from repro.stores import ref as R
+from repro.stores.column_store import group_agg, hash_join
+from repro.stores.graph_kernels import scatter_add_pallas
+from repro.stores.graph_store import pagerank
+from repro.stores.text_store import tfidf_scores
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def join_case(draw):
+    n_right = draw(st.integers(1, 40))
+    universe = draw(st.integers(n_right, 80))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.RandomState(seed)
+    rkeys = rng.permutation(universe)[:n_right].astype(np.int32)  # unique
+    lkeys = rng.randint(0, universe, draw(st.integers(1, 60))).astype(np.int32)
+    return lkeys, rkeys
+
+
+@given(join_case())
+@settings(**SETTINGS)
+def test_hash_join_agrees_with_reference(case):
+    lkeys, rkeys = case
+    idx, matched = hash_join(jnp.asarray(lkeys), jnp.asarray(rkeys))
+    ridx, rmatched = R.hash_join_ref(lkeys, rkeys)
+    np.testing.assert_array_equal(np.asarray(matched), rmatched)
+    np.testing.assert_array_equal(np.asarray(idx)[rmatched], ridx[rmatched])
+
+
+@st.composite
+def group_case(draw):
+    groups = draw(st.integers(1, 12))
+    n = draw(st.integers(1, 80))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.RandomState(seed)
+    return (rng.randn(n).astype(np.float32),
+            rng.randint(0, groups, n).astype(np.int32),
+            groups,
+            rng.rand(n) > 0.4,
+            draw(st.sampled_from(["sum", "count", "mean", "max"])))
+
+
+@given(group_case())
+@settings(**SETTINGS)
+def test_group_agg_agrees_with_reference(case):
+    vals, keys, groups, mask, fn = case
+    got = group_agg(jnp.asarray(vals), jnp.asarray(keys), groups,
+                    jnp.asarray(mask), fn)
+    want = R.group_agg_ref(vals, keys, groups, mask, fn)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+@st.composite
+def graph_case(draw):
+    n = draw(st.integers(2, 40))
+    e = draw(st.integers(1, 150))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.RandomState(seed)
+    return (rng.randint(0, n, e), rng.randint(0, n, e), n,
+            rng.rand(n).astype(np.float32), draw(st.integers(1, 6)))
+
+
+@given(graph_case())
+@settings(**SETTINGS)
+def test_pagerank_agrees_with_reference(case):
+    src, dst, n, p, iters = case
+    g = GraphStore.from_edges(src, dst, n, symmetric=True)
+    got = pagerank(g.payload(), iters=iters, personalization=jnp.asarray(p))
+    want = R.pagerank_ref(g.src, g.indices, g.weights, n, iters=iters,
+                          personalization=p)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3, atol=1e-5)
+
+
+@st.composite
+def scatter_case(draw):
+    n = draw(st.integers(1, 300))
+    e = draw(st.integers(1, 600))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.RandomState(seed)
+    return (rng.randn(e).astype(np.float32),
+            rng.randint(0, n, e).astype(np.int32), n)
+
+
+@given(scatter_case())
+@settings(max_examples=10, deadline=None)
+def test_pallas_scatter_add_agrees_with_segment_sum(case):
+    vals, dst, n = case
+    got = scatter_add_pallas(jnp.asarray(vals), jnp.asarray(dst),
+                             num_nodes=n, interpret=True)
+    want = jax.ops.segment_sum(jnp.asarray(vals), jnp.asarray(dst),
+                               num_segments=n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+@st.composite
+def corpus_case(draw):
+    vocab = draw(st.integers(2, 24))
+    n_docs = draw(st.integers(1, 25))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.RandomState(seed)
+    docs = [rng.randint(0, vocab, rng.randint(1, 10)) for _ in range(n_docs)]
+    q_terms = rng.randint(0, vocab, draw(st.integers(1, 5)))
+    return docs, vocab, q_terms
+
+
+@given(corpus_case())
+@settings(**SETTINGS)
+def test_tfidf_agrees_with_reference(case):
+    docs, vocab, q_terms = case
+    tx = TextStore.from_docs(docs, vocab)
+    q = tx.query_vector(q_terms)
+    got = tfidf_scores(tx.payload(), jnp.asarray(q))
+    want = R.tfidf_scores_ref(tx.doc_ids, tx.term_ids, tx.tf, tx.doc_len,
+                              tx.idf, q)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
