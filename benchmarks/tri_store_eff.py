@@ -1,25 +1,30 @@
-"""Tri-store placement efficiency: planned cross-engine placement vs naive
-per-op materialization.
+"""Tri-store efficiency: cross-engine placement and predicate pushdown.
 
-Both paths run the *same* tri-model analysis (scan/filter/aggregate a tweet
-table -> expand + PageRank a hashtag co-mention graph -> TF-IDF top-k over
-the tweet corpus -> join + rank) through the same ``PlanPipeline``; the only
-difference is the final rewrite rule:
+Two benchmark modes over the same tri-model analysis family (scan/filter/
+aggregate a tweet table -> expand a hashtag graph -> score the tweet corpus
+-> join + rank), both through the same ``PlanPipeline``:
 
-  * **planned** — ``place_xfers``: xfer nodes only at true engine
-    boundaries, and the cost model picks ``xfer_pin`` (value stays
-    device-resident) per boundary: AWESOME's in-memory placement;
-  * **naive**   — ``place_xfers_naive``: every store-engine operator's
-    output is materialized through the host (``xfer_spill``), the way a
-    naive federated mediator hands each engine result back per call.
+**Placement mode** (default, PR 3): planned ``place_xfers`` (xfer nodes
+only at true engine boundaries, cost model pins them device-resident) vs
+``place_xfers_naive`` (every store-op output materialized through the
+host, the federated-mediator strawman).  Spill is an exact copy, so the
+two paths must produce **bitwise-identical** results; planned must be
+**>= 2x** faster.
 
-Spill is an exact copy, so the two paths must produce **bitwise-identical**
-results; the planned path must be **>= 2x** faster.  Run with ``--smoke``
-for the CI-sized workload.
+**Selective mode** (``--selective``): planned-*pushdown* (the default
+pipeline's ``push_predicates`` + ``fuse_store_ops``: candidate-doc masks
+cross into the text engine, frontier sparsity into the graph engine, rel
+chains fuse) vs PR 3's planned-but-unpushed pipeline on a time-windowed
+workload ("rank this window's tweets") at 1-100% window selectivity.
+Pushdown executes the same math behind masked block-skipping candidates,
+so results stay **bitwise identical** while skipping the posting/edge
+blocks the window masks out; at <= 10% selectivity the pushed plan must be
+**>= 2x** faster.  The sweep is written to ``BENCH_tri_store.json``.
 
-    PYTHONPATH=src python -m benchmarks.tri_store_eff [--smoke]
+    PYTHONPATH=src python -m benchmarks.tri_store_eff [--smoke] [--selective]
 """
 import argparse
+import json
 import sys
 import time
 
@@ -30,11 +35,13 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.core.adil import Analysis
 from repro.core.ir import SystemCatalog, TensorT, standard_catalog
-from repro.core.rewrite import DEFAULT_PIPELINE
+from repro.core.rewrite import UNPUSHED_PIPELINE
 from repro.stores import ColumnStore, GraphStore, TextStore, store_engines
 
-# the naive pipeline swaps only the placement rule
-NAIVE_PIPELINE = tuple(p for p in DEFAULT_PIPELINE if p != "place_xfers") \
+# the naive baseline keeps PR 3's *unfused* per-op shape (fusion would
+# collapse store ops and quietly halve its host round-trips) and swaps
+# only the placement rule
+NAIVE_PIPELINE = tuple(p for p in UNPUSHED_PIPELINE if p != "place_xfers") \
     + ("place_xfers_naive",)
 
 
@@ -97,13 +104,83 @@ def build_workload(rng, *, tweets, docs, hashtags, edges, vocab, terms_hi,
     return a, inputs
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized workload (seconds, not minutes)")
-    ap.add_argument("--min-speedup", type=float, default=2.0)
-    args = ap.parse_args(argv)
+def build_selective_workload(rng, selectivity, *, tweets, hashtags, edges,
+                             vocab, terms_lo, terms_hi):
+    """Time-windowed ranking: "among the window's tweets, the top-k most
+    query-relevant, aggregated per hashtag, plus the window's seed
+    expansion over the co-mention graph".
 
+    Tweets arrive append-ordered (``ts`` ascending), so a recency window
+    is a clustered doc range — exactly the regime where masked block-
+    skipping pays.  Hashtag popularity is zipfian (popular tags = low
+    ids), so the seed frontier clusters too.  The window's selection is
+    expressed *relationally* (filter -> sel_mask -> masked top-k); the
+    default pipeline's ``push_predicates`` carries it into the text and
+    graph engines, the unpushed PR 3 pipeline executes it densely.
+    """
+    docs = tweets                       # 1:1 tweet <-> indexed document
+    tag = (rng.zipf(1.3, tweets) % hashtags).astype(np.int32)
+    cols = {
+        "hashtag": tag,
+        "doc": np.arange(tweets, dtype=np.int32),
+        "ts": np.arange(tweets, dtype=np.int32),       # append-ordered log
+        "engagement": (rng.gamma(2.0, 12.0, tweets)).astype(np.float32),
+    }
+    for i in range(8):
+        cols[f"metric{i}"] = rng.rand(tweets).astype(np.float32)
+    table = ColumnStore(cols)
+    # co-mention edges between zipf-popular tags: frontier support clusters
+    src = (rng.zipf(1.3, edges) % hashtags).astype(np.int64)
+    dst = rng.randint(0, hashtags, edges)
+    graph = GraphStore.from_edges(src, dst, hashtags, symmetric=True)
+    lens = rng.randint(terms_lo, terms_hi, docs)
+    flat = (rng.zipf(1.4, int(lens.sum())) % vocab).astype(np.int64)
+    corpus = TextStore.from_docs(np.split(flat, np.cumsum(lens)[:-1]), vocab)
+
+    cut = int(tweets * (1.0 - selectivity))
+    cat = standard_catalog()
+    with Analysis(f"tri_selective_{selectivity}", cat) as a:
+        tw = a.bind("tweets", table)
+        gr = a.bind("g", graph)
+        cx = a.bind("cx", corpus)
+        q = a.input("q", TensorT((vocab,), "float32", ("vocab",)))
+        t = a.op("rel_scan", tw)
+        recent = a.op("rel_filter", t, col="ts", cmp="ge", value=cut,
+                      selectivity=selectivity)
+        m = a.op("sel_mask", recent, col="doc", size=docs)
+        sc = a.op("text_scores", cx, q)
+        hits = a.op("masked_topk", sc, m, k=64)
+        j = a.op("rel_join", recent, hits, left_on="doc", right_on="doc")
+        trel = a.op("rel_group_agg", j, key="hashtag", num_groups=hashtags,
+                    aggs=(("textrel", "sum", "score"),))
+        seeds = a.op("rel_group_agg", recent, key="hashtag",
+                     num_groups=hashtags, aggs=(("seed", "count", None),))
+        sv = a.op("col_tensor", seeds, col="seed", dim="nodes")
+        fr = a.op("graph_expand", gr, sv, hops=2)
+        tv = a.op("col_tensor", trel, col="textrel", dim="nodes")
+        comb = a.op("residual_add", fr, tv)
+        a.store(comb)
+
+    inputs = {"tweets": table.payload(), "g": graph.payload(),
+              "cx": corpus.payload(),
+              "q": jnp.asarray(corpus.query_vector(rng.randint(0, vocab, 6)))}
+    return a, inputs
+
+
+def t_min(f, inputs, warmup=2, iters=10):
+    """min-of-N: background noise in shared CI runners is strictly
+    additive, so the minimum is the clean estimate of each path's cost."""
+    for _ in range(warmup):
+        jax.block_until_ready(f(inputs))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(inputs))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_placement(args):
     rng = np.random.RandomState(0)
     size = (dict(tweets=120_000, docs=6_000, hashtags=1024, edges=4_000,
                  vocab=256, terms_hi=6, iters=2) if args.smoke else
@@ -133,20 +210,8 @@ def main(argv=None):
     identical = np.array_equal(out_p, out_n)
     print(f"[tri_store_eff] bitwise-identical results: {identical}")
 
-    # min-of-N: background noise in shared CI runners is strictly additive,
-    # so the minimum is the clean estimate of each path's true cost
-    def t_min(f, warmup=2, iters=10):
-        for _ in range(warmup):
-            jax.block_until_ready(f(inputs))
-        best = float("inf")
-        for _ in range(iters):
-            t0 = time.perf_counter()
-            jax.block_until_ready(f(inputs))
-            best = min(best, time.perf_counter() - t0)
-        return best
-
-    t_planned = t_min(fp)
-    t_naive = t_min(fn)
+    t_planned = t_min(fp, inputs)
+    t_naive = t_min(fn, inputs)
     speedup = t_naive / t_planned
     emit([
         ("tri_planned", t_planned * 1e6, f"speedup={speedup:.2f}x"),
@@ -162,6 +227,77 @@ def main(argv=None):
         print(f"[tri_store_eff] FAIL: speedup {speedup:.2f}x < "
               f"{args.min_speedup:.1f}x")
     return 0 if ok else 1
+
+
+def run_selective(args):
+    size = (dict(tweets=120_000, hashtags=16_384, edges=60_000,
+                 vocab=512, terms_lo=10, terms_hi=18) if args.smoke else
+            dict(tweets=250_000, hashtags=32_768, edges=150_000,
+                 vocab=1024, terms_lo=12, terms_hi=20))
+    sweep = [0.01, 0.05, 0.10, 1.0]
+    engines = store_engines()
+    syscat = SystemCatalog()
+    rows, ok = [], True
+    for sel in sweep:
+        rng = np.random.RandomState(0)
+        analysis, inputs = build_selective_workload(rng, sel, **size)
+        pushed = analysis.compile(syscat, engines=engines, cache=False)
+        unpushed = analysis.compile(syscat, engines=engines, cache=False,
+                                    rewrite_pipeline=UNPUSHED_PIPELINE)
+        impls = {n.impl for n in pushed.concrete.topo()}
+        fp = jax.jit(lambda i, p=pushed: p({}, i))
+        fu = jax.jit(lambda i, u=unpushed: u({}, i))
+        identical = bool(np.array_equal(np.asarray(fp(inputs)),
+                                        np.asarray(fu(inputs))))
+        tp = t_min(fp, inputs)
+        tu = t_min(fu, inputs)
+        speedup = tu / tp
+        rows.append({
+            "selectivity": sel,
+            "pushed_ms": tp * 1e3, "unpushed_ms": tu * 1e3,
+            "speedup": speedup, "identical": identical,
+            "masked_impls": sorted(i for i in impls
+                                   if "skip" in i or "masked" in i),
+        })
+        print(f"[tri_store_eff] sel={sel:>5.0%}  pushed {tp * 1e3:7.1f} ms  "
+              f"unpushed {tu * 1e3:7.1f} ms  -> {speedup:5.2f}x  "
+              f"identical={identical}  {rows[-1]['masked_impls']}")
+        ok &= identical
+        if sel <= 0.10:
+            ok &= speedup >= args.min_speedup
+            if speedup < args.min_speedup:
+                print(f"[tri_store_eff] FAIL: sel={sel:.0%} speedup "
+                      f"{speedup:.2f}x < {args.min_speedup:.1f}x")
+        if not identical:
+            print(f"[tri_store_eff] FAIL: sel={sel:.0%} results differ")
+
+    report = {
+        "benchmark": "tri_store_eff", "mode": "selective",
+        "smoke": bool(args.smoke), "min_speedup": args.min_speedup,
+        "workload": size, "sweep": rows, "ok": bool(ok),
+    }
+    with open(args.json_out, "w") as fh:
+        json.dump(report, fh, indent=2)
+    print(f"[tri_store_eff] wrote {args.json_out}")
+    emit([(f"tri_pushed_sel{int(r['selectivity'] * 100)}",
+           r["pushed_ms"] * 1e3, f"speedup={r['speedup']:.2f}x")
+          for r in rows])
+    return 0 if ok else 1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized workload (seconds, not minutes)")
+    ap.add_argument("--selective", action="store_true",
+                    help="predicate-pushdown sweep (pushed vs PR 3 "
+                         "unpushed) instead of placement vs naive")
+    ap.add_argument("--min-speedup", type=float, default=2.0)
+    ap.add_argument("--json-out", default="BENCH_tri_store.json")
+    args = ap.parse_args(argv)
+    if args.selective:
+        return run_selective(args)
+    return run_placement(args)
 
 
 if __name__ == "__main__":

@@ -329,6 +329,107 @@ def _e_text_topk(in_types, attrs, syscat):
                   float(c.bytesize()) + c.docs * 4.0, 0.0)
 
 
+@estimator("text_scores_inv")
+def _e_text_scores(in_types, attrs, syscat):
+    c = in_types[0]
+    if not isinstance(c, CorpusT):
+        return OpCost(0.0, _sum_bytes(in_types), 0.0)
+    return OpCost(2.0 * c.postings, float(c.bytesize()) + c.docs * 4.0, 0.0)
+
+
+@estimator("masked_topk_xla")
+def _e_masked_topk(in_types, attrs, syscat):
+    t = _tensor_like(in_types[0])
+    n = int(t.shape[0]) if t is not None and t.rank else 1
+    k = int(attrs.get("k", 10))
+    return OpCost(n * max(1.0, math.log2(max(k, 2))), n * 9.0, 0.0)
+
+
+@estimator("sel_mask_rel")
+def _e_sel_mask(in_types, attrs, syscat):
+    t = in_types[0]
+    rows = t.rows if isinstance(t, TableT) else 1
+    return OpCost(float(rows), rows * 5.0 + int(attrs.get("size", 1)), 0.0)
+
+
+# expected-selectivity pricing (pushdown's decision variable): masked ops
+# carry the rewrite pass's estimate as an IR attr, and the skip candidates
+# are credited exactly the postings/edges they are expected not to touch —
+# plus a per-block control overhead, so at selectivity ~1.0 the dense
+# candidate prices lower and the planner keeps the unpushed execution.
+
+TEXT_SKIP_BLOCK = 8192       # postings per block-skip scan step
+GRAPH_SKIP_BLOCK = 2048      # edges per block-skip SpMV step
+_BLOCK_OVERHEAD_FLOPS = 256.0
+
+
+@estimator("text_topk_skip_inv", "text_topk_masked_pallas")
+def _e_text_topk_skip(in_types, attrs, syscat):
+    c = in_types[0]
+    if not isinstance(c, CorpusT):
+        return OpCost(0.0, _sum_bytes(in_types), 0.0)
+    s = float(attrs.get("selectivity", 1.0))
+    k = int(attrs.get("k", 10))
+    blocks = max(1.0, c.postings / TEXT_SKIP_BLOCK)
+    flops = (2.0 * c.postings * s + blocks * _BLOCK_OVERHEAD_FLOPS
+             + c.docs * max(1.0, math.log2(max(k, 2))))
+    bts = float(c.bytesize()) * s + c.docs * 9.0 + blocks * 64.0
+    if attrs.get("_impl_pallas"):
+        bts /= 2     # doc-block accumulator stays VMEM-resident
+    return OpCost(flops, bts, 0.0)
+
+
+@estimator("graph_expand_skip")
+def _e_graph_expand_skip(in_types, attrs, syscat):
+    g = in_types[0]
+    if not isinstance(g, GraphT):
+        return OpCost(0.0, _sum_bytes(in_types), 0.0)
+    s = float(attrs.get("frontier_selectivity", 1.0))
+    hops = int(attrs.get("hops", 1))
+    e, n = int(g.edges), int(g.nodes)
+    deg = max(1.0, e / max(n, 1))
+    # the frontier densifies by ~avg-degree per hop: later hops skip less
+    eff = sum(min(1.0, s * deg ** h) for h in range(hops)) / max(hops, 1)
+    base = _graph_cost(g, hops, syscat)
+    blocks = max(1.0, e / GRAPH_SKIP_BLOCK)
+    return OpCost(base.flops * eff + hops * (blocks * _BLOCK_OVERHEAD_FLOPS
+                                             + 2.0 * n),
+                  base.bytes * eff + hops * (n * 8.0 + blocks * 64.0), 0.0)
+
+
+# fused store chains: Eq. 1 over the recorded steps (each step priced by
+# its per-op estimator on the recorded input types), minus the interior
+# table reads the fusion avoids — interior steps stream the mask, not the
+# full relation, so each non-head step is charged its output instead of a
+# second full input pass.
+
+_STEP_IMPL = {"rel_scan": "rel_scan_col", "rel_filter": "rel_filter_col",
+              "rel_join": "rel_hash_join", "rel_group_agg":
+              "rel_group_agg_col"}
+
+
+@estimator("rel_fused_col", "rel_fused_agg_pallas")
+def _e_rel_fused(in_types, attrs, syscat):
+    total = OpCost()
+    prev_t = None
+    for op, step_attrs, srcs, out_t in attrs.get("chain", ()):
+        step_ins = [prev_t if s == "prev" else
+                    (in_types[int(s)] if int(s) < len(in_types) else None)
+                    for s in srcs]
+        c = op_cost(_STEP_IMPL.get(op, op), step_ins, step_attrs, syscat)
+        if prev_t is not None:
+            # fused: the interior input was just produced in-engine; credit
+            # one full-relation read per non-head step
+            c.bytes = max(0.0, c.bytes - _sum_bytes([prev_t]))
+        total.flops += c.flops
+        total.bytes += c.bytes
+        total.coll_bytes += c.coll_bytes
+        prev_t = out_t
+    if attrs.get("_impl_pallas"):
+        total.bytes *= 0.75   # masked one-hot agg keeps partials in VMEM
+    return total
+
+
 @estimator("xfer_pin")
 def _e_xfer_pin(in_types, attrs, syscat):
     # stays device-resident: one HBM pass at most (often free after fusion)

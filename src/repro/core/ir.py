@@ -972,17 +972,88 @@ def standard_catalog() -> FunctionCatalog:
         expect_graph(ins[0], "graph_tricount")
         return ScalarT("float32")
 
-    @cat.op("text_topk", n_inputs=2, required_attrs=("k",), engine="text")
+    @cat.op("text_topk", n_inputs=(2, 3), required_attrs=("k",), engine="text")
     def _text_topk(ins, attrs, sub):
         c = expect_corpus(ins[0], "text_topk")
         q = expect_tensor(ins[1], "text_topk query")
         if q.shape != (c.vocab,):
             raise ValidationError(
                 f"text_topk: query {q.shape} vs vocab {c.vocab}")
+        if len(ins) == 3:
+            # candidate-doc mask (predicate pushdown): score only unmasked
+            # docs; rows beyond the unmasked count come back mask=False
+            m = expect_tensor(ins[2], "text_topk doc mask")
+            if m.shape != (c.docs,) or str(m.dtype) != "bool":
+                raise ValidationError(
+                    f"text_topk: doc mask must be bool ({c.docs},), got {m!r}")
         k = int(attrs["k"])
-        if not 0 < k <= c.docs:
+        if k < 1:
             raise ValidationError(f"text_topk: k={k} out of range")
-        return TableT((("doc", "int32"), ("score", "float32")), k)
+        # k is clamped to the document count (the true result size); rows
+        # whose score slot is unfilled (k > unmasked count under a pushed
+        # mask) are masked out at run time rather than over-reported here
+        return TableT((("doc", "int32"), ("score", "float32")),
+                      min(k, c.docs))
+
+    @cat.op("text_scores", n_inputs=2, engine="text")
+    def _text_scores(ins, attrs, sub):
+        c = expect_corpus(ins[0], "text_scores")
+        q = expect_tensor(ins[1], "text_scores query")
+        if q.shape != (c.vocab,):
+            raise ValidationError(
+                f"text_scores: query {q.shape} vs vocab {c.vocab}")
+        return TensorT((c.docs,), "float32", ("docs",))
+
+    @cat.op("masked_topk", n_inputs=2, required_attrs=("k",))
+    def _masked_topk(ins, attrs, sub):
+        s = expect_tensor(ins[0], "masked_topk scores")
+        m = expect_tensor(ins[1], "masked_topk mask")
+        if s.rank != 1 or m.shape != s.shape:
+            raise ValidationError(
+                f"masked_topk: scores {s!r} vs mask {m!r}")
+        if str(m.dtype) != "bool":
+            raise ValidationError(f"masked_topk: mask must be bool, got {m!r}")
+        k = int(attrs["k"])
+        if k < 1:
+            raise ValidationError(f"masked_topk: k={k} out of range")
+        return TableT((("doc", "int32"), ("score", "float32")),
+                      min(k, int(s.shape[0])))
+
+    @cat.op("sel_mask", n_inputs=1, required_attrs=("col", "size"),
+            engine="rel")
+    def _sel_mask(ins, attrs, sub):
+        """Selection-mask export: the relation's mask scattered over an
+        entity domain (``mask[v] = any selected row with col == v``) — the
+        boolean that predicate pushdown carries into the other engines."""
+        t = expect_table(ins[0], "sel_mask")
+        if not t.has_col(attrs["col"]):
+            raise ValidationError(f"sel_mask: no column {attrs['col']!r}")
+        dt = str(t.col_dtype(attrs["col"]))
+        if not (dt.startswith("int") or dt.startswith("uint")):
+            raise ValidationError(
+                f"sel_mask: column {attrs['col']!r} must be integer "
+                f"(entity ids), got {dt}")
+        return TensorT((int(attrs["size"]),), "bool",
+                       (attrs.get("dim", "docs"),))
+
+    @cat.op("rel_fused", n_inputs=(1, 8), required_attrs=("chain",),
+            engine="rel")
+    def _rel_fused(ins, attrs, sub):
+        """Fused same-engine chain (the ``fuse_store_ops`` product): each
+        step is (op, attrs, srcs, out_type) where srcs name either "prev"
+        (the previous step's output) or an integer input position."""
+        prev = None
+        for op, step_attrs, srcs, _out in attrs["chain"]:
+            step_ins = []
+            for s in srcs:
+                if s == "prev":
+                    if prev is None:
+                        raise ValidationError("rel_fused: 'prev' in 1st step")
+                    step_ins.append(prev)
+                else:
+                    step_ins.append(ins[int(s)])
+            prev = cat.get(op).infer(step_ins, dict(step_attrs), None)
+        return prev
 
     @cat.op("xfer", n_inputs=1)
     def _xfer(ins, attrs, sub):

@@ -129,6 +129,23 @@ defop("graph_pagerank_pallas", dp_cap=EX, buf_cap=SS, cap_on=None,
 defop("graph_tricount_csr", dp_cap=ST, buf_cap=SI, cap_on=None,
       backend="graph")
 defop("text_topk_inv", dp_cap=ST, buf_cap=SI, cap_on=None, backend="text")
+# predicate-pushdown physical surface: mask export from the relational
+# engine, full-corpus scoring, tensor-level masked top-k, and the masked
+# scoring realizations (dense, block-skipping, Pallas one-hot superkernel)
+defop("sel_mask_rel", dp_cap=ST, buf_cap=SO, cap_on=None, backend="rel")
+defop("text_scores_inv", dp_cap=ST, buf_cap=SI, cap_on=None, backend="text")
+defop("masked_topk_xla", dp_cap=ST, buf_cap=SI, cap_on=None)
+defop("text_topk_skip_inv", dp_cap=ST, buf_cap=SI, cap_on=None,
+      backend="text")
+defop("text_topk_masked_pallas", dp_cap=EX, buf_cap=SS, cap_on=None,
+      backend="pallas")
+# fused same-engine store chains (fuse_store_ops product) + the masked
+# segment-aggregate superkernel; block-skipping frontier expansion
+defop("rel_fused_col", dp_cap=ST, buf_cap=SI, cap_on=None, backend="rel")
+defop("rel_fused_agg_pallas", dp_cap=EX, buf_cap=SI, cap_on=None,
+      backend="pallas")
+defop("graph_expand_skip", dp_cap=ST, buf_cap=SS, cap_on=None,
+      backend="graph")
 # cross-engine transfer: pin keeps the value device-resident (AWESOME's
 # in-memory placement), spill materializes it through the host (the
 # federated-baseline behaviour).  Spill is blocking for buffering purposes.
@@ -222,6 +239,34 @@ def _not_spill_only(nodes):
     return not any(n.attrs.get("spill_only") for n in nodes)
 
 
+# masked-candidate gates: the skip/fused realizations are offered only when
+# a doc mask was pushed in *and* the estimated selectivity is low enough
+# that skipping can plausibly win — above the threshold the dense plan is
+# the only candidate, so at selectivity 1.0 the unpushed execution is kept
+SKIP_SELECTIVITY_THRESHOLD = 0.25
+
+
+def _skip_worthwhile(nodes):
+    return (len(nodes[0].inputs) == 3
+            and float(nodes[0].attrs.get("selectivity", 1.0))
+            <= SKIP_SELECTIVITY_THRESHOLD)
+
+
+def _frontier_sparse(nodes):
+    return (float(nodes[0].attrs.get("frontier_selectivity", 1.0))
+            <= SKIP_SELECTIVITY_THRESHOLD)
+
+
+def _agg_kernel_ok(nodes):
+    """The masked segment-aggregate kernel covers the sum family only (max
+    needs a segment-max reduction the one-hot matmul cannot express)."""
+    chain = nodes[0].attrs.get("chain", ())
+    if not chain or chain[-1][0] != "rel_group_agg":
+        return False
+    return all(fn in ("sum", "count", "mean")
+               for _, fn, _c in chain[-1][1]["aggs"])
+
+
 DEFAULT_PATTERNS = (
     # fused attention: the map-fusion product (Fig. 7's larger-pattern win)
     Pattern(
@@ -277,6 +322,35 @@ DEFAULT_PATTERNS = (
                       requires_backend="graph"),
             Candidate("expand_pallas", ("graph_expand_pallas",),
                       requires_backend="pallas"),
+            # frontier-mask pushdown: per-hop block-skipping SpMV, offered
+            # when the estimated frontier sparsity makes skipping plausible
+            Candidate("expand_skip", ("graph_expand_skip",),
+                      requires_backend="graph", when=_frontier_sparse),
+        ),
+    ),
+    # text top-k: dense scoring always; with a pushed candidate-doc mask at
+    # low estimated selectivity, the block-skipping and Pallas masked
+    # superkernels compete on the cost model's selectivity-priced features
+    Pattern(
+        "text_topk_op", ("text_topk",),
+        (
+            Candidate("topk_dense", ("text_topk_inv",),
+                      requires_backend="text"),
+            Candidate("topk_blockskip", ("text_topk_skip_inv",),
+                      requires_backend="text", when=_skip_worthwhile),
+            Candidate("topk_masked_pallas", ("text_topk_masked_pallas",),
+                      requires_backend="pallas", when=_skip_worthwhile),
+        ),
+    ),
+    # fused store chains: the single-call columnar realization vs the
+    # masked segment-aggregate Pallas superkernel for agg-terminated chains
+    Pattern(
+        "rel_fused_op", ("rel_fused",),
+        (
+            Candidate("rel_fused_col", ("rel_fused_col",),
+                      requires_backend="rel"),
+            Candidate("rel_fused_agg", ("rel_fused_agg_pallas",),
+                      requires_backend="pallas", when=_agg_kernel_ok),
         ),
     ),
     Pattern(
@@ -334,7 +408,10 @@ DIRECT_IMPL = {
     "rel_group_agg": "rel_group_agg_col",
     "col_tensor": "col_tensor_rel",
     "graph_tricount": "graph_tricount_csr",
-    "text_topk": "text_topk_inv",
+    # text_topk is pattern-matched (masked candidates); these stay direct
+    "sel_mask": "sel_mask_rel",
+    "text_scores": "text_scores_inv",
+    "masked_topk": "masked_topk_xla",
 }
 
 

@@ -236,6 +236,15 @@ class StagedPhysicalPlan:
                 lines.append(
                     f"    . {rule['rule']:<18}{rule['wall_ms']:>7.2f}  "
                     f"{rule['nodes_before']} -> {rule['nodes_after']}")
+                # per-rule detail (pushdown: which ops received masks and
+                # the estimated selectivity; fusion: collapsed chains)
+                for rewr in rule.get("info", {}).get("pushed", ()):
+                    lines.append("        + " + " ".join(
+                        f"{k}={v}" for k, v in rewr.items()))
+                for ch in rule.get("info", {}).get("fused_chains", ()):
+                    lines.append(
+                        f"        + fused {'->'.join(ch['ops'])} "
+                        f"(head={ch['head']})")
         for r in self.report:
             costs = {k: f"{v:.3e}" for k, v in r["costs"].items()}
             lines.append(f"  choice [{r['pattern']}] -> {r['chosen']} "

@@ -427,17 +427,322 @@ def place_xfers_naive(plan: Plan, catalog: FunctionCatalog) -> Plan:
 
 
 # --------------------------------------------------------------------------
+# 5. cross-engine predicate pushdown (AWESOME tech report: pushdown + lazy
+#    materialization across the tri-store)
+# --------------------------------------------------------------------------
+#
+# Relational filters narrow a selection mask that, without this pass, only
+# the relational engine sees: downstream engines score every document and
+# touch every edge even when the seed relation kept 1% of its rows.
+# ``push_predicates`` propagates that selection across engine boundaries:
+#
+#   * **filter-below-join** — a ``rel_filter`` over a ``rel_join`` whose
+#     predicate column comes from the probe (left) side sinks below the
+#     join, so the probe runs on the narrowed relation (mask conjunction
+#     commutes, so this is exact);
+#   * **mask-into-text** — the unpushed idiom ``masked_topk(text_scores(cx,
+#     q), m)`` (score the whole corpus in the text engine, select+top-k
+#     outside it) collapses into a 3-input ``text_topk(cx, q, m)``: the
+#     mask crosses the xfer boundary *into* the text engine, where the
+#     physical layer can offer masked/fused scoring candidates;
+#   * **graph frontier masks** — ``graph_expand``/``graph_pagerank`` whose
+#     frontier/personalization descends from a filtered relation are
+#     annotated with the estimated frontier sparsity, unlocking the
+#     block-skipping SpMV candidate.
+#
+# Every rewritten/annotated op carries a ``selectivity`` attr — the
+# estimated selected fraction, the product of upstream filter
+# selectivities (explicit ``selectivity=`` hints win over the per-cmp
+# heuristics).  The cost model prices masked candidates with it, so
+# pushdown is chosen only where it is expected to win (at selectivity 1.0
+# the dense plan is kept).
+
+_CMP_SELECTIVITY = {"eq": 0.1, "ne": 0.9,
+                    "lt": 1 / 3, "le": 1 / 3, "gt": 1 / 3, "ge": 1 / 3}
+
+
+def _filter_selectivity(node: Node) -> float:
+    """Selected fraction of one rel_filter: the explicit ``selectivity=``
+    hint (the paper's metadata route) or a per-comparator heuristic."""
+    if "selectivity" in node.attrs:
+        return float(node.attrs["selectivity"])
+    return _CMP_SELECTIVITY.get(node.attrs.get("cmp"), 0.5)
+
+
+def estimate_selectivity(plan: Plan, nid: str, catalog: FunctionCatalog,
+                         _memo: dict | None = None) -> float:
+    """Estimated selected fraction of the value produced at ``nid``.
+
+    Filters multiply along the lineage; group-by and entity-mask exports
+    rescale row selectivity onto the group/entity domain (an upper bound:
+    ``min(1, s · rows / domain)``); joins only narrow, so they pass the
+    probe side's estimate through.  Plan inputs are fully selected (1.0).
+    """
+    memo = _memo if _memo is not None else {}
+    if nid in memo:
+        return memo[nid]
+    if nid in plan.inputs:
+        return 1.0
+    node = plan.nodes[nid]
+
+    def up(i):
+        return estimate_selectivity(plan, node.inputs[i], catalog, memo)
+
+    if node.op == "rel_filter":
+        s = up(0) * _filter_selectivity(node)
+    elif node.op in ("rel_scan", "col_tensor", "xfer"):
+        s = up(0)
+    elif node.op == "rel_join":
+        s = up(0)
+    elif node.op in ("rel_group_agg", "sel_mask"):
+        t = plan.types.get(node.inputs[0])
+        rows = getattr(t, "rows", 1)
+        domain = int(node.attrs.get("num_groups", node.attrs.get("size", 1)))
+        s = min(1.0, up(0) * max(rows, 1) / max(domain, 1))
+    else:
+        s = 1.0
+    s = float(min(max(s, 0.0), 1.0))
+    memo[nid] = s
+    return s
+
+
+def _rebuild(plan: Plan, skip: set, replace_fn) -> Plan:
+    """Rebuild ``plan`` skipping ``skip`` node ids; ``replace_fn(node, out,
+    remap)`` may emit a replacement and return its id (or None to copy)."""
+    out = Plan(plan.name, {}, dict(plan.inputs), plan.outputs, {}, plan._ctr)
+    remap: dict = {i: i for i in plan.inputs}
+    for node in plan.topo():
+        if node.id in skip:
+            continue
+        rid = replace_fn(node, out, remap)
+        if rid is None:
+            rid = out.add(node.op, [remap[i] for i in node.inputs],
+                          dict(node.attrs), node.subplan, id=node.id)
+        remap[node.id] = rid
+    out.outputs = tuple(remap[o] for o in plan.outputs)
+    return out
+
+
+def _dce(plan: Plan) -> Plan:
+    """Drop nodes unreachable from the outputs (pushdown leaves the
+    replaced ``text_scores``/``masked_topk`` producers dangling)."""
+    live: set = set(plan.outputs)
+    for node in reversed(list(plan.topo())):
+        if node.id in live:
+            live.update(node.inputs)
+    dead = {n.id for n in plan.topo() if n.id not in live}
+    if not dead:
+        return plan
+    return _rebuild(plan, dead, lambda n, o, r: None)
+
+
+def _sink_filters_below_joins(plan: Plan, catalog: FunctionCatalog,
+                              info: list) -> Plan:
+    """``rel_filter(rel_join(L, R), col ∈ L)`` → ``rel_join(rel_filter(L),
+    R)`` to fixpoint, when the join's only consumer is the filter."""
+    from .ir import TableT
+    changed = True
+    while changed:
+        changed = False
+        cons = plan.consumers()
+        for node in plan.topo():
+            if node.op != "rel_filter":
+                continue
+            src = node.inputs[0]
+            if src in plan.inputs:
+                continue
+            j = plan.nodes[src]
+            if j.op != "rel_join" or len(cons[src]) != 1:
+                continue
+            lt = plan.types.get(j.inputs[0])
+            if not (isinstance(lt, TableT) and lt.has_col(node.attrs["col"])):
+                continue        # predicate reads a build-side column
+
+            def repl(n, out, remap, _f=node, _j=j):
+                if n.id == _j.id:
+                    f2 = out.add("rel_filter", [remap[_j.inputs[0]]],
+                                 dict(_f.attrs), id=_f.id + "_sunk")
+                    return out.add("rel_join", [f2, remap[_j.inputs[1]]],
+                                   dict(_j.attrs), id=_j.id)
+                if n.id == _f.id:
+                    return remap[_j.id]
+                return None
+
+            info.append({"rule": "filter_below_join", "filter": node.id,
+                         "join": j.id, "col": node.attrs["col"]})
+            plan = infer_types(_rebuild(plan, set(), repl), catalog)
+            changed = True
+            break
+    return plan
+
+
+def push_predicates(plan: Plan, catalog: FunctionCatalog) -> Plan:
+    """Propagate relational selection masks across engine boundaries."""
+    if _pure_xla(plan, catalog):
+        return plan
+    infer_types(plan, catalog)
+    info: list = []
+    plan = _sink_filters_below_joins(plan, catalog, info)
+
+    memo: dict = {}
+    cons = plan.consumers()
+    # mask-into-text: masked_topk(text_scores(cx, q), m) -> text_topk(cx,
+    # q, m) when the full score vector has no other consumer
+    pushed: dict = {}       # masked_topk id -> (scores node, mask id)
+    for node in plan.topo():
+        if node.op != "masked_topk":
+            continue
+        sc_id, m_id = node.inputs
+        if sc_id in plan.inputs:
+            continue
+        sc = plan.nodes[sc_id]
+        if sc.op == "text_scores" and len(cons[sc_id]) == 1:
+            pushed[node.id] = (sc, m_id)
+
+    def repl(node, out, remap):
+        if node.id in pushed:
+            sc, m_id = pushed[node.id]
+            sel = float(node.attrs.get(
+                "selectivity",
+                estimate_selectivity(plan, m_id, catalog, memo)))
+            attrs = {"k": node.attrs["k"], "pushed": True,
+                     "selectivity": sel}
+            info.append({"rule": "mask_into_text", "op": node.id,
+                         "mask": m_id, "selectivity": round(sel, 4)})
+            return out.add(
+                "text_topk",
+                [remap[sc.inputs[0]], remap[sc.inputs[1]], remap[m_id]],
+                attrs, id=node.id + "_pushed")
+        if node.op in ("graph_expand", "graph_pagerank") \
+                and len(node.inputs) == 2:
+            sel = estimate_selectivity(plan, node.inputs[1], catalog, memo)
+            if sel < 1.0:
+                key = ("frontier_selectivity" if node.op == "graph_expand"
+                       else "personalization_selectivity")
+                attrs = dict(node.attrs)
+                attrs[key] = float(round(sel, 6))
+                info.append({"rule": "mask_into_graph", "op": node.id,
+                             key: round(sel, 4)})
+                return out.add(node.op, [remap[i] for i in node.inputs],
+                               attrs, id=node.id)
+        return None
+
+    out = _dce(_rebuild(plan, set(), repl))
+    out = infer_types(out, catalog)
+    if info:
+        out.__dict__["_pass_info"] = {"pushed": info}
+    return out
+
+
+# --------------------------------------------------------------------------
+# 6. same-engine store-op fusion (the Fig. 7 larger-pattern argument, for
+#    store chains: masks never round-trip as full-width intermediates)
+# --------------------------------------------------------------------------
+
+_REL_FUSABLE = ("rel_scan", "rel_filter", "rel_join", "rel_group_agg")
+
+
+def fuse_store_ops(plan: Plan, catalog: FunctionCatalog) -> Plan:
+    """Collapse single-consumer chains of relational store ops into one
+    ``rel_fused`` node whose ``chain`` attr records the steps.  The fused
+    node is a *larger logical pattern* for the physical layer: one engine
+    call per chain (the masked segment-aggregate kernel slots in here), and
+    interior tables never surface as plan-level intermediates.
+    """
+    if _pure_xla(plan, catalog):
+        return plan
+    infer_types(plan, catalog)
+    cons = plan.consumers()
+    out_set = set(plan.outputs)
+
+    # group maximal chains by walking producers of the first (table) input
+    group_of: dict = {}       # node id -> chain head id
+    chains: dict = {}         # head id -> [Node, ...] in order
+    for node in plan.topo():
+        if node.op not in _REL_FUSABLE:
+            continue
+        src = node.inputs[0]
+        head = group_of.get(src)
+        if (head is not None and len(cons[src]) == 1
+                and src not in out_set):
+            group_of[node.id] = head
+            chains[head].append(node)
+        else:
+            group_of[node.id] = node.id
+            chains[node.id] = [node]
+
+    fused = {h: c for h, c in chains.items() if len(c) >= 2}
+    if not fused:
+        return plan
+    in_chain = {n.id: h for h, c in fused.items() for n in c}
+    info = [{"head": h, "ops": [n.op for n in c], "len": len(c)}
+            for h, c in fused.items()]
+
+    out = Plan(plan.name, {}, dict(plan.inputs), plan.outputs, {}, plan._ctr)
+    remap: dict = {i: i for i in plan.inputs}
+    for node in plan.topo():
+        head = in_chain.get(node.id)
+        if head is None:
+            nid = out.add(node.op, [remap[i] for i in node.inputs],
+                          dict(node.attrs), node.subplan, id=node.id)
+            remap[node.id] = nid
+            continue
+        chain = fused[head]
+        if node.id != chain[-1].id:
+            # interior members are consumed only inside the chain: defer
+            # emission to the tail's position, where every external input
+            # (e.g. a later join's build side) is already remapped
+            continue
+        members = {n.id for n in chain}
+        ext_inputs: list = []   # external producer ids, in first-use order
+        steps = []
+        prev_id = None
+        for n in chain:
+            srcs = []
+            for i in n.inputs:
+                # the chain is linear along first inputs: only the previous
+                # member is reachable as "prev"; anything else (e.g. a
+                # join's build side) is an external input
+                if i in members and i == prev_id:
+                    srcs.append("prev")
+                else:
+                    key = remap[i]
+                    if key not in ext_inputs:
+                        ext_inputs.append(key)
+                    srcs.append(ext_inputs.index(key))
+            steps.append((n.op, dict(n.attrs), tuple(srcs),
+                          plan.types.get(n.id)))
+            prev_id = n.id
+        nid = out.add("rel_fused", ext_inputs,
+                      {"chain": tuple(steps)}, id="fused_" + head)
+        for n in chain:
+            remap[n.id] = nid
+
+    out.outputs = tuple(remap[o] for o in plan.outputs)
+    out = infer_types(out, catalog)
+    out.__dict__["_pass_info"] = {"fused_chains": info}
+    return out
+
+
+# --------------------------------------------------------------------------
 # driver
 # --------------------------------------------------------------------------
 
 DEFAULT_PIPELINE = ("decompose", "cse", "fuse_qkv", "fuse_scans", "cse",
-                    "place_xfers")
+                    "push_predicates", "fuse_store_ops", "place_xfers")
+
+# PR 3's pipeline (planned xfer placement, no cross-engine pushdown): the
+# baseline the pushdown benchmark compares against
+UNPUSHED_PIPELINE = ("decompose", "cse", "fuse_qkv", "fuse_scans", "cse",
+                     "place_xfers")
 
 _PASSES: dict = {
     "decompose": decompose,
     "cse": eliminate_redundancy,
     "fuse_qkv": fuse_qkv,
     "fuse_scans": fuse_scans,
+    "push_predicates": push_predicates,
+    "fuse_store_ops": fuse_store_ops,
     "place_xfers": place_xfers,
     "place_xfers_naive": place_xfers_naive,
 }
@@ -464,10 +769,17 @@ def rewrite_with_trace(plan: Plan, catalog: FunctionCatalog,
         before = count_nodes(plan)
         t0 = time.perf_counter()
         plan = _PASSES[name](plan, catalog)
-        trace.append({
+        rec = {
             "rule": name,
             "wall_ms": (time.perf_counter() - t0) * 1e3,
             "nodes_before": before,
             "nodes_after": count_nodes(plan),
-        })
+        }
+        # passes may leave a side-channel report (e.g. push_predicates:
+        # which ops received masks and at what estimated selectivity) —
+        # surfaced per rule in the EXPLAIN trace
+        extra = plan.__dict__.pop("_pass_info", None)
+        if extra:
+            rec["info"] = extra
+        trace.append(rec)
     return plan, trace

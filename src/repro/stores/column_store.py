@@ -122,8 +122,15 @@ def hash_join(lkeys: jnp.ndarray, rkeys: jnp.ndarray):
 
 
 def group_agg(values: Optional[jnp.ndarray], keys: jnp.ndarray,
-              num_groups: int, mask: jnp.ndarray, fn: str) -> jnp.ndarray:
-    """Mask-weighted segment aggregate of ``values`` per group id."""
+              num_groups: int, mask: jnp.ndarray, fn: str):
+    """Mask-weighted segment aggregate of ``values`` per group id.
+
+    ``fn="max"`` returns a ``(values, valid)`` pair: ``valid[g]`` is False
+    for groups with no unmasked rows (whose value slot is filled with 0.0)
+    — a group whose true max *is* 0.0 stays distinguishable from an empty
+    one.  The other aggregates return the value array alone (an empty
+    group's sum/count of 0.0 is the correct aggregate, not a sentinel).
+    """
     w = mask.astype(jnp.float32)
     if fn == "count":
         return jax.ops.segment_sum(w, keys, num_segments=num_groups)
@@ -137,5 +144,6 @@ def group_agg(values: Optional[jnp.ndarray], keys: jnp.ndarray,
     if fn == "max":
         neg = jnp.where(mask, v, -jnp.inf)
         m = jax.ops.segment_max(neg, keys, num_segments=num_groups)
-        return jnp.where(jnp.isfinite(m), m, 0.0)
+        valid = jnp.isfinite(m)
+        return jnp.where(valid, m, 0.0), valid
     raise ValidationError(f"group_agg: unknown fn {fn!r}")

@@ -1,0 +1,180 @@
+"""Pallas TPU superkernels for predicate-pushdown over the stores.
+
+Both kernels reuse the one-hot-matmul trick of :mod:`.graph_kernels` — a
+segment reduction expressed as ``(1, E_blk) @ (E_blk, N_blk)`` against the
+mask ``seg[e] == id[n]``, an MXU-shaped contraction with no scatters — and
+add the pushdown twist: every input row carries a *keep* weight derived
+from the pushed selection mask, and a whole input block whose keep weights
+are all zero is **skipped** (``pl.when``), so masked-out postings/rows cost
+neither the elementwise pass nor the matmul.  The accumulator lives in VMEM
+scratch across the (sequential, innermost) input-block grid axis, so each
+output tile is written to HBM exactly once — the bytes the cost model
+credits these candidates with.
+
+Value gathers (``w[term_ids]``, ``doc_len[doc_ids]``, ``mask[doc_ids]``)
+happen *outside* the kernels (XLA gathers are fine, the TPU kernel owns the
+reduction side only), mirroring ``scatter_add_pallas``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# --------------------------------------------------------------------------
+# masked TF-IDF scoring: gather + mask + segment-sum in one pass
+# --------------------------------------------------------------------------
+
+
+def _masked_tfidf_kernel(doc_ref, qidf_ref, tf_ref, dl_ref, keep_ref,
+                         o_ref, acc_ref, *, block_d):
+    eb = pl.program_id(1)
+
+    @pl.when(eb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    keep = keep_ref[...]                     # (1, E_blk) float32 0/1
+    doc_base = pl.program_id(0) * block_d    # grid queries stay outside when
+    doc_ids = jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_d), 1) + doc_base
+
+    @pl.when(jnp.any(keep > 0))
+    def _compute():
+        # fused elementwise (the "gather" products arrive pre-gathered):
+        # contrib = q·idf[term] * tf / doc_len, zeroed for masked docs
+        val = qidf_ref[...] * tf_ref[...] / dl_ref[...] * keep
+        doc = doc_ref[...]
+        onehot = (doc[0][:, None] == doc_ids[0][None, :]).astype(jnp.float32)
+        acc_ref[...] += jnp.dot(val, onehot,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(eb == pl.num_programs(1) - 1)
+    def _fin():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_docs", "block_e", "block_d",
+                                    "interpret"))
+def masked_tfidf_pallas(doc_ids, qidf_t, tf, dl_t, keep, *, n_docs: int,
+                        block_e: int = 512, block_d: int = 256,
+                        interpret: bool = True):
+    """``score[d] = Σ_{postings e: doc[e]==d, keep[e]>0} qidf_t[e]·tf[e]/
+    dl_t[e]`` — masked TF-IDF scores over pre-gathered posting features.
+
+    Posting blocks whose ``keep`` weights are all zero are skipped inside
+    the kernel.  Edge padding uses ``doc_ids = -1`` (matches no doc) with
+    ``keep = 0``; doc padding is sliced off the result.
+    """
+    e = doc_ids.shape[0]
+    if e == 0:
+        return jnp.zeros((n_docs,), jnp.float32)
+    be = min(block_e, max(8, e))
+    bd = min(block_d, max(128, n_docs))
+    e_pad = (-e) % be
+    d_pad = (-n_docs) % bd
+
+    def prep(a, fill=0):
+        return jnp.pad(a, (0, e_pad), constant_values=fill)[None, :]
+
+    doc_p = prep(doc_ids.astype(jnp.int32), -1)
+    qidf_p = prep(qidf_t.astype(jnp.float32))
+    tf_p = prep(tf.astype(jnp.float32))
+    dl_p = prep(dl_t.astype(jnp.float32), 1)     # pad avoids 0/0
+    keep_p = prep(keep.astype(jnp.float32))
+    d_tot = n_docs + d_pad
+
+    grid = (d_tot // bd, (e + e_pad) // be)
+    espec = pl.BlockSpec((1, be), lambda db, ebk: (0, ebk))
+    out = pl.pallas_call(
+        functools.partial(_masked_tfidf_kernel, block_d=bd),
+        grid=grid,
+        in_specs=[espec] * 5,
+        out_specs=pl.BlockSpec((1, bd), lambda db, ebk: (0, db)),
+        out_shape=jax.ShapeDtypeStruct((1, d_tot), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
+        interpret=interpret,
+    )(doc_p, qidf_p, tf_p, dl_p, keep_p)
+    return out[0, :n_docs]
+
+
+# --------------------------------------------------------------------------
+# masked segment aggregate: group-by sum + count in one pass
+# --------------------------------------------------------------------------
+
+
+def _masked_segagg_kernel(key_ref, val_ref, mw_ref, o_ref, acc_ref,
+                          *, block_g):
+    rb = pl.program_id(1)
+
+    @pl.when(rb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    mw = mw_ref[...]                         # (1, R_blk) float32 0/1
+    group_base = pl.program_id(0) * block_g  # grid queries stay outside when
+    group_ids = jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_g), 1) + group_base
+
+    @pl.when(jnp.any(mw > 0))
+    def _compute():
+        key = key_ref[...]
+        onehot = (key[0][:, None] == group_ids[0][None, :]).astype(
+            jnp.float32)
+        # row 0: mask-weighted sums, row 1: mask counts — one matmul each,
+        # sharing the one-hot tile
+        stacked = jnp.concatenate([val_ref[...] * mw, mw], axis=0)
+        acc_ref[...] += jnp.dot(stacked, onehot,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(rb == pl.num_programs(1) - 1)
+    def _fin():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_groups", "block_r", "block_g",
+                                    "interpret"))
+def masked_segment_agg_pallas(vals, keys, maskw, *, num_groups: int,
+                              block_r: int = 512, block_g: int = 256,
+                              interpret: bool = True):
+    """Mask-weighted group-by: ``(sums, counts)`` per group id in one
+    kernel pass, skipping row blocks whose mask weights are all zero.
+
+    Row padding uses ``keys = -1`` (matches no group) with ``maskw = 0``;
+    group padding is sliced off.  ``mean`` is ``sums / max(counts, 1)``
+    outside the kernel; ``max`` is not expressible as a one-hot matmul and
+    keeps the segment-max fallback.
+    """
+    r = vals.shape[0]
+    if r == 0:
+        z = jnp.zeros((num_groups,), jnp.float32)
+        return z, z
+    br = min(block_r, max(8, r))
+    bg = min(block_g, max(128, num_groups))
+    r_pad = (-r) % br
+    g_pad = (-num_groups) % bg
+
+    key_p = jnp.pad(keys.astype(jnp.int32), (0, r_pad),
+                    constant_values=-1)[None, :]
+    val_p = jnp.pad(vals.astype(jnp.float32), (0, r_pad))[None, :]
+    mw_p = jnp.pad(maskw.astype(jnp.float32), (0, r_pad))[None, :]
+    g_tot = num_groups + g_pad
+
+    grid = (g_tot // bg, (r + r_pad) // br)
+    rspec = pl.BlockSpec((1, br), lambda gb, rbk: (0, rbk))
+    out = pl.pallas_call(
+        functools.partial(_masked_segagg_kernel, block_g=bg),
+        grid=grid,
+        in_specs=[rspec] * 3,
+        out_specs=pl.BlockSpec((2, bg), lambda gb, rbk: (0, gb)),
+        out_shape=jax.ShapeDtypeStruct((2, g_tot), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((2, bg), jnp.float32)],
+        interpret=interpret,
+    )(key_p, val_p, mw_p)
+    return out[0, :num_groups], out[1, :num_groups]

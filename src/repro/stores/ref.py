@@ -24,10 +24,16 @@ def hash_join_ref(lkeys, rkeys):
 
 
 def group_agg_ref(values, keys, num_groups, mask, fn):
-    """Reference mask-respecting groupby aggregate."""
+    """Reference mask-respecting groupby aggregate.
+
+    ``fn="max"`` returns ``(values, valid)`` — an all-masked group is
+    *invalid* (value slot 0.0), never conflated with a true max of 0.0;
+    mirrors :func:`repro.stores.column_store.group_agg`.
+    """
     keys = np.asarray(keys)
     mask = np.asarray(mask, bool)
     out = np.zeros(num_groups, np.float64)
+    valid = np.zeros(num_groups, bool)
     for g in range(num_groups):
         sel = (keys == g) & mask
         if fn == "count":
@@ -42,8 +48,11 @@ def group_agg_ref(values, keys, num_groups, mask, fn):
             out[g] = v.mean()
         elif fn == "max":
             out[g] = v.max()
+            valid[g] = np.isfinite(out[g])
         else:
             raise ValueError(fn)
+    if fn == "max":
+        return np.where(valid, out, 0.0).astype(np.float32), valid
     return out.astype(np.float32)
 
 
@@ -90,3 +99,36 @@ def tfidf_scores_ref(doc_ids, term_ids, tf, doc_len, idf, query):
     for d, t, f in zip(doc_ids, term_ids, np.asarray(tf, np.float64)):
         scores[d] += q[t] * idf[t] * f / doc_len[d]
     return scores
+
+
+def masked_tfidf_scores_ref(doc_ids, term_ids, tf, doc_len, idf, query,
+                            doc_mask):
+    """Masked scoring: only unmasked docs accumulate (masked stay 0)."""
+    scores = tfidf_scores_ref(doc_ids, term_ids, tf, doc_len, idf, query)
+    return np.where(np.asarray(doc_mask, bool), scores, 0.0)
+
+
+def masked_topk_ref(scores, doc_mask, k):
+    """Reference masked top-k: ``(doc ids, scores, valid)`` of length
+    ``min(k, n)``; slots past the unmasked count are invalid with score 0,
+    ties broken by lowest doc id (matches ``lax.top_k``)."""
+    scores = np.asarray(scores, np.float32)
+    m = np.asarray(doc_mask, bool)
+    k = min(int(k), scores.shape[0])
+    neg = np.where(m, scores, -np.inf).astype(np.float32)
+    ids = np.argsort(-neg, kind="stable")[:k]
+    vals = neg[ids]
+    valid = np.isfinite(vals)
+    return (ids.astype(np.int32), np.where(valid, vals, 0.0).astype(
+        np.float32), valid)
+
+
+def masked_segment_agg_ref(vals, keys, maskw, num_groups):
+    """Reference mask-weighted group-by ``(sums, counts)``."""
+    sums = np.zeros(num_groups, np.float64)
+    counts = np.zeros(num_groups, np.float64)
+    for v, g, w in zip(np.asarray(vals, np.float64), np.asarray(keys),
+                       np.asarray(maskw, np.float64)):
+        sums[g] += v * w
+        counts[g] += w
+    return sums.astype(np.float32), counts.astype(np.float32)

@@ -6,6 +6,11 @@ cross-engine transfer realizations.  Store values travel through the plan
 as pytrees of JAX arrays (tables as column dicts with a ``_mask`` selection
 vector, graphs/corpora as their CSR/COO payload dicts), so a whole
 tri-model plan stays jittable end to end.
+
+The relational ops are factored as pure *step functions* shared by the
+per-op impls and the fused-chain impls (``rel_fused_*``): a fused chain
+executes exactly the same step functions in the same order, so fusion is
+bitwise-neutral by construction.
 """
 from __future__ import annotations
 
@@ -16,23 +21,25 @@ import numpy as np
 from ..core.engines import get_engine
 from .base import GRAPH_ENGINE, REL_ENGINE, TEXT_ENGINE
 from .column_store import MASK, filter_mask, group_agg, hash_join, table_mask
-from .graph_store import expand_frontier, pagerank, triangle_count
-from .text_store import tfidf_topk
+from .graph_store import (expand_frontier, expand_frontier_blockskip,
+                          pagerank, triangle_count)
+from .masked_kernels import masked_segment_agg_pallas, masked_tfidf_pallas
+from .text_store import (masked_topk, tfidf_scores, tfidf_topk,
+                         tfidf_topk_blockskip, tfidf_topk_masked)
 
 _XLA = get_engine("xla")
 _PALLAS = get_engine("pallas")
 
 
 # --------------------------------------------------------------------------
-# relational engine
+# relational engine: step functions + per-op impls
 # --------------------------------------------------------------------------
 
 
-@REL_ENGINE.impl("rel_scan_col")
-def _i_rel_scan(ctx, args, node):
-    tbl = dict(args[0])
+def _step_rel_scan(tbl, attrs):
+    tbl = dict(tbl)
     mask = table_mask(tbl)
-    cols = node.attrs.get("cols")
+    cols = attrs.get("cols")
     if cols:
         tbl = {c: tbl[c] for c in cols}
     tbl.pop(MASK, None)
@@ -40,19 +47,16 @@ def _i_rel_scan(ctx, args, node):
     return tbl
 
 
-@REL_ENGINE.impl("rel_filter_col")
-def _i_rel_filter(ctx, args, node):
-    tbl = dict(args[0])
-    m = filter_mask(tbl[node.attrs["col"]], node.attrs["cmp"],
-                    node.attrs["value"])
+def _step_rel_filter(tbl, attrs):
+    tbl = dict(tbl)
+    m = filter_mask(tbl[attrs["col"]], attrs["cmp"], attrs["value"])
     tbl[MASK] = table_mask(tbl) & m
     return tbl
 
 
-@REL_ENGINE.impl("rel_hash_join")
-def _i_rel_join(ctx, args, node):
-    left, right = dict(args[0]), dict(args[1])
-    lo, ro = node.attrs["left_on"], node.attrs["right_on"]
+def _step_rel_join(left, right, attrs):
+    left, right = dict(left), dict(right)
+    lo, ro = attrs["left_on"], attrs["right_on"]
     idx, matched = hash_join(left[lo], right[ro])
     lmask = table_mask(left)
     rmask = table_mask(right)[idx]
@@ -65,17 +69,88 @@ def _i_rel_join(ctx, args, node):
     return out
 
 
+def _step_rel_group_agg(tbl, attrs):
+    key = tbl[attrs["key"]]
+    g = int(attrs["num_groups"])
+    mask = table_mask(tbl)
+    out = {attrs["key"]: jnp.arange(g, dtype=jnp.int32)}
+    for out_name, fn, col in attrs["aggs"]:
+        vals = None if fn == "count" else tbl[col]
+        r = group_agg(vals, key, g, mask, fn)
+        if fn == "max":
+            r, _valid = r      # empty groups already drop via the count mask
+        out[out_name] = r
+    count = group_agg(None, key, g, mask, "count")
+    out[MASK] = count > 0
+    return out
+
+
+_REL_STEPS = {
+    "rel_scan": lambda ins, attrs: _step_rel_scan(ins[0], attrs),
+    "rel_filter": lambda ins, attrs: _step_rel_filter(ins[0], attrs),
+    "rel_join": lambda ins, attrs: _step_rel_join(ins[0], ins[1], attrs),
+    "rel_group_agg": lambda ins, attrs: _step_rel_group_agg(ins[0], attrs),
+}
+
+
+def _run_chain(args, chain, *, stop_before_last=False):
+    """Execute a ``rel_fused`` step chain over the node's bound inputs."""
+    steps = chain[:-1] if stop_before_last else chain
+    prev = None
+    for op, attrs, srcs, _out_t in steps:
+        ins = [prev if s == "prev" else args[int(s)] for s in srcs]
+        prev = _REL_STEPS[op](ins, attrs)
+    return prev
+
+
+@REL_ENGINE.impl("rel_scan_col")
+def _i_rel_scan(ctx, args, node):
+    return _step_rel_scan(args[0], node.attrs)
+
+
+@REL_ENGINE.impl("rel_filter_col")
+def _i_rel_filter(ctx, args, node):
+    return _step_rel_filter(args[0], node.attrs)
+
+
+@REL_ENGINE.impl("rel_hash_join")
+def _i_rel_join(ctx, args, node):
+    return _step_rel_join(args[0], args[1], node.attrs)
+
+
 @REL_ENGINE.impl("rel_group_agg_col")
 def _i_rel_group(ctx, args, node):
-    tbl = args[0]
-    key = tbl[node.attrs["key"]]
-    g = int(node.attrs["num_groups"])
-    mask = table_mask(tbl)
-    out = {node.attrs["key"]: jnp.arange(g, dtype=jnp.int32)}
-    for out_name, fn, col in node.attrs["aggs"]:
-        vals = None if fn == "count" else tbl[col]
-        out[out_name] = group_agg(vals, key, g, mask, fn)
-    count = group_agg(None, key, g, mask, "count")
+    return _step_rel_group_agg(args[0], node.attrs)
+
+
+@REL_ENGINE.impl("rel_fused_col")
+def _i_rel_fused(ctx, args, node):
+    return _run_chain(args, node.attrs["chain"])
+
+
+@_PALLAS.impl("rel_fused_agg_pallas")
+def _i_rel_fused_agg(ctx, args, node):
+    """Fused chain whose terminal group-by runs the masked segment-
+    aggregate Pallas kernel (sum/count/mean; gated by the pattern set)."""
+    chain = node.attrs["chain"]
+    tbl = _run_chain(args, chain, stop_before_last=True)
+    attrs = chain[-1][1]
+    key = tbl[attrs["key"]]
+    g = int(attrs["num_groups"])
+    mw = table_mask(tbl).astype(jnp.float32)
+    out = {attrs["key"]: jnp.arange(g, dtype=jnp.int32)}
+    count = None
+    for out_name, fn, col in attrs["aggs"]:
+        vals = mw if fn == "count" else tbl[col]
+        s, c = masked_segment_agg_pallas(vals, key, mw, num_groups=g,
+                                         interpret=ctx.interpret)
+        count = c
+        out[out_name] = (c if fn == "count"
+                         else s if fn == "sum"
+                         else s / jnp.maximum(c, 1.0))
+    if count is None:
+        count, _ = masked_segment_agg_pallas(mw, key, mw, num_groups=g,
+                                             interpret=ctx.interpret)
     out[MASK] = count > 0
     return out
 
@@ -87,6 +162,19 @@ def _i_col_tensor(ctx, args, node):
     return jnp.where(table_mask(tbl), v, jnp.zeros_like(v))
 
 
+@REL_ENGINE.impl("sel_mask_rel")
+def _i_sel_mask(ctx, args, node):
+    """Selection-mask export: scatter the relation's mask over an entity
+    domain (``mask[v] = any selected row with col == v``) — the boolean
+    predicate pushdown hands across the engine boundary."""
+    tbl = args[0]
+    col = tbl[node.attrs["col"]]
+    size = int(node.attrs["size"])
+    m = table_mask(tbl) & (col >= 0) & (col < size)
+    idx = jnp.clip(col, 0, size - 1)
+    return jnp.zeros((size,), jnp.bool_).at[idx].max(m)
+
+
 # --------------------------------------------------------------------------
 # graph engine (CSR fallback) + Pallas frontier kernels
 # --------------------------------------------------------------------------
@@ -96,6 +184,12 @@ def _i_col_tensor(ctx, args, node):
 def _i_expand_csr(ctx, args, node):
     return expand_frontier(args[0], args[1],
                            hops=int(node.attrs.get("hops", 1)))
+
+
+@GRAPH_ENGINE.impl("graph_expand_skip")
+def _i_expand_skip(ctx, args, node):
+    return expand_frontier_blockskip(args[0], args[1],
+                                     hops=int(node.attrs.get("hops", 1)))
 
 
 @_PALLAS.impl("graph_expand_pallas")
@@ -130,11 +224,50 @@ def _i_tricount(ctx, args, node):
 # --------------------------------------------------------------------------
 
 
+def _topk_table(ids, scores, valid):
+    return {"doc": ids, "score": scores, MASK: valid}
+
+
 @TEXT_ENGINE.impl("text_topk_inv")
 def _i_text_topk(ctx, args, node):
-    ids, scores = tfidf_topk(args[0], args[1], int(node.attrs["k"]))
-    return {"doc": ids, "score": scores,
-            MASK: jnp.ones(ids.shape, jnp.bool_)}
+    k = int(node.attrs["k"])
+    if len(args) == 3:
+        # pushed candidate-doc mask, dense realization: score the whole
+        # corpus, then mask + top-k (the bitwise reference the skipping
+        # candidates must reproduce)
+        return _topk_table(*tfidf_topk_masked(args[0], args[1], args[2], k))
+    return _topk_table(*tfidf_topk(args[0], args[1], k))
+
+
+@TEXT_ENGINE.impl("text_topk_skip_inv")
+def _i_text_topk_skip(ctx, args, node):
+    return _topk_table(*tfidf_topk_blockskip(args[0], args[1], args[2],
+                                             int(node.attrs["k"])))
+
+
+@_PALLAS.impl("text_topk_masked_pallas")
+def _i_text_topk_pallas(ctx, args, node):
+    """Masked TF-IDF scoring through the one-hot-matmul superkernel: the
+    per-posting gathers run in XLA, the masked fused reduce in Pallas."""
+    corpus, query, doc_mask = args
+    w = query.astype(jnp.float32) * corpus["idf"]
+    doc_ids = corpus["doc_ids"]
+    scores = masked_tfidf_pallas(
+        doc_ids, w[corpus["term_ids"]], corpus["tf"],
+        corpus["doc_len"][doc_ids], doc_mask[doc_ids],
+        n_docs=int(corpus["doc_len"].shape[0]), interpret=ctx.interpret)
+    return _topk_table(*masked_topk(scores, doc_mask, int(node.attrs["k"])))
+
+
+@TEXT_ENGINE.impl("text_scores_inv")
+def _i_text_scores(ctx, args, node):
+    return tfidf_scores(args[0], args[1])
+
+
+@_XLA.impl("masked_topk_xla")
+def _i_masked_topk(ctx, args, node):
+    return _topk_table(*masked_topk(args[0], args[1],
+                                    int(node.attrs["k"])))
 
 
 # --------------------------------------------------------------------------

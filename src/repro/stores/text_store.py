@@ -96,7 +96,83 @@ def tfidf_scores(corpus: dict, query):
 
 
 def tfidf_topk(corpus: dict, query, k: int):
-    """Top-k documents by TF-IDF: ``(doc ids (k,), scores (k,))``."""
+    """Top-k documents by TF-IDF: ``(doc ids, scores, valid)``, each of
+    length ``min(k, n_docs)`` — ``k`` is clamped to the document count (the
+    true result size) instead of crashing inside ``lax.top_k``."""
     scores = tfidf_scores(corpus, query)
-    vals, ids = jax.lax.top_k(scores, int(k))
-    return ids.astype(jnp.int32), vals
+    k = min(int(k), int(scores.shape[0]))
+    vals, ids = jax.lax.top_k(scores, k)
+    return ids.astype(jnp.int32), vals, jnp.ones((k,), jnp.bool_)
+
+
+def masked_topk(scores, doc_mask, k: int):
+    """Top-k over ``scores`` restricted to ``doc_mask``: masked docs score
+    ``-inf`` before the top-k, and result rows whose slot holds a masked
+    doc (k exceeds the unmasked count) come back with ``valid=False`` and
+    score 0.0 (never ``-inf`` — a downstream mask-weighted aggregate would
+    turn ``-inf * 0`` into NaN)."""
+    k = min(int(k), int(scores.shape[0]))
+    neg = jnp.where(doc_mask, scores, -jnp.inf)
+    vals, ids = jax.lax.top_k(neg, k)
+    valid = jnp.isfinite(vals)
+    return ids.astype(jnp.int32), jnp.where(valid, vals, 0.0), valid
+
+
+def tfidf_topk_masked(corpus: dict, query, doc_mask, k: int):
+    """Dense masked scoring: score the whole corpus, then mask + top-k.
+    The always-available realization of a pushed candidate-doc mask (and
+    the bitwise reference the block-skipping path must reproduce)."""
+    return masked_topk(tfidf_scores(corpus, query), doc_mask, k)
+
+
+def tfidf_topk_blockskip(corpus: dict, query, doc_mask, k: int,
+                         block: int = 8192):
+    """Masked scoring that **skips posting blocks whose docs are all
+    masked**.  Postings are doc-ordered, so a candidate mask over a
+    clustered doc range (recency windows, popularity prefixes) leaves most
+    blocks with zero unmasked docs; a prefix-sum over the mask turns each
+    block's (first doc, last doc) span into an O(1) activity test, and
+    ``lax.cond`` skips the gather + scatter-add for inactive blocks at run
+    time.  Active blocks add the *same contributions in the same order* as
+    the dense path, so results are bitwise identical.
+    """
+    n_docs = int(corpus["doc_len"].shape[0])
+    doc_ids = corpus["doc_ids"]
+    e = int(doc_ids.shape[0])
+    if e == 0:
+        return masked_topk(jnp.zeros((n_docs,), jnp.float32), doc_mask, k)
+    w = query.astype(jnp.float32) * corpus["idf"]
+    doc_len = corpus["doc_len"]
+
+    b = max(8, min(int(block), e))
+    pad = (-e) % b
+    # padded postings carry tf=0 -> contribute exactly +0.0 to doc 0, and
+    # pad doc_ids replicate the last (largest) doc id so block spans stay
+    # sorted for the prefix-sum activity test
+    d_p = jnp.pad(doc_ids, (0, pad), constant_values=int(n_docs - 1))
+    t_p = jnp.pad(corpus["term_ids"], (0, pad))
+    f_p = jnp.pad(corpus["tf"], (0, pad))
+    nb = (e + pad) // b
+    d_b = d_p.reshape(nb, b)
+    t_b = t_p.reshape(nb, b)
+    f_b = f_p.reshape(nb, b)
+
+    # block activity: any unmasked doc inside the block's doc-id span.  The
+    # span comes from a per-block min/max (one cheap int pass), so the test
+    # stays sound even for corpora whose postings are not doc-sorted; the
+    # mask prefix-sum makes each span query O(1).
+    prefix = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(doc_mask.astype(jnp.int32))])
+    active = (prefix[d_b.max(axis=1) + 1] - prefix[d_b.min(axis=1)]) > 0
+
+    def body(acc, xs):
+        d, t, f, act = xs
+
+        def do(a):
+            return a.at[d].add(w[t] * f / doc_len[d])
+
+        return jax.lax.cond(act, do, lambda a: a, acc), None
+
+    scores, _ = jax.lax.scan(body, jnp.zeros((n_docs,), jnp.float32),
+                             (d_b, t_b, f_b, active))
+    return masked_topk(scores, doc_mask, k)

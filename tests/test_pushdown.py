@@ -1,0 +1,365 @@
+"""Cross-engine predicate pushdown + fused store superkernels: rewrite
+passes, cost-model gating, masked kernels vs references, and the EXPLAIN
+surface."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.adil import Analysis
+from repro.core.ir import (SystemCatalog, TensorT, ValidationError,
+                           standard_catalog)
+from repro.core.rewrite import (DEFAULT_PIPELINE, UNPUSHED_PIPELINE,
+                                estimate_selectivity, fuse_store_ops,
+                                push_predicates)
+from repro.stores import ColumnStore, GraphStore, TextStore, store_engines
+from repro.stores import ref as R
+from repro.stores.masked_kernels import (masked_segment_agg_pallas,
+                                         masked_tfidf_pallas)
+from repro.stores.graph_store import expand_frontier, expand_frontier_blockskip
+from repro.stores.text_store import (tfidf_topk, tfidf_topk_blockskip,
+                                     tfidf_topk_masked)
+
+CAT = standard_catalog()
+SYS = SystemCatalog()
+
+
+def _stores(rng, rows=400, nodes=64, vocab=32):
+    table = ColumnStore({
+        "hashtag": rng.randint(0, nodes, rows).astype(np.int32),
+        "doc": np.arange(rows, dtype=np.int32),
+        "ts": np.arange(rows, dtype=np.int32),
+        "engagement": (rng.rand(rows) * 50).astype(np.float32),
+    })
+    e = rng.randint(0, nodes, (2, 300))
+    graph = GraphStore.from_edges(e[0], e[1], nodes, symmetric=True)
+    corpus = TextStore.from_docs(
+        [rng.randint(0, vocab, rng.randint(2, 8)) for _ in range(rows)],
+        vocab)
+    return table, graph, corpus
+
+
+def _selective_analysis(table, graph, corpus, *, selectivity, k=16,
+                        cut=None):
+    """The unpushed selective idiom: filter -> sel_mask -> full text scores
+    -> masked top-k -> join -> aggregate (+ seeded graph expansion)."""
+    rows = table.rows
+    nodes = graph.n_nodes
+    cut = int(rows * (1 - selectivity)) if cut is None else cut
+    with Analysis("sel", CAT) as a:
+        tw = a.bind("tweets", table)
+        gr = a.bind("g", graph)
+        cx = a.bind("cx", corpus)
+        q = a.input("q", TensorT((corpus.vocab,), "float32", ("vocab",)))
+        t = a.op("rel_scan", tw)
+        recent = a.op("rel_filter", t, col="ts", cmp="ge", value=cut,
+                      selectivity=selectivity)
+        m = a.op("sel_mask", recent, col="doc", size=corpus.n_docs)
+        sc = a.op("text_scores", cx, q)
+        hits = a.op("masked_topk", sc, m, k=k)
+        j = a.op("rel_join", recent, hits, left_on="doc", right_on="doc")
+        trel = a.op("rel_group_agg", j, key="hashtag", num_groups=nodes,
+                    aggs=(("textrel", "sum", "score"),))
+        seeds = a.op("rel_group_agg", recent, key="hashtag",
+                     num_groups=nodes, aggs=(("seed", "count", None),))
+        sv = a.op("col_tensor", seeds, col="seed", dim="nodes")
+        fr = a.op("graph_expand", gr, sv, hops=2)
+        tv = a.op("col_tensor", trel, col="textrel", dim="nodes")
+        a.store(a.op("residual_add", fr, tv))
+    return a
+
+
+def _inputs(table, graph, corpus, terms=(1, 2, 3)):
+    return {"tweets": table.payload(), "g": graph.payload(),
+            "cx": corpus.payload(),
+            "q": jnp.asarray(corpus.query_vector(terms))}
+
+
+# --------------------------------------------------------------------------
+# the push_predicates rewrite
+# --------------------------------------------------------------------------
+
+def test_push_predicates_mask_into_text(rng):
+    a = _selective_analysis(*_stores(rng), selectivity=0.05)
+    out = push_predicates(a.plan, CAT)
+    ops = [n.op for n in out.topo()]
+    assert "text_scores" not in ops and "masked_topk" not in ops
+    tk = next(n for n in out.topo() if n.op == "text_topk")
+    assert len(tk.inputs) == 3 and tk.attrs["pushed"]
+    assert tk.attrs["selectivity"] == pytest.approx(0.05)
+    # the mask input is the sel_mask node: the rel-born predicate now
+    # crosses the engine boundary into the text engine
+    assert out.nodes[tk.inputs[2]].op == "sel_mask"
+    info = out.__dict__.get("_pass_info") or {}
+    assert any(r["rule"] == "mask_into_text" for r in info.get("pushed", ()))
+
+
+def test_push_predicates_annotates_graph_frontier(rng):
+    a = _selective_analysis(*_stores(rng), selectivity=0.01)
+    out = push_predicates(a.plan, CAT)
+    ex = next(n for n in out.topo() if n.op == "graph_expand")
+    # row selectivity rescaled onto the hashtag domain, still < 1
+    assert 0.0 < ex.attrs["frontier_selectivity"] < 1.0
+
+
+def test_push_predicates_sinks_filter_below_join(rng):
+    table, graph, corpus = _stores(rng)
+    with Analysis("sink", CAT) as a:
+        tw = a.bind("tweets", table)
+        cx = a.bind("cx", corpus)
+        q = a.input("q", TensorT((corpus.vocab,), "float32", ("vocab",)))
+        t = a.op("rel_scan", tw)
+        hits = a.op("text_topk", cx, q, k=8)
+        j = a.op("rel_join", t, hits, left_on="doc", right_on="doc")
+        f = a.op("rel_filter", j, col="ts", cmp="ge", value=100)
+        a.store(a.op("col_tensor", f, col="engagement"))
+    out = push_predicates(a.plan, CAT)
+    jn = next(n for n in out.topo() if n.op == "rel_join")
+    assert out.nodes[jn.inputs[0]].op == "rel_filter"   # probe side narrowed
+    # the filter no longer runs above the join
+    cons = out.consumers()
+    assert all(out.nodes[c].op != "rel_filter" for c in cons[jn.id])
+
+
+def test_push_predicates_keeps_build_side_filters(rng):
+    """A predicate over a column gathered from the build side cannot sink
+    below the join — the rewrite must leave it in place."""
+    table, graph, corpus = _stores(rng)
+    with Analysis("nosink", CAT) as a:
+        tw = a.bind("tweets", table)
+        cx = a.bind("cx", corpus)
+        q = a.input("q", TensorT((corpus.vocab,), "float32", ("vocab",)))
+        t = a.op("rel_scan", tw)
+        hits = a.op("text_topk", cx, q, k=8)
+        j = a.op("rel_join", t, hits, left_on="doc", right_on="doc")
+        f = a.op("rel_filter", j, col="score", cmp="ge", value=0.5)
+        a.store(a.op("col_tensor", f, col="score"))
+    out = push_predicates(a.plan, CAT)
+    jn = next(n for n in out.topo() if n.op == "rel_join")
+    assert out.nodes[jn.inputs[0]].op == "rel_scan"     # probe untouched
+    assert any(n.op == "rel_filter" for n in out.topo())
+
+
+def test_push_predicates_noop_on_tensor_plans():
+    from repro.core.ir import Plan
+    p = Plan("t")
+    p.add_input("h", TensorT((2, 8, 16), "float32",
+                             ("batch", "seq", "embed")))
+    a = p.add("mlp", ["h"], {"ffn": 32, "embed": 16})
+    p.set_outputs(a)
+    assert push_predicates(p, CAT) is p
+    assert fuse_store_ops(p, CAT) is p
+
+
+def test_selectivity_estimation(rng):
+    a = _selective_analysis(*_stores(rng), selectivity=0.02)
+    plan = a.plan
+    from repro.core.ir import infer_types
+    infer_types(plan, CAT)
+    flt = next(n for n in plan.topo() if n.op == "rel_filter")
+    assert estimate_selectivity(plan, flt.id, CAT) == pytest.approx(0.02)
+    # without an explicit hint, comparators fall back to heuristics
+    with Analysis("h", CAT) as b:
+        tw = b.bind("t", _stores(rng)[0])
+        f = b.op("rel_filter", b.op("rel_scan", tw), col="ts", cmp="eq",
+                 value=3)
+        b.store(b.op("col_tensor", f, col="engagement"))
+    infer_types(b.plan, CAT)
+    f2 = next(n for n in b.plan.topo() if n.op == "rel_filter")
+    assert estimate_selectivity(b.plan, f2.id, CAT) == pytest.approx(0.1)
+
+
+# --------------------------------------------------------------------------
+# fuse_store_ops
+# --------------------------------------------------------------------------
+
+def test_fuse_store_ops_collapses_rel_chains(rng):
+    a = _selective_analysis(*_stores(rng), selectivity=0.05)
+    out = fuse_store_ops(push_predicates(a.plan, CAT), CAT)
+    fused = [n for n in out.topo() if n.op == "rel_fused"]
+    assert fused, "expected at least one fused rel chain"
+    chains = [[s[0] for s in n.attrs["chain"]] for n in fused]
+    assert ["rel_scan", "rel_filter"] in chains
+    assert ["rel_join", "rel_group_agg"] in chains
+    # fused nodes carry the chain's output type
+    for n in fused:
+        assert out.types[n.id] == n.attrs["chain"][-1][3]
+
+
+def test_fused_plan_runs_identical_to_unfused(rng):
+    table, graph, corpus = _stores(rng)
+    a = _selective_analysis(table, graph, corpus, selectivity=0.05)
+    pipeline_nofuse = tuple(p for p in DEFAULT_PIPELINE
+                            if p != "fuse_store_ops")
+    fused = a.compile(SYS, engines=store_engines(), cache=False)
+    unfused = a.compile(SYS, engines=store_engines(), cache=False,
+                        rewrite_pipeline=pipeline_nofuse)
+    assert any(n.impl == "rel_fused_col" for n in fused.concrete.topo())
+    ins = _inputs(table, graph, corpus)
+    np.testing.assert_array_equal(np.asarray(fused({}, ins)),
+                                  np.asarray(unfused({}, ins)))
+
+
+# --------------------------------------------------------------------------
+# cost-model gating (pushdown only where it wins)
+# --------------------------------------------------------------------------
+
+def test_full_selectivity_keeps_dense_plan(rng):
+    """At 100% selectivity the planner must keep the unpushed (dense)
+    execution: the skip candidates are not even offered."""
+    table, graph, corpus = _stores(rng)
+    a = _selective_analysis(table, graph, corpus, selectivity=1.0, cut=0)
+    fn = a.compile(SYS, engines=store_engines(), cache=False)
+    impls = {n.impl for n in fn.concrete.topo()}
+    assert "text_topk_inv" in impls
+    assert "text_topk_skip_inv" not in impls
+    assert "graph_expand_skip" not in impls
+
+
+def test_low_selectivity_chooses_skip_candidates(rng):
+    table, graph, corpus = _stores(rng)
+    a = _selective_analysis(table, graph, corpus, selectivity=0.05)
+    fn = a.compile(SYS, engines=store_engines(), cache=False)
+    impls = {n.impl for n in fn.concrete.topo()}
+    assert "text_topk_skip_inv" in impls
+    chosen = {r["pattern"]: r["chosen"] for r in fn.report}
+    assert chosen["text_topk_op"] == "topk_blockskip"
+
+
+def test_explain_reports_pushed_masks(rng):
+    a = _selective_analysis(*_stores(rng), selectivity=0.05)
+    fn = a.compile(SYS, engines=store_engines(), cache=False)
+    text = fn.explain()
+    assert "push_predicates" in text and "fuse_store_ops" in text
+    assert "mask_into_text" in text and "selectivity=0.05" in text
+    assert "fused rel_scan->rel_filter" in text
+
+
+# --------------------------------------------------------------------------
+# masked kernels vs references
+# --------------------------------------------------------------------------
+
+def test_masked_tfidf_pallas_matches_reference(rng):
+    docs, vocab = 37, 16
+    tx = TextStore.from_docs(
+        [rng.randint(0, vocab, rng.randint(1, 9)) for _ in range(docs)],
+        vocab)
+    q = tx.query_vector([1, 3, 5, 5])
+    mask = rng.rand(docs) > 0.5
+    w = (q * tx.idf).astype(np.float32)
+    got = masked_tfidf_pallas(
+        jnp.asarray(tx.doc_ids), jnp.asarray(w[tx.term_ids]),
+        jnp.asarray(tx.tf), jnp.asarray(tx.doc_len[tx.doc_ids]),
+        jnp.asarray(mask[tx.doc_ids].astype(np.float32)),
+        n_docs=docs, interpret=True)
+    want = R.masked_tfidf_scores_ref(tx.doc_ids, tx.term_ids, tx.tf,
+                                     tx.doc_len, tx.idf, q, mask)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-6)
+
+
+def test_masked_segment_agg_pallas_matches_reference(rng):
+    n, groups = 150, 11
+    vals = rng.randn(n).astype(np.float32)
+    keys = rng.randint(0, groups, n).astype(np.int32)
+    maskw = (rng.rand(n) > 0.4).astype(np.float32)
+    s, c = masked_segment_agg_pallas(jnp.asarray(vals), jnp.asarray(keys),
+                                     jnp.asarray(maskw), num_groups=groups,
+                                     interpret=True)
+    ws, wc = R.masked_segment_agg_ref(vals, keys, maskw, groups)
+    np.testing.assert_allclose(np.asarray(s), ws, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c), wc, rtol=1e-5, atol=1e-6)
+
+
+def test_blockskip_scoring_bitwise_matches_dense(rng):
+    docs, vocab = 300, 32
+    tx = TextStore.from_docs(
+        [rng.randint(0, vocab, rng.randint(1, 7)) for _ in range(docs)],
+        vocab)
+    cp = tx.payload()
+    q = jnp.asarray(tx.query_vector([2, 4, 4, 7]))
+    for mask in (np.zeros(docs, bool),            # 0%
+                 np.ones(docs, bool),             # 100%
+                 np.arange(docs) >= docs - 30,    # clustered window
+                 rng.rand(docs) > 0.9):           # scattered
+        m = jnp.asarray(mask)
+        for blk in (64, 128, 1 << 20):
+            got = tfidf_topk_blockskip(cp, q, m, 16, block=blk)
+            want = tfidf_topk_masked(cp, q, m, 16)
+            for g, w in zip(got, want):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_expand_blockskip_bitwise_matches_dense(rng):
+    n, e = 200, 900
+    g = GraphStore.from_edges(rng.randint(0, n, e), rng.randint(0, n, e),
+                              n, symmetric=True)
+    gp = g.payload()
+    for density in (0.0, 0.02, 1.0):
+        fr = np.where(rng.rand(n) < density, rng.rand(n), 0.0) \
+            .astype(np.float32)
+        for hops in (1, 3):
+            got = expand_frontier_blockskip(gp, jnp.asarray(fr), hops=hops,
+                                            block=128)
+            want = expand_frontier(gp, jnp.asarray(fr), hops=hops)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# regressions: k clamping, masked-out top-k slots
+# --------------------------------------------------------------------------
+
+def test_tfidf_topk_clamps_k_beyond_doc_count(rng):
+    tx = TextStore.from_docs([[0, 1], [1, 2], [2, 3]], vocab=4)
+    ids, scores, valid = tfidf_topk(tx.payload(), jnp.asarray(
+        tx.query_vector([1])), 50)                 # k >> n_docs: no crash
+    assert ids.shape == (3,) and bool(np.asarray(valid).all())
+
+
+def test_text_topk_k_clamp_through_planner(rng):
+    table, graph, corpus = _stores(rng, rows=40)
+    with Analysis("clamp", CAT) as a:
+        cx = a.bind("cx", corpus)
+        q = a.input("q", TensorT((corpus.vocab,), "float32", ("vocab",)))
+        hits = a.op("text_topk", cx, q, k=10_000)
+        a.store(hits)
+    assert a.plan.types[a.plan.outputs[0]].rows == corpus.n_docs
+    fn = a.compile(SYS, engines=store_engines(), cache=False)
+    out = fn({}, {"cx": corpus.payload(),
+                  "q": jnp.asarray(corpus.query_vector([1]))})
+    assert out["doc"].shape == (corpus.n_docs,)
+    with pytest.raises(ValidationError):           # k < 1 still rejected
+        with Analysis("bad", CAT) as b:
+            cx = b.bind("cx", corpus)
+            q = b.input("q", TensorT((corpus.vocab,), "float32", ("vocab",)))
+            b.store(b.op("text_topk", cx, q, k=0))
+
+
+def test_pushed_plan_bitwise_identical_at_edge_selectivities(rng):
+    """Deterministic twin of the hypothesis property: 0% (empty build
+    side — no unmasked doc survives into the join), 100%, and k beyond
+    the doc count must all be bitwise-identical pushed vs unpushed."""
+    table, graph, corpus = _stores(rng, rows=80, nodes=12, vocab=16)
+    ins = _inputs(table, graph, corpus)
+    for sel, k in ((0.0, 8), (1.0, 8), (0.05, 10_000), (0.2, 4)):
+        a = _selective_analysis(table, graph, corpus, selectivity=sel, k=k)
+        pushed = a.compile(SYS, engines=store_engines(), cache=False)
+        unpushed = a.compile(SYS, engines=store_engines(), cache=False,
+                             rewrite_pipeline=UNPUSHED_PIPELINE)
+        np.testing.assert_array_equal(np.asarray(pushed({}, ins)),
+                                      np.asarray(unpushed({}, ins)))
+
+
+def test_masked_topk_overflow_slots_are_invalid_not_inf(rng):
+    """k beyond the unmasked count: the overflow slots come back invalid
+    with score 0.0 — never -inf, which would NaN-poison a downstream
+    mask-weighted aggregate."""
+    docs = 20
+    tx = TextStore.from_docs([[0, 1]] * docs, vocab=4)
+    mask = np.zeros(docs, bool)
+    mask[:3] = True
+    ids, scores, valid = tfidf_topk_masked(
+        tx.payload(), jnp.asarray(tx.query_vector([0, 1])),
+        jnp.asarray(mask), 8)
+    v = np.asarray(valid)
+    assert v.sum() == 3 and not v[3:].any()
+    assert np.isfinite(np.asarray(scores)).all()
+    assert (np.asarray(scores)[~v] == 0.0).all()

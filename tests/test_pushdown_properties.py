@@ -1,0 +1,148 @@
+"""Property-based tests (hypothesis): pushed/fused plans are **bitwise
+identical** to the unpushed PR 3 plans across random masks, selectivities
+(including 0% and 100%), k beyond the unmasked count, and empty build
+sides — pushdown may only change *where* the selection executes, never
+what comes out."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dependency: property tests need hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.adil import Analysis
+from repro.core.ir import SystemCatalog, TensorT, standard_catalog
+from repro.core.rewrite import UNPUSHED_PIPELINE
+from repro.stores import ColumnStore, GraphStore, TextStore, store_engines
+from repro.stores import ref as R
+from repro.stores.masked_kernels import masked_segment_agg_pallas
+from repro.stores.text_store import tfidf_topk_blockskip, tfidf_topk_masked
+
+CAT = standard_catalog()
+SYS = SystemCatalog()
+SETTINGS = dict(max_examples=8, deadline=None)
+
+
+@st.composite
+def workload_case(draw):
+    rows = draw(st.integers(20, 120))
+    nodes = draw(st.integers(4, 24))
+    vocab = draw(st.integers(4, 24))
+    # selectivity: force the edge cases in, then anything in between.
+    # 0.0 also exercises the empty build side: no unmasked docs, so every
+    # top-k row is invalid and the join probes an all-masked build relation
+    sel = draw(st.one_of(st.sampled_from([0.0, 1.0, 0.01]),
+                         st.floats(0.0, 1.0)))
+    k = draw(st.one_of(st.integers(1, 8),
+                       st.just(10_000)))           # k > docs: clamp path
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    return rows, nodes, vocab, sel, k, seed
+
+
+def _build(rows, nodes, vocab, sel, k, rng):
+    table = ColumnStore({
+        "hashtag": rng.randint(0, nodes, rows).astype(np.int32),
+        "doc": np.arange(rows, dtype=np.int32),
+        "ts": np.arange(rows, dtype=np.int32),
+    })
+    e = rng.randint(0, nodes, (2, max(2 * nodes, 8)))
+    graph = GraphStore.from_edges(e[0], e[1], nodes, symmetric=True)
+    corpus = TextStore.from_docs(
+        [rng.randint(0, vocab, rng.randint(1, 7)) for _ in range(rows)],
+        vocab)
+    cut = int(round(rows * (1 - sel)))
+    with Analysis("prop", CAT) as a:
+        tw = a.bind("tweets", table)
+        gr = a.bind("g", graph)
+        cx = a.bind("cx", corpus)
+        q = a.input("q", TensorT((vocab,), "float32", ("vocab",)))
+        t = a.op("rel_scan", tw)
+        recent = a.op("rel_filter", t, col="ts", cmp="ge", value=cut,
+                      selectivity=sel)
+        m = a.op("sel_mask", recent, col="doc", size=rows)
+        sc = a.op("text_scores", cx, q)
+        hits = a.op("masked_topk", sc, m, k=k)
+        j = a.op("rel_join", recent, hits, left_on="doc", right_on="doc")
+        trel = a.op("rel_group_agg", j, key="hashtag", num_groups=nodes,
+                    aggs=(("textrel", "sum", "score"),))
+        seeds = a.op("rel_group_agg", recent, key="hashtag",
+                     num_groups=nodes, aggs=(("seed", "count", None),))
+        sv = a.op("col_tensor", seeds, col="seed", dim="nodes")
+        fr = a.op("graph_expand", gr, sv, hops=2)
+        tv = a.op("col_tensor", trel, col="textrel", dim="nodes")
+        a.store(a.op("residual_add", fr, tv))
+    inputs = {"tweets": table.payload(), "g": graph.payload(),
+              "cx": corpus.payload(),
+              "q": jnp.asarray(corpus.query_vector(
+                  rng.randint(0, vocab, 3)))}
+    return a, inputs
+
+
+@given(workload_case())
+@settings(**SETTINGS)
+def test_pushed_plan_bitwise_identical_to_unpushed(case):
+    rows, nodes, vocab, sel, k, seed = case
+    rng = np.random.RandomState(seed)
+    a, inputs = _build(rows, nodes, vocab, sel, k, rng)
+    pushed = a.compile(SYS, engines=store_engines(), cache=False)
+    unpushed = a.compile(SYS, engines=store_engines(), cache=False,
+                         rewrite_pipeline=UNPUSHED_PIPELINE)
+    np.testing.assert_array_equal(np.asarray(pushed({}, inputs)),
+                                  np.asarray(unpushed({}, inputs)))
+
+
+@st.composite
+def mask_case(draw):
+    docs = draw(st.integers(1, 80))
+    vocab = draw(st.integers(2, 16))
+    kind = draw(st.sampled_from(["none", "all", "window", "scatter"]))
+    block = draw(st.sampled_from([16, 64, 4096]))
+    k = draw(st.integers(1, 12))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    return docs, vocab, kind, block, k, seed
+
+
+@given(mask_case())
+@settings(**SETTINGS)
+def test_blockskip_scoring_bitwise_equals_dense(case):
+    docs, vocab, kind, block, k, seed = case
+    rng = np.random.RandomState(seed)
+    tx = TextStore.from_docs(
+        [rng.randint(0, vocab, rng.randint(1, 8)) for _ in range(docs)],
+        vocab)
+    mask = {"none": np.zeros(docs, bool),
+            "all": np.ones(docs, bool),
+            "window": np.arange(docs) >= docs // 2,
+            "scatter": rng.rand(docs) > 0.7}[kind]
+    q = jnp.asarray(tx.query_vector(rng.randint(0, vocab, 3)))
+    got = tfidf_topk_blockskip(tx.payload(), q, jnp.asarray(mask), k,
+                               block=block)
+    want = tfidf_topk_masked(tx.payload(), q, jnp.asarray(mask), k)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@st.composite
+def segagg_case(draw):
+    groups = draw(st.integers(1, 12))
+    n = draw(st.integers(1, 100))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    return groups, n, seed
+
+
+@given(segagg_case())
+@settings(**SETTINGS)
+def test_masked_segment_agg_kernel_agrees_with_reference(case):
+    groups, n, seed = case
+    rng = np.random.RandomState(seed)
+    vals = rng.randn(n).astype(np.float32)
+    keys = rng.randint(0, groups, n).astype(np.int32)
+    maskw = (rng.rand(n) > 0.5).astype(np.float32)
+    s, c = masked_segment_agg_pallas(jnp.asarray(vals), jnp.asarray(keys),
+                                     jnp.asarray(maskw), num_groups=groups,
+                                     interpret=True)
+    ws, wc = R.masked_segment_agg_ref(vals, keys, maskw, groups)
+    np.testing.assert_allclose(np.asarray(s), ws, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c), wc, rtol=1e-5, atol=1e-6)

@@ -91,8 +91,22 @@ def test_group_agg_matches_reference(rng):
         got = group_agg(jnp.asarray(vals), jnp.asarray(keys), 8,
                         jnp.asarray(mask), fn)
         want = R.group_agg_ref(vals, keys, 8, mask, fn)
+        if fn == "max":
+            (got, gvalid), (want, wvalid) = got, want
+            np.testing.assert_array_equal(np.asarray(gvalid), wvalid)
         np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5,
                                    atol=1e-6)
+
+
+def test_group_agg_max_distinguishes_empty_from_zero():
+    """An all-masked group is *invalid*, not a max of 0.0 — and a group
+    whose true max is 0.0 is valid (the regression this guards)."""
+    vals = jnp.asarray([0.0, -1.0, 5.0], jnp.float32)
+    keys = jnp.asarray([0, 0, 1], jnp.int32)
+    mask = jnp.asarray([True, True, False])
+    got, valid = group_agg(vals, keys, 2, mask, "max")
+    np.testing.assert_array_equal(np.asarray(valid), [True, False])
+    np.testing.assert_array_equal(np.asarray(got), [0.0, 0.0])
 
 
 def test_graph_ops_match_reference(rng):
@@ -149,9 +163,10 @@ def test_tfidf_matches_reference(rng):
     want = R.tfidf_scores_ref(tx.doc_ids, tx.term_ids, tx.tf, tx.doc_len,
                               tx.idf, q)
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5)
-    ids, scores = tfidf_topk(tx.payload(), jnp.asarray(q), 5)
+    ids, scores, valid = tfidf_topk(tx.payload(), jnp.asarray(q), 5)
     np.testing.assert_allclose(np.asarray(scores),
                                np.sort(want)[::-1][:5], rtol=1e-5)
+    assert bool(np.asarray(valid).all())
 
 
 # --------------------------------------------------------------------------
