@@ -1,8 +1,9 @@
-"""Tri-store efficiency: cross-engine placement and predicate pushdown.
+"""Tri-store efficiency: cross-engine placement, predicate pushdown, and
+bounded-relation compaction.
 
-Two benchmark modes over the same tri-model analysis family (scan/filter/
+Three benchmark modes over the same tri-model analysis family (scan/filter/
 aggregate a tweet table -> expand a hashtag graph -> score the tweet corpus
--> join + rank), both through the same ``PlanPipeline``:
+-> join + rank), all through the same ``PlanPipeline``:
 
 **Placement mode** (default, PR 3): planned ``place_xfers`` (xfer nodes
 only at true engine boundaries, cost model pins them device-resident) vs
@@ -21,10 +22,24 @@ so results stay **bitwise identical** while skipping the posting/edge
 blocks the window masks out; at <= 10% selectivity the pushed plan must be
 **>= 2x** faster.  The sweep is written to ``BENCH_tri_store.json``.
 
-    PYTHONPATH=src python -m benchmarks.tri_store_eff [--smoke] [--selective]
+**Bounded mode** (``--bounded``): compact-then-dense (the default
+pipeline's ``choose_compaction``: a prefix ``compact`` node below the
+confidently-selective window filter, downstream join/group-by running at
+the narrowed capacity) vs masked-dense (same pushdown, no compaction —
+every operator drags the full-capacity relation behind its mask) on a
+rel-heavy windowed aggregation.  Compaction preserves valid rows in order
+(dropped rows contributed exactly +/-0.0 — which requires *finite* column
+data: a masked NaN/inf row poisons a masked-dense sum but not a compacted
+one), so results stay **bitwise identical**; at <= 10% selectivity
+compact-then-dense must be **>= 1.5x** faster.  The sweep is merged into
+``BENCH_tri_store.json`` under ``"bounded"``.
+
+    PYTHONPATH=src python -m benchmarks.tri_store_eff \
+        [--smoke] [--selective | --bounded]
 """
 import argparse
 import json
+import os
 import sys
 import time
 
@@ -35,7 +50,7 @@ import jax.numpy as jnp
 from benchmarks.common import emit
 from repro.core.adil import Analysis
 from repro.core.ir import SystemCatalog, TensorT, standard_catalog
-from repro.core.rewrite import UNPUSHED_PIPELINE
+from repro.core.rewrite import UNCOMPACTED_PIPELINE, UNPUSHED_PIPELINE
 from repro.stores import ColumnStore, GraphStore, TextStore, store_engines
 
 # the naive baseline keeps PR 3's *unfused* per-op shape (fusion would
@@ -167,6 +182,73 @@ def build_selective_workload(rng, selectivity, *, tweets, hashtags, edges,
     return a, inputs
 
 
+def build_bounded_workload(rng, selectivity, *, tweets, hashtags, metrics):
+    """Windowed relational rollup: "this window's tweets, joined against
+    the hashtag dimension table, rolled up per hashtag over ``metrics``
+    engagement columns".  The window filter carries an exact
+    ``selectivity=`` hint (windows are ranges over the append-ordered
+    ``ts`` column, so the fraction is known), which is precisely the
+    confidence ``choose_compaction`` requires before bounding a capacity:
+    the compacted plan probes and aggregates ~selectivity x tweets rows
+    while the masked plan drags all of them behind the validity vector.
+    """
+    cols = {
+        "hashtag": (rng.zipf(1.3, tweets) % hashtags).astype(np.int32),
+        "doc": np.arange(tweets, dtype=np.int32),
+        "ts": np.arange(tweets, dtype=np.int32),       # append-ordered log
+    }
+    for i in range(metrics):
+        cols[f"metric{i}"] = rng.rand(tweets).astype(np.float32)
+    table = ColumnStore(cols)
+    dims = ColumnStore({"hashtag": np.arange(hashtags, dtype=np.int32),
+                        "weight": rng.rand(hashtags).astype(np.float32)})
+
+    cut = int(tweets * (1.0 - selectivity))
+    cat = standard_catalog()
+    with Analysis(f"tri_bounded_{selectivity}", cat) as a:
+        tw = a.bind("tweets", table)
+        dm = a.bind("dims", dims)
+        t = a.op("rel_scan", tw)
+        recent = a.op("rel_filter", t, col="ts", cmp="ge", value=cut,
+                      selectivity=selectivity)
+        j = a.op("rel_join", recent, dm, left_on="hashtag",
+                 right_on="hashtag")
+        aggs = tuple((f"s{i}", "sum", f"metric{i}") for i in range(metrics))
+        roll = a.op("rel_group_agg", j, key="hashtag", num_groups=hashtags,
+                    aggs=aggs + (("w", "sum", "weight"),))
+        out = a.op("col_tensor", roll, col="s0", dim="nodes")
+        for i in range(1, metrics):
+            out = a.op("residual_add", out,
+                       a.op("col_tensor", roll, col=f"s{i}", dim="nodes"))
+        a.store(out)
+
+    inputs = {"tweets": table.payload(), "dims": dims.payload()}
+    return a, inputs
+
+
+def merge_report(json_out, report, section=None):
+    """Write ``report`` to ``json_out``, preserving the other mode's
+    section: the bounded sweep lands under ``section="bounded"`` inside
+    whatever is already there; the selective sweep becomes the top level
+    but carries a prior "bounded" section along."""
+    base = {}
+    if os.path.exists(json_out):
+        try:
+            with open(json_out) as fh:
+                base = json.load(fh)
+        except Exception:
+            base = {}
+    if section is not None:
+        base[section] = report
+        out = base
+    else:
+        if "bounded" in base:
+            report = dict(report, bounded=base["bounded"])
+        out = report
+    with open(json_out, "w") as fh:
+        json.dump(out, fh, indent=2)
+
+
 def t_min(f, inputs, warmup=2, iters=10):
     """min-of-N: background noise in shared CI runners is strictly
     additive, so the minimum is the clean estimate of each path's cost."""
@@ -276,11 +358,71 @@ def run_selective(args):
         "smoke": bool(args.smoke), "min_speedup": args.min_speedup,
         "workload": size, "sweep": rows, "ok": bool(ok),
     }
-    with open(args.json_out, "w") as fh:
-        json.dump(report, fh, indent=2)
+    merge_report(args.json_out, report)
     print(f"[tri_store_eff] wrote {args.json_out}")
     emit([(f"tri_pushed_sel{int(r['selectivity'] * 100)}",
            r["pushed_ms"] * 1e3, f"speedup={r['speedup']:.2f}x")
+          for r in rows])
+    return 0 if ok else 1
+
+
+def run_bounded(args):
+    size = (dict(tweets=150_000, hashtags=4096, metrics=6) if args.smoke
+            else dict(tweets=400_000, hashtags=8192, metrics=8))
+    sweep = [0.01, 0.05, 0.10, 1.0]
+    engines = store_engines()
+    syscat = SystemCatalog()
+    rows, ok = [], True
+    for sel in sweep:
+        rng = np.random.RandomState(0)
+        analysis, inputs = build_bounded_workload(rng, sel, **size)
+        compacted = analysis.compile(syscat, engines=engines, cache=False)
+        masked = analysis.compile(syscat, engines=engines, cache=False,
+                                  rewrite_pipeline=UNCOMPACTED_PIPELINE)
+        # compact appears standalone or as a step inside a fused rel chain
+        has_compact = any(
+            "compact" in n.impl
+            or any(op == "compact" for op, *_ in n.attrs.get("chain", ()))
+            for n in compacted.concrete.topo())
+        fc = jax.jit(lambda i, c=compacted: c({}, i))
+        fm = jax.jit(lambda i, m=masked: m({}, i))
+        identical = bool(np.array_equal(np.asarray(fc(inputs)),
+                                        np.asarray(fm(inputs))))
+        tc = t_min(fc, inputs)
+        tm = t_min(fm, inputs)
+        speedup = tm / tc
+        rows.append({
+            "selectivity": sel,
+            "compacted_ms": tc * 1e3, "masked_ms": tm * 1e3,
+            "speedup": speedup, "identical": identical,
+            "compact_inserted": has_compact,
+        })
+        print(f"[tri_store_eff] sel={sel:>5.0%}  compact {tc * 1e3:7.1f} ms"
+              f"  masked {tm * 1e3:7.1f} ms  -> {speedup:5.2f}x  "
+              f"identical={identical}  compact_inserted={has_compact}")
+        ok &= identical
+        if sel <= 0.10:
+            ok &= has_compact and speedup >= args.min_speedup
+            if speedup < args.min_speedup:
+                print(f"[tri_store_eff] FAIL: sel={sel:.0%} speedup "
+                      f"{speedup:.2f}x < {args.min_speedup:.1f}x")
+            if not has_compact:
+                print(f"[tri_store_eff] FAIL: sel={sel:.0%} planner did "
+                      f"not insert compaction")
+        else:
+            ok &= not has_compact     # full window: no compaction, parity
+        if not identical:
+            print(f"[tri_store_eff] FAIL: sel={sel:.0%} results differ")
+
+    report = {
+        "mode": "bounded", "smoke": bool(args.smoke),
+        "min_speedup": args.min_speedup, "workload": size,
+        "sweep": rows, "ok": bool(ok),
+    }
+    merge_report(args.json_out, report, section="bounded")
+    print(f"[tri_store_eff] wrote {args.json_out} (bounded section)")
+    emit([(f"tri_bounded_sel{int(r['selectivity'] * 100)}",
+           r["compacted_ms"] * 1e3, f"speedup={r['speedup']:.2f}x")
           for r in rows])
     return 0 if ok else 1
 
@@ -292,9 +434,14 @@ def main(argv=None):
     ap.add_argument("--selective", action="store_true",
                     help="predicate-pushdown sweep (pushed vs PR 3 "
                          "unpushed) instead of placement vs naive")
+    ap.add_argument("--bounded", action="store_true",
+                    help="bounded-relation sweep: compact-then-dense vs "
+                         "masked-dense")
     ap.add_argument("--min-speedup", type=float, default=2.0)
     ap.add_argument("--json-out", default="BENCH_tri_store.json")
     args = ap.parse_args(argv)
+    if args.bounded:
+        return run_bounded(args)
     if args.selective:
         return run_selective(args)
     return run_placement(args)

@@ -47,6 +47,7 @@ class Analysis:
         self.plan = Plan(name)
         self.catalog = catalog
         self._stores: list = []
+        self._bound: dict = {}   # input name -> bound Store object
 
     # -- statements ----------------------------------------------------------
     def input(self, name: str, typ: Type) -> Var:
@@ -73,8 +74,18 @@ class Analysis:
 
     def bind(self, name: str, store) -> Var:
         """Declare a store input directly from a Store object (its ``type``
-        carries the size metadata the planner prices movement with)."""
+        carries the size metadata the planner prices movement with).  The
+        store stays tracked: its monotonic ``version`` is folded into the
+        plan-cache key at compile time, so appending to a bound store
+        invalidates plans cached against its previous contents."""
+        self._bound[name] = store
         return self.input(name, store.type)
+
+    def store_versions(self) -> tuple:
+        """The bound stores' ``(name, version)`` vector (stores without a
+        version — e.g. static graph snapshots — count as version 0)."""
+        return tuple(sorted((n, int(getattr(s, "version", 0)))
+                            for n, s in self._bound.items()))
 
     def op(self, op_name: str, *inputs, subplan: Optional[Plan] = None,
            **attrs) -> Var:
@@ -119,6 +130,22 @@ class Analysis:
         replanning.  Pass ``cache=False`` to force a fresh run."""
         if not self.plan.outputs:
             self.plan.set_outputs(*self._stores)
+        if self._bound:
+            # re-snapshot bound store types: an append since bind() may have
+            # changed row counts / expected counts, and replanning against
+            # the stale snapshot would price (and size compactions) on
+            # stale cardinalities — the very thing the version key exists
+            # to invalidate
+            stale = False
+            for n, s in self._bound.items():
+                if self.plan.inputs.get(n) != s.type:
+                    self.plan.inputs[n] = s.type
+                    self.plan.types[n] = s.type
+                    stale = True
+            if stale:
+                self.plan._bump()
+                infer_types(self.plan, self.catalog)
+            kw.setdefault("store_versions", self.store_versions())
         return plan_and_compile(self.plan, self.catalog, syscat, **kw)
 
     def plan_id(self, syscat: SystemCatalog) -> str:

@@ -250,34 +250,96 @@ def _e_unembed(in_types, attrs, syscat):
 
 
 # -- tri-store operators (raw features = the paper's table sizes / node
-#    counts / keyword-list sizes, here rows / edges / postings) -------------
+#    counts / keyword-list sizes, here rows / edges / postings).  Work is
+#    priced on the **expected count** (the type's cardinality estimate, fed
+#    by hints and observed-selectivity feedback), while streaming bytes are
+#    priced on capacity — a masked engine still reads every physical row,
+#    which is exactly why compact-then-dense can out-price masked-dense.
+
+
+def _expected_rows(t) -> float:
+    if isinstance(t, TableT):
+        return float(t.expected_rows())
+    return 1.0
+
+
+def _capacity_rows(t) -> float:
+    return float(t.rows) if isinstance(t, TableT) else 1.0
 
 
 @estimator("rel_scan_col", "rel_filter_col", "col_tensor_rel")
 def _e_rel_stream(in_types, attrs, syscat):
     t = in_types[0]
     b = _sum_bytes([t])
-    rows = t.rows if isinstance(t, TableT) else 1
-    return OpCost(float(rows), 2.0 * b, 0.0)
+    return OpCost(_expected_rows(t), 2.0 * b, 0.0)
 
 
 @estimator("rel_hash_join")
 def _e_rel_join(in_types, attrs, syscat):
     lb, rb = _sum_bytes([in_types[0]]), _sum_bytes([in_types[1]])
-    lr = in_types[0].rows if isinstance(in_types[0], TableT) else 1
-    rr = in_types[1].rows if isinstance(in_types[1], TableT) else 1
-    # build (sort right) + probe (binary search per left row)
+    lr = _expected_rows(in_types[0])
+    rr = _capacity_rows(in_types[1])
+    # build (sort right) + probe (binary search per expected left row)
     logr = max(1.0, math.log2(max(rr, 2)))
     return OpCost(rr * logr + lr * logr, 2.0 * (lb + rb), 0.0)
+
+
+@estimator("rel_join_probe_pallas")
+def _e_rel_join_probe(in_types, attrs, syscat):
+    """MXU key-equality probe: the whole (expected-count-bounded) build
+    side against every probe block, one fused contraction — no sort.  The
+    one-hot compare is MXU-shaped, so its flops are credited against the
+    matrix unit; the candidate gate keeps the build bounded."""
+    lb, rb = _sum_bytes([in_types[0]]), _sum_bytes([in_types[1]])
+    lr = _capacity_rows(in_types[0])
+    # the one-hot is as wide as the build side's *physical capacity* (the
+    # VMEM-resident block); the gate keeps it bounded, the expected count
+    # keeps the candidate from being offered against fat builds at all
+    bw = float(attrs.get("build_rows", _capacity_rows(in_types[1])))
+    mxu_credit = 64.0            # systolic contraction vs scalar compares
+    blocks = max(1.0, lr / 512.0)
+    return OpCost(lr * max(bw, 1.0) / mxu_credit + blocks * 256.0,
+                  1.5 * (lb + rb), 0.0)
+
+
+@estimator("bounded_join_col")
+def _e_bounded_join(in_types, attrs, syscat):
+    lb, rb = _sum_bytes([in_types[0]]), _sum_bytes([in_types[1]])
+    lr = _expected_rows(in_types[0])
+    rr = _capacity_rows(in_types[1])
+    cap = float(attrs.get("capacity", lr))
+    logr = max(1.0, math.log2(max(rr, 2)))
+    # build sort + two binary searches per probe row + per-slot owner lookup
+    out_b = cap * 4.0 * max(1, len(getattr(in_types[0], "columns", ())) + 1)
+    return OpCost(rr * logr + 2.0 * lr * logr + cap * logr,
+                  2.0 * (lb + rb) + out_b, 0.0)
+
+
+@estimator("compact_prefix_col", "compact_prefix_pallas")
+def _e_compact(in_types, attrs, syscat):
+    """One full-capacity pass (the prefix sum over validity) plus a
+    capacity-bounded gather/scatter write: what compact *costs* up front,
+    repaid by every downstream op running at the narrowed capacity."""
+    t = in_types[0]
+    rows = _capacity_rows(t)
+    cap = float(attrs.get("capacity", rows))
+    ncols = max(1, len(getattr(t, "columns", ())))
+    out_b = cap * 4.0 * (ncols + 1)
+    flops = rows + cap * ncols
+    if attrs.get("_impl_pallas"):
+        # one-hot scatter: row-block x out-block matmul work instead of a
+        # gather, partially credited to the MXU
+        flops = rows + rows * cap / 64.0
+    return OpCost(flops, _sum_bytes([t]) + 2.0 * out_b, 0.0)
 
 
 @estimator("rel_group_agg_col")
 def _e_rel_group(in_types, attrs, syscat):
     t = in_types[0]
-    rows = t.rows if isinstance(t, TableT) else 1
     n_aggs = max(1, len(attrs.get("aggs", ())))
     out_b = int(attrs.get("num_groups", 1)) * 4 * (n_aggs + 1)
-    return OpCost(float(rows * n_aggs), 2.0 * _sum_bytes([t]) + out_b, 0.0)
+    return OpCost(_expected_rows(t) * n_aggs,
+                  2.0 * _sum_bytes([t]) + out_b, 0.0)
 
 
 def _graph_cost(g, passes, syscat, pallas=False):
@@ -379,6 +441,25 @@ def _e_text_topk_skip(in_types, attrs, syscat):
     return OpCost(flops, bts, 0.0)
 
 
+@estimator("graph_pagerank_skip")
+def _e_graph_pagerank_skip(in_types, attrs, syscat):
+    """First-iteration block-skipping PageRank: iteration 0 touches only
+    the edge blocks the sparse personalization activates; the remaining
+    iterations (dense rank vector) cost the full CSR pass."""
+    g = in_types[0]
+    if not isinstance(g, GraphT):
+        return OpCost(0.0, _sum_bytes(in_types), 0.0)
+    s = float(attrs.get("personalization_selectivity", 1.0))
+    iters = max(1, int(attrs.get("iters", 10)))
+    per_pass = _graph_cost(g, 1, syscat)
+    blocks = max(1.0, int(g.edges) / GRAPH_SKIP_BLOCK)
+    eff = (iters - 1) + min(1.0, s)
+    return OpCost(per_pass.flops * eff + blocks * _BLOCK_OVERHEAD_FLOPS
+                  + 2.0 * int(g.nodes),
+                  per_pass.bytes * eff + int(g.nodes) * 8.0 + blocks * 64.0,
+                  0.0)
+
+
 @estimator("graph_expand_skip")
 def _e_graph_expand_skip(in_types, attrs, syscat):
     g = in_types[0]
@@ -404,8 +485,10 @@ def _e_graph_expand_skip(in_types, attrs, syscat):
 # second full input pass.
 
 _STEP_IMPL = {"rel_scan": "rel_scan_col", "rel_filter": "rel_filter_col",
-              "rel_join": "rel_hash_join", "rel_group_agg":
-              "rel_group_agg_col"}
+              "compact": "compact_prefix_col",
+              "rel_join": "rel_hash_join",
+              "bounded_join": "bounded_join_col",
+              "rel_group_agg": "rel_group_agg_col"}
 
 
 @estimator("rel_fused_col", "rel_fused_agg_pallas")

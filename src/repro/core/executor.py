@@ -564,6 +564,30 @@ class PlannedFunction:
         outs = run_plan(self.concrete, ctx, inputs)
         return outs if len(outs) > 1 else outs[0]
 
+    def observe(self, params, inputs: dict, feedback,
+                aux: Optional[dict] = None):
+        """Execute the plan **eagerly** while recording observed
+        cardinalities: every ``rel_filter`` / ``sel_mask`` site reports its
+        actual ``count / capacity`` into ``feedback`` (a
+        ``SelectivityFeedback``).  BoundedRel makes the count a concrete
+        runtime value outside jit, so observation is one un-jitted run —
+        re-compiling with the same feedback object then re-plans under the
+        observed selectivities (and misses the plan cache by construction).
+        Returns the plan outputs, exactly like ``__call__``."""
+        sink: list = []
+        out_aux = dict(aux or {})
+        out_aux["count_sink"] = sink
+        outs = self.__call__(params, inputs, aux=out_aux)
+        for site, count, capacity in sink:
+            if site and site[0] == "compact_overflow":
+                # a capacity bound dropped rows: flag the originating
+                # predicate site so re-planning backs off from compacting it
+                if float(count) > 0:
+                    feedback.note_overflow(tuple(site[1]))
+                continue
+            feedback.record(site, float(count), int(capacity))
+        return outs
+
 
 def plan_and_compile(logical: Plan, catalog: FunctionCatalog,
                      syscat: SystemCatalog, *,
@@ -578,7 +602,9 @@ def plan_and_compile(logical: Plan, catalog: FunctionCatalog,
                      interpret: bool = True,
                      cache=None,
                      pipeline=None,
-                     plan_threads: int = 1) -> PlannedFunction:
+                     plan_threads: int = 1,
+                     feedback=None,
+                     store_versions: tuple = ()) -> PlannedFunction:
     """Thin compatibility wrapper over the staged plan pipeline.
 
     Resolves the engine selection (``engines`` names from the registry;
@@ -586,6 +612,11 @@ def plan_and_compile(logical: Plan, catalog: FunctionCatalog,
     plan cache — the Algorithm-1 pass pipeline, and binds the staged plan to
     this call's runtime context.  ``cache=False`` forces a fresh planning
     run; any other value uses the given / default PlanCache.
+
+    ``feedback`` is an optional observed-selectivity store (consumed by the
+    rewrites, folded into the plan id); ``store_versions`` is the bound
+    stores' monotonic version vector — appending to a store bumps it, so
+    plans cached against the previous contents provably invalidate.
     """
     from .pipeline import PlanOptions, compile_staged
     from .rewrite import DEFAULT_PIPELINE
@@ -596,8 +627,11 @@ def plan_and_compile(logical: Plan, catalog: FunctionCatalog,
         global_batch=global_batch,
         rewrite_pipeline=tuple(rewrite_pipeline or DEFAULT_PIPELINE),
         plan_threads=plan_threads)
+    extra_key = (("store_versions", tuple(store_versions))
+                 if store_versions else ())
     staged = compile_staged(logical, catalog, syscat, options=opts,
                             cost_model=cost_model, pipeline=pipeline,
-                            cache=cache)
+                            cache=cache, feedback=feedback,
+                            extra_key=extra_key)
     return PlannedFunction.from_staged(staged, syscat, rules=rules,
                                        mesh=mesh, interpret=interpret)

@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import itertools
+import math
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Iterable, Mapping, Optional, Sequence
 
@@ -122,21 +123,44 @@ class ScalarT(Type):
 
 @dataclass(frozen=True)
 class TableT(Type):
-    """Relational table: named, typed columns over a fixed row count.
+    """Relational table: named, typed columns over a fixed row *capacity*.
 
-    The runtime value is a struct-of-JAX-arrays dict (one (rows,) array per
-    column) plus a boolean ``_mask`` selection vector — filters narrow the
-    mask rather than the physical row count, so every relational kernel
-    stays static-shaped and jittable.
+    The runtime value is a :class:`~repro.stores.bounded.BoundedRel` —
+    struct-of-JAX-arrays columns plus a ``valid`` vector and a traced row
+    ``count`` — so filters narrow validity rather than the physical row
+    count and every relational kernel stays static-shaped and jittable.
+
+    ``rows`` is the **capacity** (the static array length; ``capacity`` is
+    its explicit alias).  ``expected_count`` is the planner's cardinality
+    estimate — how many rows are expected to be *valid* at run time.
+    ``None`` means "all of them" (a base table, an unfiltered scan).  The
+    cost model prices relational work on the expected count, and the
+    ``choose_compaction`` rewrite inserts ``compact`` nodes where the
+    expected count sits far below capacity.
     """
 
     columns: tuple            # ((name, dtype), ...)
     rows: int
+    expected_count: Optional[int] = None
 
     def __post_init__(self):
         names = [c[0] for c in self.columns]
         if len(set(names)) != len(names):
             raise ValidationError(f"duplicate column names in {names}")
+        if self.expected_count is not None and self.expected_count > self.rows:
+            raise ValidationError(
+                f"expected_count {self.expected_count} exceeds "
+                f"capacity {self.rows}")
+
+    @property
+    def capacity(self) -> int:
+        return int(self.rows)
+
+    def expected_rows(self) -> int:
+        """The cardinality estimate the cost model prices with: the
+        expected valid-row count, defaulting to the full capacity."""
+        return int(self.rows if self.expected_count is None
+                   else self.expected_count)
 
     def col_names(self) -> tuple:
         return tuple(c[0] for c in self.columns)
@@ -151,12 +175,14 @@ class TableT(Type):
         raise ValidationError(f"no column {name!r} in {self}")
 
     def bytesize(self) -> int:
-        per_row = sum(dtype_bytes(d) for _, d in self.columns) + 1  # + _mask
+        per_row = sum(dtype_bytes(d) for _, d in self.columns) + 1  # + valid
         return int(self.rows) * per_row
 
     def __repr__(self):
         cols = ", ".join(f"{n}:{d}" for n, d in self.columns)
-        return f"TableT({cols}; rows={self.rows})"
+        exp = ("" if self.expected_count is None
+               else f", count~{self.expected_count}")
+        return f"TableT({cols}; capacity={self.rows}{exp})"
 
 
 @dataclass(frozen=True)
@@ -213,6 +239,14 @@ def dtype_bytes(dtype: str) -> int:
 
 class ValidationError(Exception):
     """Raised by compile-time validation (paper design decision 5)."""
+
+
+# per-comparator selected-fraction heuristics, the single source shared by
+# type inference (TableT.expected_count) and the rewrite layer's
+# estimate_selectivity — both halves of the planner must reason from the
+# same cardinalities (an explicit ``selectivity=`` attr wins over these)
+CMP_SELECTIVITY = {"eq": 0.1, "ne": 0.9,
+                   "lt": 1 / 3, "le": 1 / 3, "gt": 1 / 3, "ge": 1 / 3}
 
 
 # --------------------------------------------------------------------------
@@ -880,6 +914,13 @@ def standard_catalog() -> FunctionCatalog:
     #    ``place_xfers`` rewrite turns engine boundaries into explicit
     #    ``xfer`` nodes whose materialization the cost model decides.
 
+    def _expected_after_filter(t: "TableT", attrs) -> Optional[int]:
+        sel = attrs.get("selectivity")
+        if sel is None:
+            sel = CMP_SELECTIVITY.get(attrs.get("cmp"), 0.5)
+        base = t.rows if t.expected_count is None else t.expected_count
+        return min(int(t.rows), max(1, int(math.ceil(base * float(sel)))))
+
     @cat.op("rel_scan", n_inputs=1, engine="rel")
     def _rel_scan(ins, attrs, sub):
         t = expect_table(ins[0], "rel_scan")
@@ -890,7 +931,7 @@ def standard_catalog() -> FunctionCatalog:
             if not t.has_col(c):
                 raise ValidationError(f"rel_scan: no column {c!r} in {t!r}")
         return TableT(tuple((n, d) for n, d in t.columns if n in tuple(cols)),
-                      t.rows)
+                      t.rows, t.expected_count)
 
     @cat.op("rel_filter", n_inputs=1, required_attrs=("col", "cmp", "value"),
             engine="rel")
@@ -901,22 +942,60 @@ def standard_catalog() -> FunctionCatalog:
                 f"rel_filter: no column {attrs['col']!r} in {t!r}")
         if attrs["cmp"] not in ("eq", "ne", "lt", "le", "gt", "ge"):
             raise ValidationError(f"rel_filter: bad cmp {attrs['cmp']!r}")
-        return t  # selection narrows the mask, not the row count
+        # selection narrows validity, not capacity; the expected count
+        # shrinks by the (hinted or heuristic) selectivity
+        return replace(t, expected_count=_expected_after_filter(t, attrs))
+
+    @cat.op("compact", n_inputs=1, engine="rel")
+    def _compact(ins, attrs, sub):
+        """Prefix-compaction: valid rows move, in order, to the front of a
+        (usually smaller) capacity.  Capacity narrower than the run-time
+        survivor count drops rows and raises the relation's overflow flag."""
+        t = expect_table(ins[0], "compact")
+        cap = int(attrs.get("capacity", t.rows))
+        if cap < 1:
+            raise ValidationError(f"compact: capacity={cap} out of range")
+        cap = min(cap, t.rows)
+        exp = attrs.get("expected_count", t.expected_count)
+        exp = None if exp is None else min(int(exp), cap)
+        return TableT(t.columns, cap, exp)
+
+    def _join_columns(lt, rt, attrs, what):
+        lo, ro = attrs["left_on"], attrs["right_on"]
+        if not lt.has_col(lo):
+            raise ValidationError(f"{what}: no left column {lo!r}")
+        if not rt.has_col(ro):
+            raise ValidationError(f"{what}: no right column {ro!r}")
+        taken = set(lt.col_names())
+        extra = tuple((n, d) for n, d in rt.columns
+                      if n != ro and n not in taken)
+        return lt.columns + extra
 
     @cat.op("rel_join", n_inputs=2, required_attrs=("left_on", "right_on"),
             engine="rel")
     def _rel_join(ins, attrs, sub):
         lt = expect_table(ins[0], "rel_join left")
         rt = expect_table(ins[1], "rel_join right")
-        lo, ro = attrs["left_on"], attrs["right_on"]
-        if not lt.has_col(lo):
-            raise ValidationError(f"rel_join: no left column {lo!r}")
-        if not rt.has_col(ro):
-            raise ValidationError(f"rel_join: no right column {ro!r}")
-        taken = set(lt.col_names())
-        extra = tuple((n, d) for n, d in rt.columns
-                      if n != ro and n not in taken)
-        return TableT(lt.columns + extra, lt.rows)
+        # unique-build-key probe: output rows mirror the probe side, so the
+        # probe side's expected count passes through (joins only narrow)
+        return TableT(_join_columns(lt, rt, attrs, "rel_join"), lt.rows,
+                      lt.expected_count)
+
+    @cat.op("bounded_join", n_inputs=2,
+            required_attrs=("left_on", "right_on", "capacity"), engine="rel")
+    def _bounded_join(ins, attrs, sub):
+        """Equi-join with **non-unique build keys**: every (probe, build)
+        key match emits a row into a capacity-bounded output.  Matches
+        beyond ``capacity`` are dropped with the overflow flag raised."""
+        lt = expect_table(ins[0], "bounded_join left")
+        rt = expect_table(ins[1], "bounded_join right")
+        cap = int(attrs["capacity"])
+        if cap < 1:
+            raise ValidationError(f"bounded_join: capacity={cap} "
+                                  f"out of range")
+        exp = attrs.get("expected_count")
+        exp = None if exp is None else min(int(exp), cap)
+        return TableT(_join_columns(lt, rt, attrs, "bounded_join"), cap, exp)
 
     @cat.op("rel_group_agg", n_inputs=1,
             required_attrs=("key", "num_groups", "aggs"), engine="rel")
@@ -937,7 +1016,12 @@ def standard_catalog() -> FunctionCatalog:
             if fn != "count" and not t.has_col(col):
                 raise ValidationError(f"rel_group_agg: no column {col!r}")
             cols.append((out_name, "float32"))
-        return TableT(tuple(cols), int(attrs["num_groups"]))
+        groups = int(attrs["num_groups"])
+        # at most one valid output row per occupied group: the expected
+        # input count upper-bounds the occupied-group count
+        exp = (None if t.expected_count is None
+               else min(groups, int(t.expected_count)))
+        return TableT(tuple(cols), groups, exp)
 
     @cat.op("col_tensor", n_inputs=1, required_attrs=("col",), engine="rel")
     def _col_tensor(ins, attrs, sub):

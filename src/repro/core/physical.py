@@ -117,12 +117,23 @@ defop("tuple_get_xla", buf_cap=B)
 defop("rel_scan_col", dp_cap=ST, buf_cap=SO, cap_on=None, backend="rel")
 defop("rel_filter_col", dp_cap=ST, buf_cap=SS, cap_on=None, backend="rel")
 defop("rel_hash_join", dp_cap=ST, buf_cap=SI, cap_on=None, backend="rel")
+# bounded relations: non-unique-build join into a capacity-bounded output,
+# prefix compaction (XLA gather vs Pallas one-hot scatter), and the MXU
+# probe kernel gated on the build side's expected count
+defop("bounded_join_col", dp_cap=ST, buf_cap=SI, cap_on=None, backend="rel")
+defop("rel_join_probe_pallas", dp_cap=EX, buf_cap=SI, cap_on=None,
+      backend="pallas")
+defop("compact_prefix_col", dp_cap=ST, buf_cap=SS, cap_on=None, backend="rel")
+defop("compact_prefix_pallas", dp_cap=EX, buf_cap=SS, cap_on=None,
+      backend="pallas")
 defop("rel_group_agg_col", dp_cap=ST, buf_cap=SI, cap_on=None, backend="rel")
 defop("col_tensor_rel", dp_cap=ST, buf_cap=SO, cap_on=None, backend="rel")
 defop("graph_expand_csr", dp_cap=ST, buf_cap=SS, cap_on=None, backend="graph")
 defop("graph_expand_pallas", dp_cap=EX, buf_cap=SS, cap_on=None,
       backend="pallas")
 defop("graph_pagerank_csr", dp_cap=ST, buf_cap=SS, cap_on=None,
+      backend="graph")
+defop("graph_pagerank_skip", dp_cap=ST, buf_cap=SS, cap_on=None,
       backend="graph")
 defop("graph_pagerank_pallas", dp_cap=EX, buf_cap=SS, cap_on=None,
       backend="pallas")
@@ -257,6 +268,37 @@ def _frontier_sparse(nodes):
             <= SKIP_SELECTIVITY_THRESHOLD)
 
 
+def _personalization_sparse(nodes):
+    """First-iteration PageRank pushdown: offered only when a pushed
+    selection made the personalization vector sparse."""
+    return (len(nodes[0].inputs) == 2
+            and float(nodes[0].attrs.get("personalization_selectivity", 1.0))
+            <= SKIP_SELECTIVITY_THRESHOLD)
+
+
+# the MXU probe kernel holds the whole build side in one VMEM block, so the
+# gate bounds the build side's *physical capacity* (what actually rides in
+# VMEM and widens the one-hot), and requires a known expected count — the
+# quantity the cost model prices the candidate on
+JOIN_PROBE_MAX_BUILD = 4096
+
+
+def _probe_kernel_ok(nodes):
+    a = nodes[0].attrs
+    return (0 < int(a.get("build_expected", 0))
+            and 0 < int(a.get("build_rows", 0)) <= JOIN_PROBE_MAX_BUILD)
+
+
+def _compact_kernel_ok(nodes):
+    """The one-hot compaction kernel routes every column through a float32
+    matmul: bit-exact for float/bool columns, lossy above 2^24 for integer
+    keys — which cannot be bounded statically, so integer columns keep the
+    gather realization."""
+    dts = nodes[0].attrs.get("col_dtypes")
+    return bool(dts) and all(str(d).startswith("float") or str(d) == "bool"
+                             for d in dts)
+
+
 def _agg_kernel_ok(nodes):
     """The masked segment-aggregate kernel covers the sum family only (max
     needs a segment-max reduction the one-hot matmul cannot express)."""
@@ -360,6 +402,34 @@ DEFAULT_PATTERNS = (
                       requires_backend="graph"),
             Candidate("pagerank_pallas", ("graph_pagerank_pallas",),
                       requires_backend="pallas"),
+            # personalization-sparsity pushdown: iteration 0's SpMV
+            # block-skips on the pushed mask's support (bitwise-identical)
+            Candidate("pagerank_skip", ("graph_pagerank_skip",),
+                      requires_backend="graph",
+                      when=_personalization_sparse),
+        ),
+    ),
+    # equi-join probe: the sort + binary-search realization always; the MXU
+    # key-equality kernel when the build side's expected count is bounded
+    # enough to ride in VMEM (capacity-bounded builds: compacted filters,
+    # top-k relations)
+    Pattern(
+        "rel_join_op", ("rel_join",),
+        (
+            Candidate("join_sort_probe", ("rel_hash_join",),
+                      requires_backend="rel"),
+            Candidate("join_probe_kernel", ("rel_join_probe_pallas",),
+                      requires_backend="pallas", when=_probe_kernel_ok),
+        ),
+    ),
+    # prefix compaction: XLA gather vs the Pallas one-hot scatter kernel
+    Pattern(
+        "compact_op", ("compact",),
+        (
+            Candidate("compact_gather", ("compact_prefix_col",),
+                      requires_backend="rel"),
+            Candidate("compact_onehot", ("compact_prefix_pallas",),
+                      requires_backend="pallas", when=_compact_kernel_ok),
         ),
     ),
     # cross-engine transfer: the cost model chooses the materialization
@@ -404,7 +474,9 @@ DIRECT_IMPL = {
     # tri-store single-candidate ops
     "rel_scan": "rel_scan_col",
     "rel_filter": "rel_filter_col",
-    "rel_join": "rel_hash_join",
+    # rel_join and compact are pattern-matched (probe-kernel / Pallas
+    # compaction candidates); bounded_join has one realization
+    "bounded_join": "bounded_join_col",
     "rel_group_agg": "rel_group_agg_col",
     "col_tensor": "col_tensor_rel",
     "graph_tricount": "graph_tricount_csr",

@@ -241,6 +241,14 @@ class StagedPhysicalPlan:
                 for rewr in rule.get("info", {}).get("pushed", ()):
                     lines.append("        + " + " ".join(
                         f"{k}={v}" for k, v in rewr.items()))
+                # bounded relations: where compaction was placed, and the
+                # count-vs-capacity reasoning behind it
+                for cp in rule.get("info", {}).get("compacted", ()):
+                    lines.append(
+                        f"        + compact below={cp['filter']} "
+                        f"count~{cp['expected']} capacity={cp['capacity']} "
+                        f"(rows={cp['rows']}, "
+                        f"selectivity={cp['selectivity']})")
                 for ch in rule.get("info", {}).get("fused_chains", ()):
                     lines.append(
                         f"        + fused {'->'.join(ch['ops'])} "
@@ -336,15 +344,21 @@ def staged_plan_id(logical: Plan, catalog: FunctionCatalog,
                    syscat: SystemCatalog, options: PlanOptions,
                    cost_model: Optional[CostModel] = None,
                    patterns=DEFAULT_PATTERNS,
-                   passes: Optional[tuple] = None) -> str:
+                   passes: Optional[tuple] = None,
+                   feedback=None, extra_key: tuple = ()) -> str:
     """The cache key: content hash over plan structure, catalog signature,
     syscat fingerprint, planning options, cost-model weights, the physical
-    pattern set, and the pass list — everything that changes what plan comes
-    out."""
+    pattern set, the pass list, the observed-selectivity feedback state,
+    and any caller-supplied ``extra_key`` (bound-store versions) —
+    everything that changes what plan comes out.  Feedback and store
+    versions make cached plans *statistics-aware*: new observations or
+    appended store contents are a provable cache miss, never a stale hit."""
     cm = cost_model.fingerprint() if cost_model is not None else "analytic"
+    fb = feedback.fingerprint() if feedback is not None else "none"
     extra = options.cache_key() + (
         "cm", cm, "patterns", _patterns_fingerprint(patterns),
-        "passes", tuple(passes or PlanPipeline.DEFAULT_PASSES))
+        "passes", tuple(passes or PlanPipeline.DEFAULT_PASSES),
+        "feedback", fb, "extra", tuple(extra_key))
     return compute_plan_id(logical, catalog, syscat, extra=extra)
 
 
@@ -354,16 +368,26 @@ def compile_staged(logical: Plan, catalog: FunctionCatalog,
                    cost_model: Optional[CostModel] = None,
                    patterns=DEFAULT_PATTERNS,
                    pipeline: Optional[PlanPipeline] = None,
-                   cache=None) -> StagedPhysicalPlan:
+                   cache=None, feedback=None,
+                   extra_key: tuple = ()) -> StagedPhysicalPlan:
     """Plan (or fetch from the plan cache) the staged physical plan.
 
     ``cache``: a PlanCache, None for the process-wide default, or False to
     force a fresh (uncached, uninserted) planning run.
+
+    ``feedback``: an optional ``SelectivityFeedback`` store.  Its state is
+    both *consumed* (the rewrite layer blends observed fractions over
+    hints/heuristics while it is active) and *identified* (its fingerprint
+    is part of the plan id, so re-planning after new observations misses
+    the cache instead of reusing a plan priced on stale estimates).
+
+    ``extra_key``: extra identity material (bound-store versions).
     """
+    from .feedback import activate_feedback
     opts = options or PlanOptions()
     pl = pipeline or PlanPipeline()
     pid = staged_plan_id(logical, catalog, syscat, opts, cost_model,
-                         patterns, pl.passes)
+                         patterns, pl.passes, feedback, extra_key)
     # the cost-model fit fingerprint doubles as the cache's calibration
     # marker: entries planned under an older fit are preferred eviction
     # victims (see PlanCache)
@@ -375,9 +399,10 @@ def compile_staged(logical: Plan, catalog: FunctionCatalog,
         hit = pc.lookup(pid)
         if hit is not None:
             return hit
-    staged = pl.run(
-        logical, catalog, syscat, options=opts, cost_model=cost_model,
-        patterns=patterns, plan_id=pid)
+    with activate_feedback(feedback):
+        staged = pl.run(
+            logical, catalog, syscat, options=opts, cost_model=cost_model,
+            patterns=patterns, plan_id=pid)
     if pc is not None:
         pc.insert(pid, staged, fingerprint=cm_fp)
     return staged

@@ -22,10 +22,11 @@ always re-validated (the paper re-checks metadata after every rewrite).
 """
 from __future__ import annotations
 
+import math
 from typing import Callable
 
-from .ir import (FunctionCatalog, Node, Plan, ValidationError, count_nodes,
-                 infer_types)
+from .ir import (CMP_SELECTIVITY as _CMP_SELECTIVITY, FunctionCatalog, Node,
+                 Plan, ValidationError, count_nodes, infer_types)
 
 # --------------------------------------------------------------------------
 # 1. function decomposition
@@ -457,16 +458,34 @@ def place_xfers_naive(plan: Plan, catalog: FunctionCatalog) -> Plan:
 # pushdown is chosen only where it is expected to win (at selectivity 1.0
 # the dense plan is kept).
 
-_CMP_SELECTIVITY = {"eq": 0.1, "ne": 0.9,
-                    "lt": 1 / 3, "le": 1 / 3, "gt": 1 / 3, "ge": 1 / 3}
+def _filter_site_of(plan: Plan, node: Node) -> tuple:
+    """The filter's feedback site key, built from its input relation's
+    type (schema + capacity: the table-identity components the run-time
+    recording side derives from the relation itself)."""
+    from .feedback import filter_site
+    t = plan.types.get(node.inputs[0]) if node.inputs else None
+    cols = t.col_names() if hasattr(t, "col_names") else ()
+    cap = getattr(t, "rows", None)
+    return filter_site(node.attrs, cols, cap)
 
 
-def _filter_selectivity(node: Node) -> float:
-    """Selected fraction of one rel_filter: the explicit ``selectivity=``
-    hint (the paper's metadata route) or a per-comparator heuristic."""
+def _filter_selectivity(node: Node, site: tuple = None) -> float:
+    """*Marginal* selected fraction of one rel_filter: observed feedback
+    (blended over the a-priori estimate) wins, then the explicit
+    ``selectivity=`` hint (the paper's metadata route), then a
+    per-comparator heuristic.
+
+    Observation-over-hint ordering is the point of the feedback loop: a
+    mis-hinted filter self-corrects once a run has been observed."""
+    from .feedback import active_feedback
     if "selectivity" in node.attrs:
-        return float(node.attrs["selectivity"])
-    return _CMP_SELECTIVITY.get(node.attrs.get("cmp"), 0.5)
+        base = float(node.attrs["selectivity"])
+    else:
+        base = _CMP_SELECTIVITY.get(node.attrs.get("cmp"), 0.5)
+    fb = active_feedback()
+    if fb is not None and site is not None:
+        return fb.blend(site, base)
+    return base
 
 
 def estimate_selectivity(plan: Plan, nid: str, catalog: FunctionCatalog,
@@ -489,16 +508,28 @@ def estimate_selectivity(plan: Plan, nid: str, catalog: FunctionCatalog,
         return estimate_selectivity(plan, node.inputs[i], catalog, memo)
 
     if node.op == "rel_filter":
-        s = up(0) * _filter_selectivity(node)
+        s = up(0) * _filter_selectivity(node, _filter_site_of(plan, node))
     elif node.op in ("rel_scan", "col_tensor", "xfer"):
         s = up(0)
     elif node.op == "rel_join":
         s = up(0)
+    elif node.op == "compact":
+        # compaction re-bases the fraction onto the narrowed capacity: the
+        # surviving rows now fill (up to) the whole smaller relation
+        t_in = plan.types.get(node.inputs[0])
+        rows = getattr(t_in, "rows", 1)
+        cap = int(node.attrs.get("capacity", rows))
+        s = min(1.0, up(0) * max(rows, 1) / max(cap, 1))
     elif node.op in ("rel_group_agg", "sel_mask"):
         t = plan.types.get(node.inputs[0])
         rows = getattr(t, "rows", 1)
         domain = int(node.attrs.get("num_groups", node.attrs.get("size", 1)))
         s = min(1.0, up(0) * max(rows, 1) / max(domain, 1))
+        if node.op == "sel_mask":
+            from .feedback import active_feedback, sel_mask_site
+            fb = active_feedback()
+            if fb is not None:
+                s = fb.blend(sel_mask_site(node.attrs), s)
     else:
         s = 1.0
     s = float(min(max(s, 0.0), 1.0))
@@ -635,11 +666,204 @@ def push_predicates(plan: Plan, catalog: FunctionCatalog) -> Plan:
 
 
 # --------------------------------------------------------------------------
+# 5b. compaction placement + cardinality annotation (bounded relations)
+# --------------------------------------------------------------------------
+#
+# Masked execution drags every relation at full capacity through every
+# downstream operator: a 1%-selective filter still probes, aggregates, and
+# exports masks over 100% of the rows.  ``choose_compaction`` inserts a
+# ``compact`` node — stable prefix compaction into a small capacity sized
+# from the expected count — below low-selectivity filters, and reroutes the
+# shape-agnostic consumers (further filters, group-by, mask export, and the
+# *probe* side of joins) onto the compacted relation.  Compaction is only
+# placed where the cardinality estimate is **trustworthy** (an explicit
+# ``selectivity=`` hint or an observed-feedback site, on an otherwise
+# unnarrowed input), because an underestimate would overflow the bound
+# and drop rows; the capacity carries 2x slack and the runtime overflow
+# flag makes any residual miss observable rather than silent.  (Dropped
+# rows contribute exactly +/-0.0 to every mask-weighted consumer, so
+# compaction is bitwise-neutral for *finite* column data; a masked NaN/inf
+# value would poison a masked-dense sum but not a compacted one.)
+#
+# The same pass annotates every join with its build/probe cardinalities
+# (``build_rows`` / ``build_expected`` / ``probe_expected``), the attrs the
+# physical layer's Pallas probe-kernel candidate is gated and priced on.
+
+COMPACT_SELECTIVITY = 0.125    # compact only below this expected fraction
+COMPACT_SLACK = 2.0            # capacity headroom over the expected count
+COMPACT_MIN_CAPACITY = 8
+
+def _round_up(n: int, mult: int = 8) -> int:
+    return ((int(n) + mult - 1) // mult) * mult
+
+
+def _confident_selectivity(plan: Plan, node: Node, catalog, memo) -> float:
+    """The filter's expected fraction, but only when the estimate is
+    trustworthy enough to size a lossy capacity bound: the site must carry
+    an explicit hint or an observed-feedback record, the filter's input
+    must be **unnarrowed** (any upstream selection — hinted or not —
+    disqualifies the site: the bound is sized from this filter's fraction
+    alone, so compounded upstream narrowing has no backing estimate here;
+    compound-confidence tracking is future work), and the site must not
+    have been *observed to overflow* a previous compaction.  Returns a
+    fraction, or -1 when not confident."""
+    from .feedback import active_feedback
+    fb = active_feedback()
+    site = _filter_site_of(plan, node)
+    if fb is not None and fb.is_overflowed(site):
+        return -1.0            # a prior bound dropped rows: back off
+    observed = fb is not None and fb.lookup(site) is not None
+    if "selectivity" not in node.attrs and not observed:
+        return -1.0
+    up = estimate_selectivity(plan, node.inputs[0], catalog, memo)
+    if up < 1.0 - 1e-9:
+        return -1.0
+    return _filter_selectivity(node, site)
+
+
+def _capacity_safe(plan: Plan, cons: dict, nid: str, memo: dict) -> bool:
+    """Whether every *transitive* consumer of ``nid`` re-bases onto a
+    fixed domain before any capacity-sensitive use.  A compacted relation
+    has a smaller capacity and prefix-reordered rows, so it may only flow
+    into consumers whose output shape/content is independent of the input
+    capacity: group-bys and mask exports (fixed domains), ``bounded_join``
+    (fixed declared capacity, duplicate/masked build rows handled), and —
+    recursively — filters, further compacts, and unique-join *probe* sides
+    whose own outputs are capacity-safe.  ``col_tensor`` (capacity-long
+    tensor out), a unique-join *build* side (padding would duplicate
+    keys), and being a plan output are all capacity-sensitive."""
+    if nid in memo:
+        return memo[nid]
+    if nid in set(plan.outputs):
+        memo[nid] = False
+        return False
+    ok = True
+    for c in cons[nid]:
+        cn = plan.nodes[c]
+        if cn.op in ("rel_group_agg", "sel_mask", "bounded_join"):
+            continue
+        if cn.op in ("rel_filter", "compact", "rel_scan") \
+                and cn.inputs[0] == nid:
+            ok = _capacity_safe(plan, cons, c, memo)
+        elif cn.op == "rel_join" and cn.inputs[0] == nid \
+                and cn.inputs[1] != nid:
+            ok = _capacity_safe(plan, cons, c, memo)
+        else:
+            ok = False
+        if not ok:
+            break
+    memo[nid] = ok
+    return ok
+
+
+def choose_compaction(plan: Plan, catalog: FunctionCatalog) -> Plan:
+    """Insert ``compact`` below confidently low-selectivity filters and
+    annotate joins with build/probe cardinalities."""
+    if _pure_xla(plan, catalog):
+        return plan
+    infer_types(plan, catalog)
+    memo: dict = {}
+    cons = plan.consumers()
+    info: list = []
+
+    safe_memo: dict = {}
+    targets: dict = {}        # filter node id -> (capacity, expected, site)
+    reroute: set = set()      # (consumer id, input position) pairs
+    for node in plan.topo():
+        if node.op != "rel_filter":
+            continue
+        t = plan.types.get(node.id)
+        rows = getattr(t, "rows", 0)
+        sel = _confident_selectivity(plan, node, catalog, memo)
+        if sel < 0.0 or sel > COMPACT_SELECTIVITY:
+            continue
+        expected = max(1, int(math.ceil(rows * sel)))
+        capacity = _round_up(max(COMPACT_MIN_CAPACITY,
+                                 int(math.ceil(expected * COMPACT_SLACK))))
+        if capacity >= rows:
+            continue          # nothing to gain
+        elig = []
+        for c in cons[node.id]:
+            cn = plan.nodes[c]
+            for pos, i in enumerate(cn.inputs):
+                if i != node.id:
+                    continue
+                if cn.op in ("rel_group_agg", "sel_mask", "bounded_join"):
+                    elig.append((c, pos))      # fixed-domain consumers
+                elif cn.op == "rel_filter" and pos == 0 \
+                        and _capacity_safe(plan, cons, c, safe_memo):
+                    elig.append((c, pos))
+                elif cn.op == "rel_join" and pos == 0 \
+                        and _capacity_safe(plan, cons, c, safe_memo):
+                    elig.append((c, pos))      # probe side, safe downstream
+        if not elig:
+            continue
+        targets[node.id] = (capacity, expected, _filter_site_of(plan, node))
+        reroute.update(elig)
+        info.append({"rule": "compact_below_filter", "filter": node.id,
+                     "capacity": capacity, "expected": expected,
+                     "rows": int(rows), "selectivity": round(sel, 4)})
+
+    out = Plan(plan.name, {}, dict(plan.inputs), plan.outputs, {}, plan._ctr)
+    remap: dict = {i: i for i in plan.inputs}
+    compact_of: dict = {}
+    for node in plan.topo():
+        ins = []
+        for pos, i in enumerate(node.inputs):
+            if (node.id, pos) in reroute and i in compact_of:
+                ins.append(compact_of[i])
+            else:
+                ins.append(remap[i])
+        attrs = dict(node.attrs)
+        if node.op == "rel_filter":
+            # stamp the feedback site computed from the *pre-compaction*
+            # view: a filter rerouted onto a compact sees a different
+            # capacity at run time, so without the stamp its observations
+            # would be recorded under a key no planning run ever looks up
+            attrs["site"] = _filter_site_of(plan, node)
+        if node.op in ("rel_join", "bounded_join"):
+            # cardinality annotation for the physical probe-kernel gate
+            bt = plan.types.get(node.inputs[1])
+            pt = plan.types.get(node.inputs[0])
+            if hasattr(bt, "expected_rows"):
+                attrs["build_rows"] = int(bt.rows)
+                attrs["build_expected"] = bt.expected_rows()
+            if hasattr(pt, "expected_rows"):
+                attrs["probe_expected"] = pt.expected_rows()
+        nid = out.add(node.op, ins, attrs, node.subplan, id=node.id)
+        remap[node.id] = nid
+        if node.id in targets:
+            cap, exp, site = targets[node.id]
+            t = plan.types.get(node.id)
+            compact_of[node.id] = out.add(
+                "compact", [nid],
+                {"capacity": cap, "expected_count": exp,
+                 # the predicate site (overflow observations feed back to
+                 # _confident_selectivity) and the column dtypes (the
+                 # Pallas one-hot candidate is float/bool-exact only)
+                 "site": site,
+                 "col_dtypes": tuple(d for _, d in t.columns)},
+                id=node.id + "_compact")
+
+    out.outputs = tuple(remap[o] for o in plan.outputs)
+    out = infer_types(out, catalog)
+    if info:
+        out.__dict__["_pass_info"] = {"compacted": info}
+    return out
+
+
+# --------------------------------------------------------------------------
 # 6. same-engine store-op fusion (the Fig. 7 larger-pattern argument, for
 #    store chains: masks never round-trip as full-width intermediates)
 # --------------------------------------------------------------------------
 
-_REL_FUSABLE = ("rel_scan", "rel_filter", "rel_join", "rel_group_agg")
+# compact and bounded_join fuse like any other rel op (their step fns are
+# in the executor's shared _REL_STEPS table), so inserting a compaction
+# below a filter does not split a scan->filter->join->group_agg chain —
+# the low-selectivity regime compaction targets is exactly where the
+# fused-superkernel win matters most
+_REL_FUSABLE = ("rel_scan", "rel_filter", "compact", "rel_join",
+                "bounded_join", "rel_group_agg")
 
 
 def fuse_store_ops(plan: Plan, catalog: FunctionCatalog) -> Plan:
@@ -729,12 +953,19 @@ def fuse_store_ops(plan: Plan, catalog: FunctionCatalog) -> Plan:
 # --------------------------------------------------------------------------
 
 DEFAULT_PIPELINE = ("decompose", "cse", "fuse_qkv", "fuse_scans", "cse",
-                    "push_predicates", "fuse_store_ops", "place_xfers")
+                    "push_predicates", "choose_compaction", "fuse_store_ops",
+                    "place_xfers")
 
 # PR 3's pipeline (planned xfer placement, no cross-engine pushdown): the
 # baseline the pushdown benchmark compares against
 UNPUSHED_PIPELINE = ("decompose", "cse", "fuse_qkv", "fuse_scans", "cse",
                      "place_xfers")
+
+# the masked-dense baseline: full pushdown but no compaction — every
+# relation stays at base capacity behind its mask (what the --bounded
+# benchmark compares compact-then-dense against)
+UNCOMPACTED_PIPELINE = tuple(p for p in DEFAULT_PIPELINE
+                             if p != "choose_compaction")
 
 _PASSES: dict = {
     "decompose": decompose,
@@ -742,6 +973,7 @@ _PASSES: dict = {
     "fuse_qkv": fuse_qkv,
     "fuse_scans": fuse_scans,
     "push_predicates": push_predicates,
+    "choose_compaction": choose_compaction,
     "fuse_store_ops": fuse_store_ops,
     "place_xfers": place_xfers,
     "place_xfers_naive": place_xfers_naive,

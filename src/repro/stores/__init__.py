@@ -7,12 +7,14 @@ or executes tri-model workloads just imports ``repro.stores``.
 """
 from .base import (GRAPH_ENGINE, REL_ENGINE, STORE_ENGINE_NAMES, TEXT_ENGINE,
                    Store, store_engines)
+from .bounded import BoundedRel, as_bounded, compact_rel
 from .column_store import ColumnStore
 from .graph_store import GraphStore
 from .text_store import TextStore
 from . import runtime as _runtime  # noqa: F401  (impl registration)
 
 __all__ = [
+    "BoundedRel", "as_bounded", "compact_rel",
     "ColumnStore", "GraphStore", "TextStore", "Store", "store_engines",
     "STORE_ENGINE_NAMES", "REL_ENGINE", "GRAPH_ENGINE", "TEXT_ENGINE",
 ]

@@ -1,0 +1,168 @@
+"""BoundedRel: the capacity-bounded relation, the tri-store's one runtime
+representation for every filtered / joined / top-k / grouped intermediate.
+
+A relation at run time is a **fixed-shape struct-of-arrays** (one
+``(capacity,)`` array per column) plus
+
+  * ``valid``    — the per-row validity vector (the selection mask),
+  * ``count``    — the traced number of valid rows (``valid.sum()``),
+  * ``overflow`` — a traced flag: somewhere upstream, true results did not
+    fit a declared capacity (a ``compact`` narrower than the survivor
+    count, a ``bounded_join`` whose match total exceeded its bound) and
+    rows were dropped.
+
+This replaces the three ad-hoc conventions that grew up around static
+shapes — ``_mask`` columns in the relational engine, ``valid=False``
+overflow slots in ``text_topk`` results, and ``(values, valid)`` pairs from
+``group_agg`` — with one abstraction every engine consumes and emits.
+Cardinality is now *first-class*: the executor can observe ``count``
+against ``capacity`` (selectivity feedback), the planner can insert
+``compact`` where the expected count is far below capacity, and
+``bounded_join`` can realize non-unique build keys behind a capacity bound
+with an honest overflow flag.
+
+``BoundedRel`` is a registered JAX pytree, so relations flow through
+``jit``/``vmap``/``pure_callback`` like any other plan value.  It is also
+dict-like (``rel["col"]``, ``rel["_mask"]``, iteration over column names
+then ``"_mask"``) so existing callers that treated tables as column dicts
+keep working unchanged.
+
+Rows at indices ``>= count`` in a *compacted* relation (and rows with
+``valid == False`` generally) carry placeholder values; every consumer must
+weight by ``valid`` — exactly the discipline the old ``_mask`` convention
+already required.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+MASK = "_mask"
+
+
+@jax.tree_util.register_pytree_node_class
+class BoundedRel:
+    """Capacity-bounded relation: struct-of-arrays + valid + count.
+
+    ``count`` is computed lazily from ``valid`` on first access (and
+    materialized on pytree flattening, so jit boundaries always carry it):
+    most intermediate relations in a plain execution never consume their
+    count, and the eager O(capacity) reduction per operator would be pure
+    overhead outside observation/compaction sites."""
+
+    __slots__ = ("cols", "valid", "_count", "overflow")
+
+    def __init__(self, cols: Dict[str, jnp.ndarray], valid,
+                 count=None, overflow=None):
+        self.cols = dict(cols)
+        self.valid = valid
+        self._count = count
+        self.overflow = (jnp.asarray(False) if overflow is None
+                         else overflow)
+
+    @property
+    def count(self):
+        if self._count is None:
+            self._count = jnp.sum(self.valid.astype(jnp.int32))
+        return self._count
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(self.cols)
+        return ((tuple(self.cols[n] for n in names), self.valid,
+                 self.count, self.overflow), names)
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        col_vals, valid, count, overflow = children
+        obj = object.__new__(cls)
+        obj.cols = dict(zip(names, col_vals))
+        obj.valid = valid
+        obj._count = count
+        obj.overflow = overflow
+        return obj
+
+    # -- dict-like surface (compat with the column-dict convention) --------
+    def __getitem__(self, name: str):
+        if name == MASK:
+            return self.valid
+        return self.cols[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name == MASK or name in self.cols
+
+    def __iter__(self):
+        yield from self.cols
+        yield MASK
+
+    def keys(self):
+        return tuple(self.cols) + (MASK,)
+
+    def items(self):
+        for k in self.cols:
+            yield k, self.cols[k]
+        yield MASK, self.valid
+
+    # -- structure ---------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[0])
+
+    def col_names(self) -> tuple:
+        return tuple(self.cols)
+
+    def with_cols(self, cols: Dict[str, jnp.ndarray]) -> "BoundedRel":
+        """Same cardinality metadata over a different column set."""
+        return BoundedRel(cols, self.valid, self.count, self.overflow)
+
+    def narrowed(self, mask) -> "BoundedRel":
+        """Conjoin a predicate mask: validity and count shrink, capacity
+        and column storage do not (the masked-execution realization)."""
+        valid = self.valid & mask
+        return BoundedRel(self.cols, valid, None,
+                          self.overflow)
+
+    def __repr__(self):
+        cols = ", ".join(self.cols)
+        return (f"BoundedRel([{cols}]; capacity={self.capacity}, "
+                f"count={self.count!r}, overflow={self.overflow!r})")
+
+
+def as_bounded(value) -> BoundedRel:
+    """Coerce a runtime table value to BoundedRel.  Accepts a BoundedRel
+    (returned as-is) or the legacy column dict with an optional ``_mask``
+    key (wrapped; missing mask means fully valid)."""
+    if isinstance(value, BoundedRel):
+        return value
+    cols = {k: v for k, v in value.items() if k != MASK}
+    if MASK in value:
+        valid = value[MASK]
+    else:
+        any_col = next(iter(cols.values()))
+        valid = jnp.ones(any_col.shape[:1], jnp.bool_)
+    return BoundedRel(cols, valid)
+
+
+def compact_rel(rel: BoundedRel, capacity: Optional[int] = None
+                ) -> BoundedRel:
+    """Stable prefix compaction: the valid rows, in their original order,
+    moved to the front of a (possibly smaller) capacity.
+
+    Static-shaped via ``jnp.nonzero(size=...)`` — the XLA realization of
+    the prefix-sum compaction (the Pallas one-hot realization lives in
+    :mod:`.masked_kernels`).  If more than ``capacity`` rows are valid the
+    excess is dropped and ``overflow`` is raised; otherwise the result is
+    value-identical to the masked relation (invalid slots replicate row 0
+    with ``valid=False``, so every mask-weighted consumer sees the same
+    contributions in the same order).
+    """
+    cap = rel.capacity if capacity is None else int(capacity)
+    cap = max(1, min(cap, rel.capacity))
+    (idx,) = jnp.nonzero(rel.valid, size=cap, fill_value=0)
+    cols = {k: v[idx] for k, v in rel.cols.items()}
+    count = jnp.minimum(rel.count, cap).astype(jnp.int32)
+    valid = jnp.arange(cap, dtype=jnp.int32) < count
+    overflow = rel.overflow | (rel.count > cap)
+    return BoundedRel(cols, valid, count, overflow)

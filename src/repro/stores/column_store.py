@@ -1,19 +1,22 @@
 """Columnar relational store: struct-of-JAX-arrays tables.
 
-A table value at run time is a dict ``{col_name: (rows,) array, ...,
-"_mask": (rows,) bool}`` — the boolean selection vector realizes filters
-without changing the physical row count, so every relational kernel below
-is static-shaped and jittable (the columnar analogue of a late-materialized
-selection vector).
+A table value at run time is a :class:`~repro.stores.bounded.BoundedRel` —
+one ``(capacity,)`` array per column plus a ``valid`` vector and a traced
+row ``count`` — so every relational kernel below is static-shaped and
+jittable (the columnar analogue of a late-materialized selection vector,
+with the cardinality carried alongside instead of hidden in a mask column).
 
 Kernels:
 
-  * :func:`filter_mask`     — predicate over one column, narrows the mask;
-  * :func:`hash_join`       — equi-join against a unique-key build side
-    (sort + binary-search probe, the static-shape realization of a hash
-    join's build/probe phases);
-  * :func:`group_agg`       — segment-reduce per group id (sum / count /
-    mean / max), mask-weighted.
+  * :func:`filter_mask`          — predicate over one column;
+  * :func:`hash_join`            — equi-join probe against a *unique-key*
+    build side (sort + binary-search, the static-shape realization of a
+    hash join's build/probe phases);
+  * :func:`hash_join_nonunique`  — equi-join against a **non-unique** build
+    side: every key match emits an output slot into a capacity-bounded,
+    validity-prefixed result (overflow flagged, never silent);
+  * :func:`group_agg`            — segment-reduce per group id (sum /
+    count / mean / max), mask-weighted.
 """
 from __future__ import annotations
 
@@ -24,8 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.ir import TableT, ValidationError
-
-MASK = "_mask"
+from .bounded import MASK, BoundedRel
 
 _CMP = {
     "eq": lambda a, b: a == b,
@@ -44,9 +46,18 @@ class ColumnStore:
     representation: JAX without x64 silently degrades 64-bit arrays, so the
     store does the narrowing *explicitly* and refuses integer columns whose
     values would wrap rather than corrupting keys silently).
+
+    ``capacity`` (>= the ingested row count) preallocates headroom for
+    :meth:`append`: appends within capacity keep the device shape — and
+    therefore every compiled plan's input signature — fixed, so incremental
+    ingest does not force recompilation for shape reasons.  Every append
+    bumps the monotonic ``version``; the planner folds bound-store versions
+    into the plan-cache key, so plans priced against stale row statistics
+    are invalidated rather than reused.
     """
 
-    def __init__(self, columns: Dict[str, np.ndarray]):
+    def __init__(self, columns: Dict[str, np.ndarray],
+                 capacity: Optional[int] = None):
         if not columns:
             raise ValidationError("ColumnStore needs >= 1 column")
         lens = {k: len(v) for k, v in columns.items()}
@@ -55,6 +66,11 @@ class ColumnStore:
         self._cols = {k: self._canon_col(k, np.asarray(v))
                       for k, v in columns.items()}
         self.rows = next(iter(lens.values()))
+        self.capacity = self.rows if capacity is None else int(capacity)
+        if self.capacity < self.rows:
+            raise ValidationError(
+                f"capacity {self.capacity} < ingested rows {self.rows}")
+        self.version = 0
 
     @staticmethod
     def _canon_col(name: str, col: np.ndarray) -> np.ndarray:
@@ -71,16 +87,47 @@ class ColumnStore:
 
     @property
     def type(self) -> TableT:
+        # expected_count is only carried when headroom exists: a full table
+        # is the fully-valid default (None), keeping base-table types stable
+        exp = None if self.rows == self.capacity else self.rows
         return TableT(tuple((k, str(v.dtype)) for k, v in self._cols.items()),
-                      self.rows)
+                      self.capacity, exp)
 
-    def payload(self) -> dict:
-        out = {k: jnp.asarray(v) for k, v in self._cols.items()}
-        out[MASK] = jnp.ones((self.rows,), jnp.bool_)
-        return out
+    def payload(self) -> BoundedRel:
+        cols = {}
+        for k, v in self._cols.items():
+            pad = self.capacity - self.rows
+            cols[k] = jnp.asarray(np.pad(v, (0, pad)) if pad else v)
+        valid = jnp.arange(self.capacity, dtype=jnp.int32) < self.rows
+        return BoundedRel(cols, valid, jnp.int32(self.rows))
 
     def column(self, name: str) -> np.ndarray:
-        return self._cols[name]
+        return self._cols[name][:self.rows]
+
+    def append(self, columns: Dict[str, np.ndarray]) -> "ColumnStore":
+        """Append rows (same schema).  Appends beyond ``capacity`` grow it
+        to the new row count (a shape — and therefore plan-type — change);
+        either way the store ``version`` bumps, invalidating cached plans
+        planned against the previous contents."""
+        if set(columns) != set(self._cols):
+            raise ValidationError(
+                f"append schema mismatch: {sorted(columns)} vs "
+                f"{sorted(self._cols)}")
+        lens = {k: len(v) for k, v in columns.items()}
+        if len(set(lens.values())) != 1:
+            raise ValidationError(f"ragged append: {lens}")
+        new = {k: self._canon_col(k, np.asarray(v))
+               for k, v in columns.items()}
+        for k, v in new.items():
+            if v.dtype != self._cols[k].dtype:
+                raise ValidationError(
+                    f"append column {k!r}: dtype {v.dtype} != "
+                    f"{self._cols[k].dtype}")
+            self._cols[k] = np.concatenate([self._cols[k], v])
+        self.rows += next(iter(lens.values()))
+        self.capacity = max(self.capacity, self.rows)
+        self.version += 1
+        return self
 
 
 # --------------------------------------------------------------------------
@@ -88,7 +135,9 @@ class ColumnStore:
 # --------------------------------------------------------------------------
 
 
-def table_mask(tbl: dict) -> jnp.ndarray:
+def table_mask(tbl) -> jnp.ndarray:
+    if isinstance(tbl, BoundedRel):
+        return tbl.valid
     if MASK in tbl:
         return tbl[MASK]
     any_col = next(v for k, v in tbl.items() if k != MASK)
@@ -104,8 +153,9 @@ def filter_mask(col: jnp.ndarray, cmp: str, value) -> jnp.ndarray:
 def hash_join(lkeys: jnp.ndarray, rkeys: jnp.ndarray):
     """Equi-join probe: for every left key, the index of the matching right
     row and a match flag.  The build side must have unique keys (the
-    dimension-table convention); duplicate build keys would make the output
-    size dynamic, which a static-shape engine cannot express.
+    dimension-table convention); for duplicate build keys use
+    :func:`hash_join_nonunique`, whose capacity-bounded output makes the
+    dynamic result size expressible on a static-shape engine.
 
     Returns ``(idx, matched)`` with ``idx.shape == lkeys.shape``.
     """
@@ -121,6 +171,70 @@ def hash_join(lkeys: jnp.ndarray, rkeys: jnp.ndarray):
     return idx, matched
 
 
+def hash_join_nonunique(lkeys, lmask, rkeys, rmask, capacity: int):
+    """Equi-join with a **non-unique build side**, capacity-bounded.
+
+    Every (valid probe row, valid build row) key match claims one output
+    slot, ordered by probe row and — within one probe row — by the build
+    side's (key-stable) sorted order.  The output is a validity *prefix*:
+    slots ``[0, count)`` hold matches, the rest are placeholders.  When the
+    true match total exceeds ``capacity`` the excess is dropped and
+    ``overflow`` is returned True — bounded, flagged, never silent.
+
+    Invalid build rows are excluded via a rank-select over the sorted
+    validity prefix sum (not a key sentinel: device keys are int32 end to
+    end, so there is no spare key space to hide a sentinel in).
+
+    Returns ``(lidx, ridx, valid, count, overflow)``, each of the first
+    three shaped ``(capacity,)``.
+    """
+    cap = int(capacity)
+    if cap >= 1 << 23:
+        raise ValidationError(
+            f"bounded_join: capacity {cap} >= 2^23 (the slot-owner search "
+            f"needs exact float32 prefix sums in the emitted region)")
+    nl, nr = int(lkeys.shape[0]), int(rkeys.shape[0])
+    j = jnp.arange(cap, dtype=jnp.int32)
+    if nl == 0 or nr == 0:
+        z = jnp.zeros((cap,), jnp.int32)
+        return (z, z, jnp.zeros((cap,), jnp.bool_), jnp.int32(0),
+                jnp.asarray(False))
+    order = jnp.argsort(rkeys, stable=True)
+    sk = rkeys[order]
+    valids = rmask[order].astype(jnp.int32)
+    cum = jnp.cumsum(valids)                    # inclusive valid-row counts
+    lo = jnp.searchsorted(sk, lkeys, side="left")
+    hi = jnp.searchsorted(sk, lkeys, side="right")
+    before = jnp.where(lo > 0, cum[jnp.maximum(lo - 1, 0)], 0)
+    upto = jnp.where(hi > 0, cum[jnp.maximum(hi - 1, 0)], 0)
+    cnt = jnp.where(lmask, upto - before, 0).astype(jnp.int32)
+    # clamp per-probe counts at cap+1 (slot ownership for every emitted
+    # slot j < cap is invariant: a row's clamped range still covers any j
+    # it truly owns, since j - start < cap + 1, and the overflow predicate
+    # total > cap is preserved), then accumulate the per-probe ends in
+    # float32: a skewed cross-join's true match total — and even the
+    # clamped nl*(cap+1) bound — can exceed 2^31 and wrap an int32 cumsum
+    # negative.  Float32 prefix sums of non-negative terms stay monotone,
+    # and every value that decides an emitted slot is <= 2*cap + 1 < 2^24,
+    # hence exact (the capacity guard above enforces this).
+    cnt = jnp.minimum(cnt, cap + 1)
+    ends = jnp.cumsum(cnt.astype(jnp.float32))  # inclusive per-probe ends
+    total = ends[-1]
+    # owner probe row of output slot j: first row whose end exceeds j
+    i = jnp.clip(jnp.searchsorted(ends, j.astype(jnp.float32),
+                                  side="right"), 0, nl - 1)
+    rank = (j - (ends[i] - cnt[i])).astype(jnp.int32)
+    # rank-th *valid* sorted build row at/after lo[i]: the first sorted
+    # position whose inclusive valid count reaches before[i] + rank + 1
+    p = jnp.searchsorted(cum, before[i] + rank + 1, side="left")
+    rpos = order[jnp.clip(p, 0, nr - 1)]
+    count = jnp.minimum(total, float(cap)).astype(jnp.int32)
+    valid = j < count
+    overflow = total > cap
+    return (i.astype(jnp.int32), rpos.astype(jnp.int32), valid, count,
+            overflow)
+
+
 def group_agg(values: Optional[jnp.ndarray], keys: jnp.ndarray,
               num_groups: int, mask: jnp.ndarray, fn: str):
     """Mask-weighted segment aggregate of ``values`` per group id.
@@ -130,6 +244,10 @@ def group_agg(values: Optional[jnp.ndarray], keys: jnp.ndarray,
     — a group whose true max *is* 0.0 stays distinguishable from an empty
     one.  The other aggregates return the value array alone (an empty
     group's sum/count of 0.0 is the correct aggregate, not a sentinel).
+    At the relation level both cases surface uniformly: ``rel_group_agg``
+    emits a BoundedRel whose row validity is exactly the occupied-group
+    mask, so "no such group" is the relation's own validity story rather
+    than a per-aggregate convention.
     """
     w = mask.astype(jnp.float32)
     if fn == "count":

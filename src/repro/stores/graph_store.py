@@ -136,20 +136,16 @@ def _spmv_blockskip(src_b, dst_b, w_b, n: int, x, active_of):
     return y
 
 
-def expand_frontier_blockskip(g: dict, frontier, hops: int = 1,
-                              block: int = 2048):
-    """Frontier expansion under a pushed selection mask: per-hop SpMV with
-    edge-block skipping.  Edges are CSR-sorted by source, so a frontier
-    whose support clusters (popular low-id hashtags, recent suffixes)
-    leaves most blocks with no active source; a prefix-sum over the
-    frontier's nonzero mask turns each block's source span into an O(1)
-    activity test."""
+def _blockskip_env(g: dict, block: int):
+    """Edge-blocked CSR view + the O(1) per-block activity test shared by
+    every block-skipping SpMV (frontier expansion, first-iteration
+    PageRank).  Returns ``(src_b, dst_b, w_b, n, active_of)`` or None for
+    an edgeless graph."""
     n = int(g["indptr"].shape[0]) - 1
     src, dst, w = g["src"], g["indices"], g["weights"]
     e = int(src.shape[0])
-    x = frontier.astype(jnp.float32)
     if e == 0:
-        return jnp.zeros((n,), jnp.float32) if hops else x
+        return None
     b = max(8, min(int(block), e))
     pad = (-e) % b
     # padded edges carry weight 0 -> contribute exactly +0.0
@@ -169,6 +165,23 @@ def expand_frontier_blockskip(g: dict, frontier, hops: int = 1,
                                   jnp.cumsum(nz)])
         return (prefix[hi + 1] - prefix[lo]) > 0
 
+    return src_b, dst_b, w_b, n, active_of
+
+
+def expand_frontier_blockskip(g: dict, frontier, hops: int = 1,
+                              block: int = 2048):
+    """Frontier expansion under a pushed selection mask: per-hop SpMV with
+    edge-block skipping.  Edges are CSR-sorted by source, so a frontier
+    whose support clusters (popular low-id hashtags, recent suffixes)
+    leaves most blocks with no active source; a prefix-sum over the
+    frontier's nonzero mask turns each block's source span into an O(1)
+    activity test."""
+    x = frontier.astype(jnp.float32)
+    env = _blockskip_env(g, block)
+    if env is None:
+        n = int(g["indptr"].shape[0]) - 1
+        return jnp.zeros((n,), jnp.float32) if hops else x
+    src_b, dst_b, w_b, n, active_of = env
     for _ in range(int(hops)):
         x = _spmv_blockskip(src_b, dst_b, w_b, n, x, active_of)
     return x
@@ -176,8 +189,17 @@ def expand_frontier_blockskip(g: dict, frontier, hops: int = 1,
 
 def pagerank(g: dict, iters: int = 10, damping: float = 0.85,
              personalization=None, use_pallas: bool = False,
-             interpret: bool = True):
-    """Damped power iteration with out-degree normalization."""
+             interpret: bool = True, skip_first: bool = False,
+             block: int = 2048):
+    """Damped power iteration with out-degree normalization.
+
+    ``skip_first=True`` is the personalization-sparsity pushdown: iteration
+    0's SpMV input is exactly the (normalized) personalization vector, so
+    when a pushed selection mask makes it sparse, the first iteration runs
+    as a block-skipping SpMV driven by its nonzero support.  Skipped edges
+    would contribute exactly ``+0.0``, so the result is bitwise identical
+    to the dense iteration; later iterations (whose rank vector is dense
+    after one propagation) stay on the dense SpMV."""
     scatter = _pallas_scatter(interpret) if use_pallas else None
     n = g["indptr"].shape[0] - 1
     if personalization is None:
@@ -185,10 +207,17 @@ def pagerank(g: dict, iters: int = 10, damping: float = 0.85,
     else:
         p = personalization.astype(jnp.float32)
         p0 = p / jnp.maximum(jnp.sum(p), 1e-30)
+    env = (_blockskip_env(g, block)
+           if skip_first and personalization is not None else None)
     r = p0
-    for _ in range(int(iters)):
-        r = (1.0 - damping) * p0 + damping * _spmv(g, r / g["out_deg"],
-                                                   scatter)
+    for it in range(int(iters)):
+        xs = r / g["out_deg"]
+        if it == 0 and env is not None:
+            src_b, dst_b, w_b, _n, active_of = env
+            y = _spmv_blockskip(src_b, dst_b, w_b, n, xs, active_of)
+        else:
+            y = _spmv(g, xs, scatter)
+        r = (1.0 - damping) * p0 + damping * y
     return r
 
 

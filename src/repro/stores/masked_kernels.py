@@ -104,6 +104,146 @@ def masked_tfidf_pallas(doc_ids, qidf_t, tf, dl_t, keep, *, n_docs: int,
 
 
 # --------------------------------------------------------------------------
+# prefix-sum compaction: valid rows scattered to their prefix positions
+# --------------------------------------------------------------------------
+
+
+def _compact_kernel(pos_ref, keep_ref, val_ref, o_ref, acc_ref, *, block_o):
+    rb = pl.program_id(1)
+
+    @pl.when(rb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    keep = keep_ref[...]                     # (1, R_blk) float32 0/1
+    out_base = pl.program_id(0) * block_o    # grid queries stay outside when
+    out_ids = jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_o), 1) + out_base
+
+    @pl.when(jnp.any(keep > 0))
+    def _compute():
+        pos = pos_ref[...]
+        # one-hot over destination slots: row i lands at its prefix-sum
+        # position; invalid rows (keep=0, pos=-1) match no slot
+        onehot = ((pos[0][:, None] == out_ids[0][None, :])
+                  .astype(jnp.float32) * keep[0][:, None])
+        acc_ref[...] += jnp.dot(val_ref[...], onehot,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(rb == pl.num_programs(1) - 1)
+    def _fin():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("out_capacity", "block_r", "block_o",
+                                    "interpret"))
+def compact_prefix_pallas(vals, pos, keep, *, out_capacity: int,
+                          block_r: int = 512, block_o: int = 256,
+                          interpret: bool = True):
+    """Prefix-sum compaction of ``C`` stacked value rows: ``out[c, j] =
+    vals[c, i]`` for the row ``i`` whose exclusive mask prefix-sum is ``j``
+    (``pos = cumsum(valid) - 1``, computed outside in XLA; the kernel owns
+    the scatter side as a destination-one-hot matmul, mirroring the other
+    kernels' split).  Row blocks whose ``keep`` weights are all zero are
+    skipped.  Values pass through one multiply by 1.0, so float columns are
+    bit-exact and integer columns are exact up to 2^24 (the planner's
+    candidate gate keeps this kernel off wider keys).
+
+    Row padding uses ``pos = -1`` (matches no slot) with ``keep = 0``;
+    positions beyond ``out_capacity`` fall outside every block's id range
+    and drop — exactly the capacity-overflow semantics of ``compact``.
+    """
+    c, r = vals.shape
+    if r == 0 or out_capacity == 0:
+        return jnp.zeros((c, out_capacity), jnp.float32)
+    br = min(block_r, max(8, r))
+    bo = min(block_o, max(128, out_capacity))
+    r_pad = (-r) % br
+    o_pad = (-out_capacity) % bo
+
+    pos_p = jnp.pad(pos.astype(jnp.int32), (0, r_pad),
+                    constant_values=-1)[None, :]
+    keep_p = jnp.pad(keep.astype(jnp.float32), (0, r_pad))[None, :]
+    val_p = jnp.pad(vals.astype(jnp.float32), ((0, 0), (0, r_pad)))
+    o_tot = out_capacity + o_pad
+
+    grid = (o_tot // bo, (r + r_pad) // br)
+    rspec = pl.BlockSpec((1, br), lambda ob, rbk: (0, rbk))
+    out = pl.pallas_call(
+        functools.partial(_compact_kernel, block_o=bo),
+        grid=grid,
+        in_specs=[rspec, rspec, pl.BlockSpec((c, br), lambda ob, rbk: (0, rbk))],
+        out_specs=pl.BlockSpec((c, bo), lambda ob, rbk: (0, ob)),
+        out_shape=jax.ShapeDtypeStruct((c, o_tot), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((c, bo), jnp.float32)],
+        interpret=interpret,
+    )(pos_p, keep_p, val_p)
+    return out[:, :out_capacity]
+
+
+# --------------------------------------------------------------------------
+# hash-join probe: unique-key build side compared on the MXU
+# --------------------------------------------------------------------------
+
+
+def _join_probe_kernel(lk_ref, rk_ref, rkeep_ref, o_ref):
+    # (P_blk, N_build) key-equality one-hot, masked build rows excluded
+    eq = ((lk_ref[...][0][:, None] == rk_ref[...][0][None, :])
+          .astype(jnp.float32) * rkeep_ref[...][0][None, :])
+    nb = rk_ref.shape[1]
+    jvec = jax.lax.broadcasted_iota(jnp.int32, (nb, 1), 0).astype(jnp.float32)
+    m = jnp.concatenate([jvec, jnp.ones((nb, 1), jnp.float32)], axis=1)
+    # one matmul: col 0 = matched build index, col 1 = match count (0/1)
+    acc = jnp.dot(eq, m, preferred_element_type=jnp.float32)
+    o_ref[...] = acc.T
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_p", "interpret"))
+def join_probe_pallas(lkeys, rkeys, rvalid, *, block_p: int = 512,
+                      interpret: bool = True):
+    """Hash-join probe against a **unique-key** build side, realized as an
+    MXU key-equality contraction: for each probe key, the matching build
+    row index and a match flag.  Masked (invalid) build rows never match.
+
+    The whole build side rides in one VMEM block, which is exactly why the
+    planner gates this candidate on the build side's *expected count*: a
+    capacity-bounded build (a compacted filter result, a top-k relation)
+    fits; a full fact table does not.
+
+    Returns ``(idx, matched)`` with ``idx.shape == lkeys.shape`` — bitwise
+    the indices :func:`~repro.stores.column_store.hash_join` produces for
+    matched rows (unmatched rows report index 0).
+    """
+    p = int(lkeys.shape[0])
+    nr = int(rkeys.shape[0])
+    if p == 0 or nr == 0:
+        return (jnp.zeros((p,), jnp.int32), jnp.zeros((p,), jnp.bool_))
+    bp = min(block_p, max(8, p))
+    p_pad = (-p) % bp
+    nr_pad = (-nr) % 128
+
+    lk_p = jnp.pad(lkeys.astype(jnp.int32), (0, p_pad))[None, :]
+    rk_p = jnp.pad(rkeys.astype(jnp.int32), (0, nr_pad))[None, :]
+    rkeep = jnp.pad(rvalid.astype(jnp.float32), (0, nr_pad))[None, :]
+
+    grid = ((p + p_pad) // bp,)
+    bspec = pl.BlockSpec((1, nr + nr_pad), lambda pb: (0, 0))
+    out = pl.pallas_call(
+        _join_probe_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bp), lambda pb: (0, pb)), bspec, bspec],
+        out_specs=pl.BlockSpec((2, bp), lambda pb: (0, pb)),
+        out_shape=jax.ShapeDtypeStruct((2, p + p_pad), jnp.float32),
+        interpret=interpret,
+    )(lk_p, rk_p, rkeep)
+    idx = out[0, :p].astype(jnp.int32)
+    matched = out[1, :p] > 0
+    return jnp.where(matched, idx, 0), matched
+
+
+# --------------------------------------------------------------------------
 # masked segment aggregate: group-by sum + count in one pass
 # --------------------------------------------------------------------------
 

@@ -23,6 +23,70 @@ def hash_join_ref(lkeys, rkeys):
     return idx, matched
 
 
+def join_probe_ref(lkeys, rkeys, rvalid):
+    """Reference unique-build probe that excludes invalid build rows:
+    matches :func:`repro.stores.masked_kernels.join_probe_pallas`
+    (unmatched probe rows report index 0)."""
+    lkeys = np.asarray(lkeys)
+    lut = {int(k): i for i, k in enumerate(np.asarray(rkeys))
+           if bool(np.asarray(rvalid)[i])}
+    idx = np.zeros(lkeys.shape, np.int64)
+    matched = np.zeros(lkeys.shape, bool)
+    for i, k in enumerate(lkeys):
+        j = lut.get(int(k))
+        if j is not None:
+            idx[i] = j
+            matched[i] = True
+    return idx, matched
+
+
+def bounded_join_ref(lkeys, lmask, rkeys, rmask, capacity):
+    """Reference non-unique-build equi-join into a capacity-bounded,
+    validity-prefixed output.
+
+    Output slots enumerate matches by probe row and, within one probe row,
+    by the build side's stable (key, original index) order — exactly the
+    order :func:`repro.stores.column_store.hash_join_nonunique` produces.
+    Returns ``(lidx, ridx, valid, count, overflow)``.
+    """
+    lkeys = np.asarray(lkeys)
+    rkeys = np.asarray(rkeys)
+    lmask = np.asarray(lmask, bool)
+    rmask = np.asarray(rmask, bool)
+    order = np.argsort(rkeys, kind="stable")
+    pairs = []
+    for i in range(lkeys.shape[0]):
+        if not lmask[i]:
+            continue
+        for r in order:
+            if rmask[r] and int(rkeys[r]) == int(lkeys[i]):
+                pairs.append((i, int(r)))
+    total = len(pairs)
+    count = min(total, capacity)
+    lidx = np.zeros(capacity, np.int64)
+    ridx = np.zeros(capacity, np.int64)
+    valid = np.zeros(capacity, bool)
+    for j, (i, r) in enumerate(pairs[:capacity]):
+        lidx[j], ridx[j], valid[j] = i, r, True
+    return lidx, ridx, valid, count, total > capacity
+
+
+def compact_ref(cols, valid, capacity):
+    """Reference stable prefix compaction of a column dict: valid rows in
+    original order, truncated to ``capacity`` (overflow flagged).  Invalid
+    output slots replicate row 0, mirroring the gather realization."""
+    valid = np.asarray(valid, bool)
+    idx = np.flatnonzero(valid)
+    overflow = idx.shape[0] > capacity
+    idx = idx[:capacity]
+    count = idx.shape[0]
+    pad = np.zeros(capacity - count, np.int64)
+    take = np.concatenate([idx, pad]).astype(np.int64)
+    out = {k: np.asarray(v)[take] for k, v in cols.items()}
+    out_valid = np.arange(capacity) < count
+    return out, out_valid, count, overflow
+
+
 def group_agg_ref(values, keys, num_groups, mask, fn):
     """Reference mask-respecting groupby aggregate.
 

@@ -2,10 +2,14 @@
 
 Each store engine owns its impl table (``engines.py``); importing this
 module registers the relational / graph / text implementations plus the two
-cross-engine transfer realizations.  Store values travel through the plan
-as pytrees of JAX arrays (tables as column dicts with a ``_mask`` selection
-vector, graphs/corpora as their CSR/COO payload dicts), so a whole
-tri-model plan stays jittable end to end.
+cross-engine transfer realizations.  Every relational value — plan input,
+intermediate, or output — is a :class:`~repro.stores.bounded.BoundedRel`
+(a registered pytree: struct-of-arrays columns + validity + traced row
+count), so a whole tri-model plan stays jittable end to end and the
+*cardinality* of every intermediate is a first-class runtime value: masks
+are no longer rel-engine-private, and the executor can observe
+``count/capacity`` per site for selectivity feedback
+(``ExecContext.aux["count_sink"]``, see ``PlannedFunction.observe``).
 
 The relational ops are factored as pure *step functions* shared by the
 per-op impls and the fused-chain impls (``rel_fused_*``): a fused chain
@@ -19,11 +23,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.engines import get_engine
+from ..core.feedback import filter_site, sel_mask_site
 from .base import GRAPH_ENGINE, REL_ENGINE, TEXT_ENGINE
-from .column_store import MASK, filter_mask, group_agg, hash_join, table_mask
+from .bounded import BoundedRel, as_bounded, compact_rel
+from .column_store import (filter_mask, group_agg, hash_join,
+                           hash_join_nonunique)
 from .graph_store import (expand_frontier, expand_frontier_blockskip,
                           pagerank, triangle_count)
-from .masked_kernels import masked_segment_agg_pallas, masked_tfidf_pallas
+from .masked_kernels import (compact_prefix_pallas, join_probe_pallas,
+                             masked_segment_agg_pallas, masked_tfidf_pallas)
 from .text_store import (masked_topk, tfidf_scores, tfidf_topk,
                          tfidf_topk_blockskip, tfidf_topk_masked)
 
@@ -31,101 +39,230 @@ _XLA = get_engine("xla")
 _PALLAS = get_engine("pallas")
 
 
+def _record_count(ctx, site, count, capacity):
+    """Cardinality observation hook: when the caller planted a
+    ``count_sink`` (PlannedFunction.observe runs plans eagerly with one),
+    append this site's observed (count, capacity)."""
+    sink = None if ctx is None else ctx.aux.get("count_sink")
+    if sink is not None:
+        sink.append((site, count, capacity))
+
+
 # --------------------------------------------------------------------------
 # relational engine: step functions + per-op impls
 # --------------------------------------------------------------------------
 
 
-def _step_rel_scan(tbl, attrs):
-    tbl = dict(tbl)
-    mask = table_mask(tbl)
+def _step_rel_scan(tbl, attrs, ctx=None):
+    rel = as_bounded(tbl)
     cols = attrs.get("cols")
     if cols:
-        tbl = {c: tbl[c] for c in cols}
-    tbl.pop(MASK, None)
-    tbl[MASK] = mask
-    return tbl
+        return rel.with_cols({c: rel.cols[c] for c in cols})
+    return rel
 
 
-def _step_rel_filter(tbl, attrs):
-    tbl = dict(tbl)
-    m = filter_mask(tbl[attrs["col"]], attrs["cmp"], attrs["value"])
-    tbl[MASK] = table_mask(tbl) & m
-    return tbl
-
-
-def _step_rel_join(left, right, attrs):
-    left, right = dict(left), dict(right)
-    lo, ro = attrs["left_on"], attrs["right_on"]
-    idx, matched = hash_join(left[lo], right[ro])
-    lmask = table_mask(left)
-    rmask = table_mask(right)[idx]
-    out = {k: v for k, v in left.items() if k != MASK}
-    for k, v in right.items():
-        if k in (ro, MASK) or k in out:
-            continue
-        out[k] = v[idx]
-    out[MASK] = lmask & matched & rmask
+def _step_rel_filter(tbl, attrs, ctx=None):
+    rel = as_bounded(tbl)
+    m = filter_mask(rel.cols[attrs["col"]], attrs["cmp"], attrs["value"])
+    out = rel.narrowed(m)
+    if ctx is not None and ctx.aux.get("count_sink") is not None:
+        # record the *marginal* selectivity (survivors over the rows this
+        # filter actually saw), not the cumulative count/capacity fraction
+        # — estimate_selectivity multiplies marginals along the lineage,
+        # so a cumulative observation would double-discount upstream
+        # narrowing.  The planner-stamped site (stable across compaction
+        # rerouting) wins over the self-derived one.
+        site = attrs.get("site")
+        if site is None:
+            site = filter_site(attrs, rel.col_names(), rel.capacity)
+        _record_count(ctx, tuple(site), out.count,
+                      jnp.maximum(rel.count, 1))
     return out
 
 
-def _step_rel_group_agg(tbl, attrs):
-    key = tbl[attrs["key"]]
+def _merge_join_cols(left, right, ro, idx):
+    """Joined column set: every left column plus the right side's
+    non-key, non-colliding columns gathered at ``idx``."""
+    cols = dict(left.cols)
+    for k, v in right.cols.items():
+        if k == ro or k in cols:
+            continue
+        cols[k] = v[idx]
+    return cols
+
+
+def _step_rel_join(left, right, attrs, ctx=None):
+    left, right = as_bounded(left), as_bounded(right)
+    lo, ro = attrs["left_on"], attrs["right_on"]
+    idx, matched = hash_join(left.cols[lo], right.cols[ro])
+    rmask = right.valid[idx]
+    cols = _merge_join_cols(left, right, ro, idx)
+    valid = left.valid & matched & rmask
+    return BoundedRel(cols, valid, None, left.overflow | right.overflow)
+
+
+def _step_rel_join_probe(left, right, attrs, ctx=None, interpret=True):
+    """The Pallas probe realization of ``rel_join``: key equality on the
+    MXU against the (expected-count-bounded) build side.  Invalid build
+    rows never match, so validity needs no second gather; gathered values
+    at unmatched rows differ from the sort-probe path only under
+    ``valid=False``, which every consumer weights away."""
+    left, right = as_bounded(left), as_bounded(right)
+    lo, ro = attrs["left_on"], attrs["right_on"]
+    idx, matched = join_probe_pallas(left.cols[lo], right.cols[ro],
+                                     right.valid, interpret=interpret)
+    cols = _merge_join_cols(left, right, ro, idx)
+    valid = left.valid & matched
+    return BoundedRel(cols, valid, None, left.overflow | right.overflow)
+
+
+def _step_bounded_join(left, right, attrs, ctx=None):
+    left, right = as_bounded(left), as_bounded(right)
+    lo, ro = attrs["left_on"], attrs["right_on"]
+    lidx, ridx, valid, count, ovf = hash_join_nonunique(
+        left.cols[lo], left.valid, right.cols[ro], right.valid,
+        int(attrs["capacity"]))
+    gathered = left.with_cols({k: v[lidx] for k, v in left.cols.items()})
+    cols = _merge_join_cols(gathered, right, ro, ridx)
+    return BoundedRel(cols, valid, count,
+                      ovf | left.overflow | right.overflow)
+
+
+def _step_rel_group_agg(tbl, attrs, ctx=None):
+    rel = as_bounded(tbl)
+    key = rel.cols[attrs["key"]]
     g = int(attrs["num_groups"])
-    mask = table_mask(tbl)
-    out = {attrs["key"]: jnp.arange(g, dtype=jnp.int32)}
+    mask = rel.valid
+    cols = {attrs["key"]: jnp.arange(g, dtype=jnp.int32)}
     for out_name, fn, col in attrs["aggs"]:
-        vals = None if fn == "count" else tbl[col]
+        vals = None if fn == "count" else rel.cols[col]
         r = group_agg(vals, key, g, mask, fn)
         if fn == "max":
-            r, _valid = r      # empty groups already drop via the count mask
-        out[out_name] = r
+            # the pair convention collapses into row validity: an
+            # all-masked group is an *invalid row* of the output relation
+            r, _valid = r
+        cols[out_name] = r
     count = group_agg(None, key, g, mask, "count")
-    out[MASK] = count > 0
+    return BoundedRel(cols, count > 0, None, rel.overflow)
+
+
+def _step_compact(tbl, attrs, ctx=None):
+    rel = as_bounded(tbl)
+    out = compact_rel(rel, attrs.get("capacity"))
+    _record_overflow(ctx, attrs, out)
+    return out
+
+
+def _record_overflow(ctx, attrs, out):
+    """Report a compaction site's overflow flag to the observation sink:
+    an overflowed bound dropped rows, and the feedback store's
+    ``note_overflow`` makes ``choose_compaction`` back off from the site
+    on re-plan instead of staying silently lossy."""
+    site = attrs.get("site")
+    if site is not None:
+        _record_count(ctx, ("compact_overflow", tuple(site)),
+                      out.overflow, 1)
+
+
+def _step_compact_pallas(tbl, attrs, ctx=None, interpret=True):
+    """Pallas realization of ``compact``: destination positions from an
+    XLA prefix sum, the scatter as the one-hot-matmul compaction kernel.
+    Bit-exact for float columns; integer columns round-trip through
+    float32 (exact below 2^24, which the candidate gate enforces)."""
+    rel = as_bounded(tbl)
+    cap = int(attrs.get("capacity", rel.capacity))
+    cap = max(1, min(cap, rel.capacity))
+    keep = rel.valid.astype(jnp.float32)
+    pos = jnp.where(rel.valid, jnp.cumsum(rel.valid.astype(jnp.int32)) - 1,
+                    -1)
+    names = tuple(rel.cols)
+    stacked = jnp.stack([rel.cols[n].astype(jnp.float32) for n in names])
+    out = compact_prefix_pallas(stacked, pos, keep, out_capacity=cap,
+                                interpret=interpret)
+    count = jnp.minimum(rel.count, cap).astype(jnp.int32)
+    valid = jnp.arange(cap, dtype=jnp.int32) < count
+    cols = {}
+    for i, n in enumerate(names):
+        dt = rel.cols[n].dtype
+        v = out[i]
+        if jnp.issubdtype(dt, jnp.integer) or dt == jnp.bool_:
+            v = jnp.round(v)
+        cols[n] = v.astype(dt)
+    overflow = rel.overflow | (rel.count > cap)
+    out = BoundedRel(cols, valid, count, overflow)
+    _record_overflow(ctx, attrs, out)
     return out
 
 
 _REL_STEPS = {
-    "rel_scan": lambda ins, attrs: _step_rel_scan(ins[0], attrs),
-    "rel_filter": lambda ins, attrs: _step_rel_filter(ins[0], attrs),
-    "rel_join": lambda ins, attrs: _step_rel_join(ins[0], ins[1], attrs),
-    "rel_group_agg": lambda ins, attrs: _step_rel_group_agg(ins[0], attrs),
+    "rel_scan": lambda ins, attrs, ctx=None: _step_rel_scan(ins[0], attrs, ctx),
+    "rel_filter": lambda ins, attrs, ctx=None: _step_rel_filter(ins[0], attrs,
+                                                                ctx),
+    "rel_join": lambda ins, attrs, ctx=None: _step_rel_join(ins[0], ins[1],
+                                                            attrs, ctx),
+    "bounded_join": lambda ins, attrs, ctx=None: _step_bounded_join(
+        ins[0], ins[1], attrs, ctx),
+    "rel_group_agg": lambda ins, attrs, ctx=None: _step_rel_group_agg(
+        ins[0], attrs, ctx),
+    "compact": lambda ins, attrs, ctx=None: _step_compact(ins[0], attrs, ctx),
 }
 
 
-def _run_chain(args, chain, *, stop_before_last=False):
+def _run_chain(args, chain, ctx=None, *, stop_before_last=False):
     """Execute a ``rel_fused`` step chain over the node's bound inputs."""
     steps = chain[:-1] if stop_before_last else chain
     prev = None
     for op, attrs, srcs, _out_t in steps:
         ins = [prev if s == "prev" else args[int(s)] for s in srcs]
-        prev = _REL_STEPS[op](ins, attrs)
+        prev = _REL_STEPS[op](ins, attrs, ctx)
     return prev
 
 
 @REL_ENGINE.impl("rel_scan_col")
 def _i_rel_scan(ctx, args, node):
-    return _step_rel_scan(args[0], node.attrs)
+    return _step_rel_scan(args[0], node.attrs, ctx)
 
 
 @REL_ENGINE.impl("rel_filter_col")
 def _i_rel_filter(ctx, args, node):
-    return _step_rel_filter(args[0], node.attrs)
+    return _step_rel_filter(args[0], node.attrs, ctx)
 
 
 @REL_ENGINE.impl("rel_hash_join")
 def _i_rel_join(ctx, args, node):
-    return _step_rel_join(args[0], args[1], node.attrs)
+    return _step_rel_join(args[0], args[1], node.attrs, ctx)
+
+
+@_PALLAS.impl("rel_join_probe_pallas")
+def _i_rel_join_probe(ctx, args, node):
+    return _step_rel_join_probe(args[0], args[1], node.attrs, ctx,
+                                interpret=ctx.interpret)
+
+
+@REL_ENGINE.impl("bounded_join_col")
+def _i_bounded_join(ctx, args, node):
+    return _step_bounded_join(args[0], args[1], node.attrs, ctx)
 
 
 @REL_ENGINE.impl("rel_group_agg_col")
 def _i_rel_group(ctx, args, node):
-    return _step_rel_group_agg(args[0], node.attrs)
+    return _step_rel_group_agg(args[0], node.attrs, ctx)
+
+
+@REL_ENGINE.impl("compact_prefix_col")
+def _i_compact(ctx, args, node):
+    return _step_compact(args[0], node.attrs, ctx)
+
+
+@_PALLAS.impl("compact_prefix_pallas")
+def _i_compact_pallas(ctx, args, node):
+    return _step_compact_pallas(args[0], node.attrs, ctx,
+                                interpret=ctx.interpret)
 
 
 @REL_ENGINE.impl("rel_fused_col")
 def _i_rel_fused(ctx, args, node):
-    return _run_chain(args, node.attrs["chain"])
+    return _run_chain(args, node.attrs["chain"], ctx)
 
 
 @_PALLAS.impl("rel_fused_agg_pallas")
@@ -133,46 +270,49 @@ def _i_rel_fused_agg(ctx, args, node):
     """Fused chain whose terminal group-by runs the masked segment-
     aggregate Pallas kernel (sum/count/mean; gated by the pattern set)."""
     chain = node.attrs["chain"]
-    tbl = _run_chain(args, chain, stop_before_last=True)
+    rel = as_bounded(_run_chain(args, chain, ctx, stop_before_last=True))
     attrs = chain[-1][1]
-    key = tbl[attrs["key"]]
+    key = rel.cols[attrs["key"]]
     g = int(attrs["num_groups"])
-    mw = table_mask(tbl).astype(jnp.float32)
-    out = {attrs["key"]: jnp.arange(g, dtype=jnp.int32)}
+    mw = rel.valid.astype(jnp.float32)
+    cols = {attrs["key"]: jnp.arange(g, dtype=jnp.int32)}
     count = None
     for out_name, fn, col in attrs["aggs"]:
-        vals = mw if fn == "count" else tbl[col]
+        vals = mw if fn == "count" else rel.cols[col]
         s, c = masked_segment_agg_pallas(vals, key, mw, num_groups=g,
                                          interpret=ctx.interpret)
         count = c
-        out[out_name] = (c if fn == "count"
-                         else s if fn == "sum"
-                         else s / jnp.maximum(c, 1.0))
+        cols[out_name] = (c if fn == "count"
+                          else s if fn == "sum"
+                          else s / jnp.maximum(c, 1.0))
     if count is None:
         count, _ = masked_segment_agg_pallas(mw, key, mw, num_groups=g,
                                              interpret=ctx.interpret)
-    out[MASK] = count > 0
-    return out
+    return BoundedRel(cols, count > 0, None, rel.overflow)
 
 
 @REL_ENGINE.impl("col_tensor_rel")
 def _i_col_tensor(ctx, args, node):
-    tbl = args[0]
-    v = tbl[node.attrs["col"]].astype(node.attrs.get("dtype", "float32"))
-    return jnp.where(table_mask(tbl), v, jnp.zeros_like(v))
+    rel = as_bounded(args[0])
+    v = rel.cols[node.attrs["col"]].astype(node.attrs.get("dtype", "float32"))
+    return jnp.where(rel.valid, v, jnp.zeros_like(v))
 
 
 @REL_ENGINE.impl("sel_mask_rel")
 def _i_sel_mask(ctx, args, node):
-    """Selection-mask export: scatter the relation's mask over an entity
-    domain (``mask[v] = any selected row with col == v``) — the boolean
-    predicate pushdown hands across the engine boundary."""
-    tbl = args[0]
-    col = tbl[node.attrs["col"]]
+    """Selection-mask export: scatter the relation's validity over an
+    entity domain (``mask[v] = any selected row with col == v``) — the
+    boolean predicate pushdown hands across the engine boundary."""
+    rel = as_bounded(args[0])
+    col = rel.cols[node.attrs["col"]]
     size = int(node.attrs["size"])
-    m = table_mask(tbl) & (col >= 0) & (col < size)
+    m = rel.valid & (col >= 0) & (col < size)
     idx = jnp.clip(col, 0, size - 1)
-    return jnp.zeros((size,), jnp.bool_).at[idx].max(m)
+    out = jnp.zeros((size,), jnp.bool_).at[idx].max(m)
+    if ctx.aux.get("count_sink") is not None:
+        _record_count(ctx, sel_mask_site(node.attrs),
+                      jnp.sum(out.astype(jnp.int32)), size)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -206,6 +346,16 @@ def _i_pagerank_csr(ctx, args, node):
                     personalization=args[1] if len(args) > 1 else None)
 
 
+@GRAPH_ENGINE.impl("graph_pagerank_skip")
+def _i_pagerank_skip(ctx, args, node):
+    """Personalization-sparsity pushdown: iteration 0's SpMV block-skips on
+    the pushed mask's support; bitwise-identical to the dense iteration."""
+    return pagerank(args[0], iters=int(node.attrs.get("iters", 10)),
+                    damping=float(node.attrs.get("damping", 0.85)),
+                    personalization=args[1] if len(args) > 1 else None,
+                    skip_first=True)
+
+
 @_PALLAS.impl("graph_pagerank_pallas")
 def _i_pagerank_pallas(ctx, args, node):
     return pagerank(args[0], iters=int(node.attrs.get("iters", 10)),
@@ -224,8 +374,11 @@ def _i_tricount(ctx, args, node):
 # --------------------------------------------------------------------------
 
 
-def _topk_table(ids, scores, valid):
-    return {"doc": ids, "score": scores, MASK: valid}
+def _topk_rel(ids, scores, valid):
+    """Top-k results are a BoundedRel by construction: the valid slots form
+    a prefix, so the traced count is the true result size (what the old
+    ``valid=False`` overflow-slot convention encoded implicitly)."""
+    return BoundedRel({"doc": ids, "score": scores}, valid)
 
 
 @TEXT_ENGINE.impl("text_topk_inv")
@@ -235,14 +388,14 @@ def _i_text_topk(ctx, args, node):
         # pushed candidate-doc mask, dense realization: score the whole
         # corpus, then mask + top-k (the bitwise reference the skipping
         # candidates must reproduce)
-        return _topk_table(*tfidf_topk_masked(args[0], args[1], args[2], k))
-    return _topk_table(*tfidf_topk(args[0], args[1], k))
+        return _topk_rel(*tfidf_topk_masked(args[0], args[1], args[2], k))
+    return _topk_rel(*tfidf_topk(args[0], args[1], k))
 
 
 @TEXT_ENGINE.impl("text_topk_skip_inv")
 def _i_text_topk_skip(ctx, args, node):
-    return _topk_table(*tfidf_topk_blockskip(args[0], args[1], args[2],
-                                             int(node.attrs["k"])))
+    return _topk_rel(*tfidf_topk_blockskip(args[0], args[1], args[2],
+                                           int(node.attrs["k"])))
 
 
 @_PALLAS.impl("text_topk_masked_pallas")
@@ -256,7 +409,7 @@ def _i_text_topk_pallas(ctx, args, node):
         doc_ids, w[corpus["term_ids"]], corpus["tf"],
         corpus["doc_len"][doc_ids], doc_mask[doc_ids],
         n_docs=int(corpus["doc_len"].shape[0]), interpret=ctx.interpret)
-    return _topk_table(*masked_topk(scores, doc_mask, int(node.attrs["k"])))
+    return _topk_rel(*masked_topk(scores, doc_mask, int(node.attrs["k"])))
 
 
 @TEXT_ENGINE.impl("text_scores_inv")
@@ -266,8 +419,8 @@ def _i_text_scores(ctx, args, node):
 
 @_XLA.impl("masked_topk_xla")
 def _i_masked_topk(ctx, args, node):
-    return _topk_table(*masked_topk(args[0], args[1],
-                                    int(node.attrs["k"])))
+    return _topk_rel(*masked_topk(args[0], args[1],
+                                  int(node.attrs["k"])))
 
 
 # --------------------------------------------------------------------------
@@ -292,7 +445,8 @@ def _i_xfer_spill(ctx, args, node):
     # per-op materialization: the value round-trips device -> host -> device
     # (what a naive federated mediator does between every engine call).
     # pure_callback keeps this expressible under jit while still forcing
-    # the host copy at every execution.
+    # the host copy at every execution.  BoundedRel is a registered pytree,
+    # so relations spill column-wise like any other plan value.
     x = args[0]
     shapes = jax.tree.map(
         lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)), x)

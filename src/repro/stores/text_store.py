@@ -34,30 +34,65 @@ class TextStore:
         self.vocab = int(vocab)
         self.n_docs = int(self.doc_len.shape[0])
         self.n_postings = int(self.doc_ids.shape[0])
+        # document frequency per term — kept so incremental appends can
+        # *reindex* (recompute the idf table) without replaying the corpus
+        self._df = (np.bincount(self.term_ids, minlength=self.vocab)
+                    .astype(np.int64) if self.n_postings
+                    else np.zeros(self.vocab, np.int64))
+        self.version = 0
 
-    @classmethod
-    def from_docs(cls, docs: Sequence[Iterable[int]], vocab: int
-                  ) -> "TextStore":
-        """``docs``: one iterable of term ids per document."""
+    @staticmethod
+    def _index_docs(docs, vocab: int, first_doc: int):
         doc_ids, term_ids, tfs = [], [], []
         doc_len = np.zeros(len(docs), np.float32)
         df = np.zeros(vocab, np.int64)
         for d, terms in enumerate(docs):
             terms = np.asarray(list(terms), np.int64)
             if terms.size and (terms.min() < 0 or terms.max() >= vocab):
-                raise ValidationError(f"doc {d}: term id out of range")
+                raise ValidationError(
+                    f"doc {first_doc + d}: term id out of range")
             doc_len[d] = max(terms.size, 1)
             uniq, counts = np.unique(terms, return_counts=True)
-            doc_ids.append(np.full(uniq.shape, d, np.int64))
+            doc_ids.append(np.full(uniq.shape, first_doc + d, np.int64))
             term_ids.append(uniq)
             tfs.append(counts)
             df[uniq] += 1
-        doc_ids = np.concatenate(doc_ids) if doc_ids else np.zeros(0, np.int64)
-        term_ids = (np.concatenate(term_ids) if term_ids
-                    else np.zeros(0, np.int64))
-        tfs = np.concatenate(tfs) if tfs else np.zeros(0, np.int64)
-        idf = np.log((1.0 + len(docs)) / (1.0 + df)) + 1.0   # smoothed idf
-        return cls(doc_ids, term_ids, tfs, doc_len, idf, vocab)
+        cat = (lambda xs: np.concatenate(xs) if xs else np.zeros(0, np.int64))
+        return cat(doc_ids), cat(term_ids), cat(tfs), doc_len, df
+
+    @staticmethod
+    def _idf(n_docs: int, df: np.ndarray) -> np.ndarray:
+        return (np.log((1.0 + n_docs) / (1.0 + df)) + 1.0)  # smoothed idf
+
+    @classmethod
+    def from_docs(cls, docs: Sequence[Iterable[int]], vocab: int
+                  ) -> "TextStore":
+        """``docs``: one iterable of term ids per document."""
+        doc_ids, term_ids, tfs, doc_len, df = cls._index_docs(docs, vocab, 0)
+        return cls(doc_ids, term_ids, tfs, doc_len, cls._idf(len(docs), df),
+                   vocab)
+
+    def append(self, docs: Sequence[Iterable[int]]) -> "TextStore":
+        """Append documents and reindex: postings extend (doc ids continue
+        from ``n_docs``), document frequencies accumulate, and the idf
+        table is recomputed over the grown corpus — identical to a fresh
+        ``from_docs`` over the concatenated document list.  Bumps the
+        monotonic ``version`` so cached plans priced against the old corpus
+        statistics invalidate."""
+        d_ids, t_ids, tfs, d_len, df = self._index_docs(
+            docs, self.vocab, self.n_docs)
+        self.doc_ids = np.concatenate([self.doc_ids,
+                                       d_ids.astype(np.int32)])
+        self.term_ids = np.concatenate([self.term_ids,
+                                        t_ids.astype(np.int32)])
+        self.tf = np.concatenate([self.tf, tfs.astype(np.float32)])
+        self.doc_len = np.concatenate([self.doc_len, d_len])
+        self._df += df
+        self.n_docs += len(docs)
+        self.n_postings = int(self.doc_ids.shape[0])
+        self.idf = self._idf(self.n_docs, self._df).astype(np.float32)
+        self.version += 1
+        return self
 
     @property
     def type(self) -> CorpusT:

@@ -13,7 +13,9 @@ from hypothesis import given, settings, strategies as st
 
 from repro.stores import GraphStore, TextStore
 from repro.stores import ref as R
-from repro.stores.column_store import group_agg, hash_join
+from repro.stores.bounded import BoundedRel, compact_rel
+from repro.stores.column_store import (group_agg, hash_join,
+                                       hash_join_nonunique)
 from repro.stores.graph_kernels import scatter_add_pallas
 from repro.stores.graph_store import pagerank
 from repro.stores.text_store import tfidf_scores
@@ -66,6 +68,69 @@ def test_group_agg_agrees_with_reference(case):
         (got, gvalid), (want, wvalid) = got, want
         np.testing.assert_array_equal(np.asarray(gvalid), wvalid)
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+@st.composite
+def bounded_join_case(draw):
+    nl = draw(st.integers(1, 60))
+    nr = draw(st.integers(1, 40))
+    universe = draw(st.integers(1, 20))        # small domain -> duplicates
+    capacity = draw(st.integers(1, 120))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.RandomState(seed)
+    return (rng.randint(0, universe, nl).astype(np.int32),
+            rng.rand(nl) > 0.3,
+            rng.randint(0, universe, nr).astype(np.int32),
+            rng.rand(nr) > 0.3,
+            capacity)
+
+
+@given(bounded_join_case())
+@settings(**SETTINGS)
+def test_bounded_join_agrees_with_reference(case):
+    """Non-unique-build join: every capacity (undersized included) must
+    reproduce the reference's slot assignment, count, and overflow flag."""
+    lk, lm, rk, rm, cap = case
+    gl, gr, gv, gc, go = [np.asarray(x) for x in hash_join_nonunique(
+        jnp.asarray(lk), jnp.asarray(lm), jnp.asarray(rk), jnp.asarray(rm),
+        cap)]
+    wl, wr, wv, wc, wo = R.bounded_join_ref(lk, lm, rk, rm, cap)
+    np.testing.assert_array_equal(gv, wv)
+    np.testing.assert_array_equal(gl[wv], wl[wv])
+    np.testing.assert_array_equal(gr[wv], wr[wv])
+    assert int(gc) == wc and bool(go) == wo
+
+
+@st.composite
+def compact_case(draw):
+    n = draw(st.integers(1, 120))
+    capacity = draw(st.integers(1, 150))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    density = draw(st.floats(0.0, 1.0))
+    rng = np.random.RandomState(seed)
+    return (rng.randn(n).astype(np.float32),
+            rng.randint(0, 100, n).astype(np.int32),
+            rng.rand(n) < density,
+            capacity)
+
+
+@given(compact_case())
+@settings(**SETTINGS)
+def test_compact_agrees_with_reference(case):
+    """Stable prefix compaction preserves valid rows in order at any
+    capacity, flagging (never silently hiding) overflow."""
+    vals, ids, valid, cap = case
+    rel = BoundedRel({"v": jnp.asarray(vals), "id": jnp.asarray(ids)},
+                     jnp.asarray(valid))
+    got = compact_rel(rel, cap)
+    cols, wvalid, wcount, wovf = R.compact_ref(
+        {"v": vals, "id": ids}, valid, min(cap, len(vals)))
+    np.testing.assert_array_equal(np.asarray(got.valid), wvalid)
+    assert int(got.count) == wcount and bool(got.overflow) == wovf
+    np.testing.assert_array_equal(np.asarray(got.cols["v"])[wvalid],
+                                  cols["v"][wvalid])
+    np.testing.assert_array_equal(np.asarray(got.cols["id"])[wvalid],
+                                  cols["id"][wvalid])
 
 
 @st.composite
