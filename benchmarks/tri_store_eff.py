@@ -49,6 +49,12 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core.adil import Analysis
+
+# report path anchored at the repo root regardless of the invoking CWD (CI
+# uploads the artifact from the checkout root; a relative default silently
+# wrote to wherever the runner happened to be)
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEFAULT_JSON_OUT = os.path.join(REPO_ROOT, "BENCH_tri_store.json")
 from repro.core.ir import SystemCatalog, TensorT, standard_catalog
 from repro.core.rewrite import UNCOMPACTED_PIPELINE, UNPUSHED_PIPELINE
 from repro.stores import ColumnStore, GraphStore, TextStore, store_engines
@@ -438,7 +444,7 @@ def main(argv=None):
                     help="bounded-relation sweep: compact-then-dense vs "
                          "masked-dense")
     ap.add_argument("--min-speedup", type=float, default=2.0)
-    ap.add_argument("--json-out", default="BENCH_tri_store.json")
+    ap.add_argument("--json-out", default=DEFAULT_JSON_OUT)
     args = ap.parse_args(argv)
     if args.bounded:
         return run_bounded(args)

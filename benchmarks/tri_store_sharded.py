@@ -1,0 +1,235 @@
+"""Sharded tri-store: partitioned stores over the device mesh vs the same
+workload replicated on every device.
+
+The tri-model analysis family from ``tri_store_eff`` (scan/filter a tweet
+table -> seed + expand a hashtag graph -> PageRank -> score the corpus ->
+broadcast-join the hits -> all-to-all co-partitioned influencer join ->
+per-hashtag rollups) runs three ways on a host mesh forced to 8 devices:
+
+  * **single** — unsharded stores, no mesh: the honest one-device timing;
+  * **replicated** — unsharded stores bound to the 8-device mesh with every
+    input replicated: each device executes the *full* workload (what a
+    mesh buys you without ``shard_stores``);
+  * **sharded** — every store ``with_shards(8)``: the planner stamps
+    ``dist`` attrs, kinds the xfers (local / replicate / repartition), and
+    the runtime executes shard-local kernels with one all-gather per
+    PageRank iteration, a distributed top-k merge, and one all-to-all for
+    the co-partitioned join.
+
+The headline guard is **sharded vs replicated on the same mesh** (devices
+execute 1/n of the store work instead of all of it), which holds even when
+the 8 "devices" are threads time-slicing one physical core — exactly the CI
+situation, where wall-clock parallel speedup over ``single`` is impossible
+by construction.  Both timings and the host's CPU count are recorded so the
+report is honest about what was measured.  Results must stay allclose to
+the single-device run (the sharded graph / text kernels are bitwise; the
+psum'd float rollups re-associate).
+
+    PYTHONPATH=src python -m benchmarks.tri_store_sharded [--smoke]
+"""
+import argparse
+import os
+import sys
+
+# must precede ``import jax``: force a multi-device host platform so the
+# mesh actually spans devices under CI / local smoke runs.  Respect an
+# existing setting (the CI job exports its own XLA_FLAGS).
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from benchmarks.tri_store_eff import DEFAULT_JSON_OUT, merge_report, t_min
+from repro.core.adil import Analysis
+from repro.core.ir import SystemCatalog, TensorT, standard_catalog
+from repro.launch.mesh import (make_cpu_mesh, replicated_sharding,
+                               shard_store_inputs, syscat_for_mesh)
+from repro.stores import ColumnStore, GraphStore, TextStore, store_engines
+
+
+def build_workload(rng, shards, *, tweets, docs, hashtags, edges, vocab,
+                   terms_hi, iters, influencers):
+    user = rng.randint(0, 65536, tweets).astype(np.int32)
+    tag = (rng.zipf(1.3, tweets) % hashtags).astype(np.int32)
+    cols = {
+        "user": user,
+        "hashtag": tag,
+        "doc": np.arange(tweets, dtype=np.int32),
+        "engagement": (rng.gamma(2.0, 12.0, tweets)).astype(np.float32),
+        "retweets": rng.randint(0, 500, tweets).astype(np.int32),
+    }
+    for i in range(8):
+        cols[f"metric{i}"] = rng.rand(tweets).astype(np.float32)
+    table = ColumnStore(cols)
+    e = rng.randint(0, hashtags, (2, edges))
+    graph = GraphStore.from_edges(e[0], e[1], hashtags, symmetric=True)
+    lens = rng.randint(3, terms_hi, docs)
+    flat = (rng.zipf(1.4, int(lens.sum())) % vocab).astype(np.int64)
+    corpus = TextStore.from_docs(np.split(flat, np.cumsum(lens)[:-1]), vocab)
+    # influencer side table: non-unique user keys, large enough that the
+    # planner must co-partition (build_expected > BROADCAST_BUILD_MAX)
+    infl = ColumnStore({
+        "user": rng.randint(0, 65536, influencers).astype(np.int32),
+        "influence": rng.rand(influencers).astype(np.float32)})
+    if shards > 1:
+        table = table.with_shards(shards)
+        graph = graph.with_shards(shards)
+        corpus = corpus.with_shards(shards)
+        infl = infl.with_shards(shards)
+
+    cat = standard_catalog()
+    with Analysis(f"tri_sharded_s{shards}", cat) as a:
+        tw = a.bind("tweets", table)
+        gr = a.bind("g", graph)
+        cx = a.bind("cx", corpus)
+        fl = a.bind("infl", infl)
+        q = a.input("q", TensorT((vocab,), "float32", ("vocab",)))
+        t = a.op("rel_scan", tw)
+        hot = a.op("rel_filter", t, col="engagement", cmp="ge", value=25.0)
+        viral = a.op("rel_filter", hot, col="retweets", cmp="ge", value=10)
+        seeds = a.op("rel_group_agg", viral, key="hashtag",
+                     num_groups=hashtags, aggs=(("seed", "count", None),))
+        sv = a.op("col_tensor", seeds, col="seed", dim="nodes")
+        fr = a.op("graph_expand", gr, sv, hops=2)
+        pr = a.op("graph_pagerank", gr, fr, iters=iters, damping=0.85)
+        hits = a.op("text_topk", cx, q, k=64)
+        j = a.op("rel_join", t, hits, left_on="doc", right_on="doc")
+        trel = a.op("rel_group_agg", j, key="hashtag", num_groups=hashtags,
+                    aggs=(("textrel", "sum", "score"),))
+        tv = a.op("col_tensor", trel, col="textrel", dim="nodes")
+        mentions = a.op("bounded_join", viral, fl, left_on="user",
+                        right_on="user", capacity=tweets)
+        irel = a.op("rel_group_agg", mentions, key="hashtag",
+                    num_groups=hashtags,
+                    aggs=(("infl", "sum", "influence"),))
+        iv = a.op("col_tensor", irel, col="infl", dim="nodes")
+        comb = a.op("residual_add", a.op("residual_add", pr, tv), iv)
+        a.store(comb)
+
+    inputs = {"tweets": table.payload(), "g": graph.payload(),
+              "cx": corpus.payload(), "infl": infl.payload(),
+              "q": jnp.asarray(corpus.query_vector(rng.randint(0, vocab, 6)))}
+    return a, inputs
+
+
+def _replicate_inputs(mesh, values):
+    rep = replicated_sharding(mesh)
+
+    def place(x):
+        return jax.device_put(x, rep) if hasattr(x, "shape") else x
+
+    return {k: jax.tree.map(place, v) for k, v in values.items()}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized workload (seconds, not minutes)")
+    ap.add_argument("--min-speedup", type=float, default=2.0,
+                    help="sharded-vs-replicated floor on the largest "
+                         "workload")
+    ap.add_argument("--json-out", default=DEFAULT_JSON_OUT)
+    args = ap.parse_args(argv)
+
+    n_dev = jax.local_device_count()
+    if n_dev < 2:
+        print(f"[tri_store_sharded] SKIP: {n_dev} device(s); force a host "
+              f"mesh with XLA_FLAGS=--xla_force_host_platform_device_count=8")
+        return 0
+    mesh = make_cpu_mesh(n_dev, 1)
+    engines = store_engines()
+
+    sizes = ([dict(tweets=48_000, docs=8_000, hashtags=1024, edges=8_000,
+                   vocab=256, terms_hi=6, iters=2, influencers=16_384),
+              dict(tweets=120_000, docs=16_000, hashtags=2048, edges=16_000,
+                   vocab=256, terms_hi=6, iters=3, influencers=32_768)]
+             if args.smoke else
+             [dict(tweets=240_000, docs=32_000, hashtags=4096, edges=40_000,
+                   vocab=512, terms_hi=8, iters=3, influencers=65_536)])
+
+    rows, ok = [], True
+    for size in sizes:
+        a1, in1 = build_workload(np.random.RandomState(0), 1, **size)
+        f1 = a1.compile(SystemCatalog(), engines=engines, cache=False)
+        single = jax.jit(lambda i, f=f1: f({}, i))
+        out1 = np.asarray(single(in1))
+
+        # replicated baseline: same (unsharded) plan bound to the mesh,
+        # every input replicated -> every device runs the full workload
+        fr_ = a1.compile(syscat_for_mesh(mesh), engines=engines,
+                         cache=False, mesh=mesh)
+        in_r = _replicate_inputs(mesh, in1)
+        repl = jax.jit(lambda i, f=fr_: f({}, i))
+        out_r = np.asarray(repl(in_r))
+
+        a8, in8 = build_workload(np.random.RandomState(0), n_dev, **size)
+        f8 = a8.compile(syscat_for_mesh(mesh), engines=engines,
+                        cache=False, mesh=mesh)
+        in_s = shard_store_inputs(mesh, in8)
+        shrd = jax.jit(lambda i, f=f8: f({}, i))
+        out_s = np.asarray(shrd(in_s))
+
+        kinds = sorted(r["chosen"] for r in f8.report
+                       if r["pattern"] == "xfer_op")
+        dist = sorted({(n.impl, n.attrs["dist"]) for n in f8.concrete.topo()
+                       if n.attrs.get("dist")})
+        print(f"[tri_store_sharded] tweets={size['tweets']}: xfer kinds "
+              f"{kinds}")
+        print(f"[tri_store_sharded] dist nodes: {dist}")
+        close = (np.allclose(out1, out_s, rtol=1e-4, atol=1e-5)
+                 and np.allclose(out1, out_r, rtol=1e-4, atol=1e-5))
+        miss = bool(f1.plan_id != f8.plan_id)
+
+        t1 = t_min(single, in1, warmup=2, iters=5)
+        tr = t_min(repl, in_r, warmup=2, iters=5)
+        ts = t_min(shrd, in_s, warmup=2, iters=5)
+        speedup = tr / ts
+        rows.append({
+            "tweets": size["tweets"],
+            "single_ms": t1 * 1e3, "replicated_ms": tr * 1e3,
+            "sharded_ms": ts * 1e3, "speedup_vs_replicated": speedup,
+            "speedup_vs_single": t1 / ts,
+            "allclose": bool(close), "plan_cache_miss": miss,
+            "xfer_kinds": kinds,
+            "dist_nodes": [f"{i}:{d}" for i, d in dist],
+        })
+        print(f"[tri_store_sharded] single {t1 * 1e3:8.1f} ms | "
+              f"replicated(x{n_dev}) {tr * 1e3:8.1f} ms | "
+              f"sharded {ts * 1e3:8.1f} ms -> {speedup:5.2f}x vs "
+              f"replicated  allclose={close}  cache_miss={miss}")
+        ok &= close and miss
+        if not close:
+            print("[tri_store_sharded] FAIL: results diverge")
+        if not miss:
+            print("[tri_store_sharded] FAIL: sharded plan hit the "
+                  "unsharded cache entry")
+
+    # the guard applies to the largest workload, where the per-device work
+    # reduction dominates the collective overhead
+    head = rows[-1]["speedup_vs_replicated"]
+    if head < args.min_speedup:
+        ok = False
+        print(f"[tri_store_sharded] FAIL: speedup {head:.2f}x < "
+              f"{args.min_speedup:.1f}x")
+
+    report = {
+        "mode": "sharded", "smoke": bool(args.smoke),
+        "devices": n_dev, "cpu_count": os.cpu_count(),
+        "min_speedup": args.min_speedup, "sweep": rows, "ok": bool(ok),
+    }
+    merge_report(args.json_out, report, section="sharded")
+    print(f"[tri_store_sharded] wrote {args.json_out} (sharded section)")
+    emit([(f"tri_sharded_{r['tweets']}", r["sharded_ms"] * 1e3,
+           f"vs_replicated={r['speedup_vs_replicated']:.2f}x")
+          for r in rows])
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -527,6 +527,32 @@ def _e_xfer_spill(in_types, attrs, syscat):
     return OpCost(0.0, 2.0 * b, 2.0 * b)
 
 
+@estimator("xfer_local")
+def _e_xfer_local(in_types, attrs, syscat):
+    # layout-compatible handoff between sharded store ops: no wire bytes
+    return OpCost(0.0, 0.0, 0.0)
+
+
+@estimator("xfer_replicate")
+def _e_xfer_replicate(in_types, attrs, syscat):
+    # all-gather a data-axis-partitioned value: every device receives the
+    # (n-1)/n of the value it does not already hold
+    n = max(1, syscat.axis_size("data"))
+    b = float(attrs.get("est_bytes", _sum_bytes(in_types) * (n - 1) / n))
+    return OpCost(0.0, b, b)
+
+
+@estimator("xfer_repartition")
+def _e_xfer_repartition(in_types, attrs, syscat):
+    # all-to-all reshuffle onto the join key's owner shards: each device
+    # keeps 1/n of its 1/n slice and sends the rest — (n-1)/n^2 of the
+    # global value crosses the wire per device
+    n = max(1, syscat.axis_size("data"))
+    b = float(attrs.get("est_bytes",
+                        _sum_bytes(in_types) * (n - 1) / (n * n)))
+    return OpCost(0.0, b, b)
+
+
 def op_cost(impl: str, in_types, attrs, syscat: SystemCatalog) -> OpCost:
     fn = _ESTIMATORS.get(impl)
     if fn is None:
@@ -536,7 +562,20 @@ def op_cost(impl: str, in_types, attrs, syscat: SystemCatalog) -> OpCost:
     a = dict(attrs)
     if impl.endswith("_pallas"):
         a["_impl_pallas"] = True
-    return fn(in_types, a, syscat)
+    c = fn(in_types, a, syscat)
+    dist = attrs.get("dist")
+    if dist and not impl.startswith("xfer"):
+        # shard-local execution (shard_stores): compute and memory divide
+        # over the data axis; the broadcast join additionally prices the
+        # build side's all-gather, psum-style aggregates a tree reduction
+        n = max(1, syscat.axis_size("data"))
+        coll = c.coll_bytes
+        if dist == "broadcast":
+            coll += float(attrs.get("bcast_bytes", 0.0))
+        elif dist in ("psum", "doc"):
+            coll += c.bytes / max(n, 1) * math.log2(max(n, 2))
+        return OpCost(c.flops / n, c.bytes / n, coll)
+    return c
 
 
 def raw_features(impl, in_types, attrs, syscat) -> dict:

@@ -142,6 +142,10 @@ class TableT(Type):
     columns: tuple            # ((name, dtype), ...)
     rows: int
     expected_count: Optional[int] = None
+    # mesh placement over the data axis: None = single-device / replicated,
+    # "row" = row-range sharded.  Part of the repr (hence the plan id) only
+    # when set, so unpartitioned plans keep their pre-sharding identity.
+    partitioning: Optional[str] = None
 
     def __post_init__(self):
         names = [c[0] for c in self.columns]
@@ -182,7 +186,8 @@ class TableT(Type):
         cols = ", ".join(f"{n}:{d}" for n, d in self.columns)
         exp = ("" if self.expected_count is None
                else f", count~{self.expected_count}")
-        return f"TableT({cols}; capacity={self.rows}{exp})"
+        part = "" if self.partitioning is None else f"; part={self.partitioning}"
+        return f"TableT({cols}; capacity={self.rows}{exp}{part})"
 
 
 @dataclass(frozen=True)
@@ -192,6 +197,8 @@ class GraphT(Type):
     nodes: int
     edges: int
     weighted: bool = False
+    # None = single-device; "block" = CSR row(dst)-block partitioned
+    partitioning: Optional[str] = None
 
     def bytesize(self) -> int:
         # indptr + indices + per-edge src expansion (+ weights) + out-degree
@@ -200,7 +207,8 @@ class GraphT(Type):
 
     def __repr__(self):
         w = ", weighted" if self.weighted else ""
-        return f"GraphT(nodes={self.nodes}, edges={self.edges}{w})"
+        part = "" if self.partitioning is None else f", part={self.partitioning}"
+        return f"GraphT(nodes={self.nodes}, edges={self.edges}{w}{part})"
 
 
 @dataclass(frozen=True)
@@ -211,14 +219,17 @@ class CorpusT(Type):
     docs: int
     vocab: int
     postings: int
+    # None = single-device; "doc" = document-range partitioned
+    partitioning: Optional[str] = None
 
     def bytesize(self) -> int:
         # (doc, term, tf) per posting + doc lengths + idf table
         return int(self.postings) * 12 + self.docs * 4 + self.vocab * 4
 
     def __repr__(self):
+        part = "" if self.partitioning is None else f", part={self.partitioning}"
         return (f"CorpusT(docs={self.docs}, vocab={self.vocab}, "
-                f"postings={self.postings})")
+                f"postings={self.postings}{part})")
 
 
 _DTYPE_BYTES = {
@@ -931,7 +942,7 @@ def standard_catalog() -> FunctionCatalog:
             if not t.has_col(c):
                 raise ValidationError(f"rel_scan: no column {c!r} in {t!r}")
         return TableT(tuple((n, d) for n, d in t.columns if n in tuple(cols)),
-                      t.rows, t.expected_count)
+                      t.rows, t.expected_count, t.partitioning)
 
     @cat.op("rel_filter", n_inputs=1, required_attrs=("col", "cmp", "value"),
             engine="rel")
@@ -977,9 +988,10 @@ def standard_catalog() -> FunctionCatalog:
         lt = expect_table(ins[0], "rel_join left")
         rt = expect_table(ins[1], "rel_join right")
         # unique-build-key probe: output rows mirror the probe side, so the
-        # probe side's expected count passes through (joins only narrow)
+        # probe side's expected count (and row partitioning) pass through
+        # (joins only narrow)
         return TableT(_join_columns(lt, rt, attrs, "rel_join"), lt.rows,
-                      lt.expected_count)
+                      lt.expected_count, lt.partitioning)
 
     @cat.op("bounded_join", n_inputs=2,
             required_attrs=("left_on", "right_on", "capacity"), engine="rel")

@@ -122,5 +122,9 @@ def partition_stats(pp: PhysPlan) -> dict:
     return {
         "partition": ops.count("partition"),
         "merge": ops.count("merge"),
+        # store ops the shard_stores rewrite marked for shard-local
+        # execution over the mesh's data axis (orthogonal to the tensor
+        # partition/merge machinery above, which is ST-capped for stores)
+        "dist": sum(1 for n in pp.topo() if n.attrs.get("dist")),
         "total": len(ops),
     }

@@ -162,6 +162,12 @@ defop("graph_expand_skip", dp_cap=ST, buf_cap=SS, cap_on=None,
 # federated-baseline behaviour).  Spill is blocking for buffering purposes.
 defop("xfer_pin", dp_cap=ST, buf_cap=SS, cap_on=None)
 defop("xfer_spill", dp_cap=ST, buf_cap=B, cap_on=None)
+# mesh-kinded transfers (shard_stores product): local = layout-compatible
+# pointer move (zero wire bytes), replicate = all-gather to every device,
+# repartition = all-to-all reshuffle onto the join key's owner shards
+defop("xfer_local", dp_cap=ST, buf_cap=SS, cap_on=None)
+defop("xfer_replicate", dp_cap=ST, buf_cap=SS, cap_on=None)
+defop("xfer_repartition", dp_cap=ST, buf_cap=SS, cap_on=None)
 
 
 # --------------------------------------------------------------------------
@@ -248,6 +254,17 @@ def _has_window(nodes):
 
 def _not_spill_only(nodes):
     return not any(n.attrs.get("spill_only") for n in nodes)
+
+
+def _unkinded(nodes):
+    return (_not_spill_only(nodes)
+            and not any(n.attrs.get("kind") for n in nodes))
+
+
+def _kind_is(kind):
+    def gate(nodes):
+        return any(n.attrs.get("kind") == kind for n in nodes)
+    return gate
 
 
 # masked-candidate gates: the skip/fused realizations are offered only when
@@ -439,7 +456,15 @@ DEFAULT_PATTERNS = (
     Pattern(
         "xfer_op", ("xfer",),
         (
-            Candidate("xfer_pin", ("xfer_pin",), when=_not_spill_only),
+            # mesh-kinded xfers (shard_stores) pair with the spill fallback
+            # so the cost model genuinely prices all-gather/all-to-all wire
+            # bytes against the host round-trip
+            Candidate("xfer_local", ("xfer_local",), when=_kind_is("local")),
+            Candidate("xfer_replicate", ("xfer_replicate",),
+                      when=_kind_is("replicate")),
+            Candidate("xfer_repartition", ("xfer_repartition",),
+                      when=_kind_is("repartition")),
+            Candidate("xfer_pin", ("xfer_pin",), when=_unkinded),
             Candidate("xfer_spill", ("xfer_spill",)),
         ),
     ),

@@ -129,7 +129,8 @@ def pipeline_pass(name: str):
 @pipeline_pass("rewrite")
 def _pass_rewrite(ctx: PipelineContext) -> dict:
     ctx.logical_opt, rules = rewrite_with_trace(
-        ctx.logical, ctx.catalog, ctx.options.rewrite_pipeline)
+        ctx.logical, ctx.catalog, ctx.options.rewrite_pipeline,
+        syscat=ctx.syscat)
     return {"rules": rules}
 
 
@@ -253,6 +254,18 @@ class StagedPhysicalPlan:
                     lines.append(
                         f"        + fused {'->'.join(ch['ops'])} "
                         f"(head={ch['head']})")
+                # sharded stores: xfer kinds with priced wire bytes, and
+                # the ops the runtime executes shard-locally
+                for xf in rule.get("info", {}).get("xfers", ()):
+                    lines.append(
+                        f"        + xfer {xf['id']} kind={xf['kind']} "
+                        f"~{xf['est_bytes']}B")
+                for dn in rule.get("info", {}).get("dist", ()):
+                    extra = ("" if "build_expected" not in dn else
+                             f" build~{dn['build_expected']}")
+                    lines.append(
+                        f"        + dist {dn['id']} [{dn['op']}] "
+                        f"{dn['dist']}{extra}")
         for r in self.report:
             costs = {k: f"{v:.3e}" for k, v in r["costs"].items()}
             lines.append(f"  choice [{r['pattern']}] -> {r['chosen']} "

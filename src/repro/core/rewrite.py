@@ -22,6 +22,7 @@ always re-validated (the paper re-checks metadata after every rewrite).
 """
 from __future__ import annotations
 
+import contextvars
 import math
 from typing import Callable
 
@@ -879,11 +880,23 @@ def fuse_store_ops(plan: Plan, catalog: FunctionCatalog) -> Plan:
     cons = plan.consumers()
     out_set = set(plan.outputs)
 
+    fusable = _REL_FUSABLE
+    syscat = _ACTIVE_SYSCAT.get()
+    if (syscat is not None and syscat.axis_size("data") > 1
+            and any(getattr(t, "partitioning", None)
+                    for t in plan.inputs.values())):
+        # under mesh sharding, joins stay standalone plan nodes: the
+        # distributed join kernels (broadcast build / all-to-all
+        # co-partition) dispatch on the node's ``dist`` attr, which
+        # ``shard_stores`` cannot stamp on a step buried inside a chain
+        fusable = tuple(op for op in fusable
+                        if op not in ("rel_join", "bounded_join"))
+
     # group maximal chains by walking producers of the first (table) input
     group_of: dict = {}       # node id -> chain head id
     chains: dict = {}         # head id -> [Node, ...] in order
     for node in plan.topo():
-        if node.op not in _REL_FUSABLE:
+        if node.op not in fusable:
             continue
         src = node.inputs[0]
         head = group_of.get(src)
@@ -949,17 +962,187 @@ def fuse_store_ops(plan: Plan, catalog: FunctionCatalog) -> Plan:
 
 
 # --------------------------------------------------------------------------
+# 7. store sharding over the device mesh ("shard_stores")
+# --------------------------------------------------------------------------
+#
+# When any bound store is declared partitioned over the mesh's ``data`` axis
+# (``ColumnStore.with_shards`` / ``GraphStore.with_shards`` /
+# ``TextStore.with_shards``), this pass (a) propagates partitioned-ness
+# through the dataflow, (b) stamps a ``dist`` attr on every store op the
+# runtime can execute shard-locally, (c) picks the distributed join strategy
+# (broadcast the build side vs co-partition both sides) from the build
+# side's *expected* cardinality, and (d) kinds every cross-engine ``xfer``
+# as ``local`` / ``replicate`` / ``repartition`` so the cost model prices
+# its wire bytes.  Values stay logically global throughout — ``dist`` is a
+# pure performance annotation (shard_map slices the global value; any op
+# without a sharded realization falls back to the dense global kernel), so
+# there is no correctness cliff when a shape fails a divisibility check.
+
+_ACTIVE_SYSCAT = contextvars.ContextVar("rewrite_syscat", default=None)
+
+# build sides at or under this many expected rows replicate (all-gather);
+# larger builds co-partition both sides with an all-to-all shuffle
+BROADCAST_BUILD_MAX = 4096
+# headroom multiplier on the expected per-(sender, owner) shuffle bucket
+SHUFFLE_SLACK = 4
+
+_DTYPE_BYTES = {"float64": 8, "int64": 8, "float32": 4, "int32": 4,
+                "float16": 2, "bfloat16": 2, "int16": 2, "int8": 1, "bool": 1}
+
+
+def _value_bytes(t) -> int:
+    """Expected wire size of a value: tables by expected (not capacity)
+    rows, tensors dense, stores by their edge/posting payloads."""
+    from .ir import CorpusT, GraphT, TableT, TensorT
+    if isinstance(t, TableT):
+        row = sum(_DTYPE_BYTES.get(str(d), 4) for _, d in t.columns) + 1
+        return int(t.expected_rows()) * row
+    if isinstance(t, TensorT):
+        size = 1
+        for s in t.shape:
+            size *= int(s)
+        return size * _DTYPE_BYTES.get(str(t.dtype), 4)
+    if isinstance(t, GraphT):
+        return int(t.edges) * 12          # (src, dst, weight) per edge
+    if isinstance(t, CorpusT):
+        return int(t.postings) * 12       # (doc, term, tf) per posting
+    return 0
+
+
+# per-op partitioned-ness transfer for fused-chain steps: ops that keep the
+# row partition of their first input vs ops whose output is replicated
+_PART_KEEPS = {"rel_scan", "rel_filter", "rel_join", "bounded_join",
+               "col_tensor"}
+_PART_DROPS = {"rel_group_agg", "compact", "sel_mask", "text_topk",
+               "masked_topk", "graph_tricount"}
+
+
+def shard_stores(plan: Plan, catalog: FunctionCatalog) -> Plan:
+    syscat = _ACTIVE_SYSCAT.get()
+    n = 1 if syscat is None else int(syscat.axis_size("data"))
+    if n <= 1:
+        return plan
+    infer_types(plan, catalog)
+    if not any(getattr(t, "partitioning", None)
+               for t in plan.inputs.values()):
+        return plan
+
+    out = Plan(plan.name, {}, dict(plan.inputs), plan.outputs, {}, plan._ctr)
+    remap: dict = {i: i for i in plan.inputs}
+    part: dict = {i: bool(getattr(t, "partitioning", None))
+                  for i, t in plan.inputs.items()}
+    xfers, dist_nodes = [], []
+
+    def table_divides(t) -> bool:
+        return int(t.rows) % n == 0
+
+    def reshard(src: str, owner: str, side: str, est: int) -> str:
+        nid = out.add("xfer", [src],
+                      {"src_engine": "rel", "dst_engine": "rel",
+                       "kind": "repartition", "est_bytes": est},
+                      id=f"reshard_{owner}_{side}")
+        part[nid] = True
+        xfers.append({"id": nid, "kind": "repartition", "est_bytes": est})
+        return nid
+
+    for node in plan.topo():
+        tys = [plan.types[i] if i in plan.nodes else plan.inputs[i]
+               for i in node.inputs]
+        ins = [remap[i] for i in node.inputs]
+        attrs = dict(node.attrs)
+        p_in = part.get(node.inputs[0], False) if node.inputs else False
+        p_out = False
+        ty = plan.types[node.id]
+
+        if node.op == "xfer":
+            if attrs.get("spill_only"):
+                kind = None               # the naive spill path stays priced
+            elif not p_in:
+                kind = "local"            # replicated value: pointer move
+            elif attrs.get("dst_engine") == "xla":
+                kind = "replicate"        # dense consumers need it whole
+            else:
+                kind = "local"            # stays partitioned in the store
+                p_out = True
+            if kind is not None:
+                b = _value_bytes(tys[0])
+                est = (0 if kind == "local"
+                       else b * (n - 1) // n)
+                attrs["kind"] = kind
+                attrs["est_bytes"] = est
+                xfers.append({"id": node.id, "kind": kind, "est_bytes": est})
+        elif node.op in ("rel_join", "bounded_join") and p_in:
+            lt, rt = tys
+            be = attrs.get("build_expected", rt.expected_rows())
+            cap = int(attrs.get("capacity", 0))
+            can_partition = (node.op == "bounded_join" and cap % n == 0
+                             and table_divides(lt) and table_divides(rt))
+            if int(be) <= BROADCAST_BUILD_MAX or not can_partition:
+                attrs["dist"] = "broadcast"
+                # build side replicates: price its all-gather on this node
+                attrs["bcast_bytes"] = _value_bytes(rt) * (n - 1) // n
+            else:
+                attrs["dist"] = "partitioned"
+                per_bucket = max(lt.expected_rows(), rt.expected_rows())
+                attrs["bucket_cap"] = max(
+                    16, -(-SHUFFLE_SLACK * int(per_bucket)) // (n * n))
+                est = (_value_bytes(lt) + _value_bytes(rt)) * (n - 1) // (n * n)
+                ins = [reshard(ins[0], node.id, "l", est // 2),
+                       reshard(ins[1], node.id, "r", est - est // 2)]
+            p_out = True
+            dist_nodes.append({"id": node.id, "op": node.op,
+                               "dist": attrs["dist"],
+                               "build_expected": int(be)})
+        elif node.op in ("rel_scan", "rel_filter", "col_tensor", "sel_mask",
+                         "rel_group_agg") and p_in:
+            attrs["dist"] = "row"
+            p_out = node.op in _PART_KEEPS
+            dist_nodes.append({"id": node.id, "op": node.op, "dist": "row"})
+        elif node.op == "rel_fused" and p_in:
+            attrs["dist"] = "row"
+            p = True
+            for op, _a, _s, _t in attrs["chain"]:
+                p = p and op in _PART_KEEPS
+            p_out = p
+            dist_nodes.append({"id": node.id, "op": node.op, "dist": "row"})
+        elif (node.op in ("graph_expand", "graph_pagerank")
+              and getattr(tys[0], "partitioning", None) == "block"):
+            attrs["dist"] = "block"
+            p_out = True
+            dist_nodes.append({"id": node.id, "op": node.op, "dist": "block"})
+        elif (node.op == "text_topk" and len(node.inputs) == 2
+              and getattr(tys[0], "partitioning", None) == "doc"):
+            attrs["dist"] = "doc"
+            dist_nodes.append({"id": node.id, "op": node.op, "dist": "doc"})
+        elif node.op == "compact":
+            p_out = False
+        else:
+            # dense / xla ops consume the global value and emit replicated;
+            # fall back to the output type's own declaration when present
+            p_out = bool(getattr(ty, "partitioning", None))
+
+        nid = out.add(node.op, ins, attrs, node.subplan, id=node.id)
+        remap[node.id] = nid
+        part[nid] = p_out
+
+    out.outputs = tuple(remap[o] for o in plan.outputs)
+    out = infer_types(out, catalog)
+    out.__dict__["_pass_info"] = {"xfers": xfers, "dist": dist_nodes}
+    return out
+
+
+# --------------------------------------------------------------------------
 # driver
 # --------------------------------------------------------------------------
 
 DEFAULT_PIPELINE = ("decompose", "cse", "fuse_qkv", "fuse_scans", "cse",
                     "push_predicates", "choose_compaction", "fuse_store_ops",
-                    "place_xfers")
+                    "place_xfers", "shard_stores")
 
 # PR 3's pipeline (planned xfer placement, no cross-engine pushdown): the
 # baseline the pushdown benchmark compares against
 UNPUSHED_PIPELINE = ("decompose", "cse", "fuse_qkv", "fuse_scans", "cse",
-                     "place_xfers")
+                     "place_xfers", "shard_stores")
 
 # the masked-dense baseline: full pushdown but no compaction — every
 # relation stays at base capacity behind its mask (what the --bounded
@@ -977,6 +1160,7 @@ _PASSES: dict = {
     "fuse_store_ops": fuse_store_ops,
     "place_xfers": place_xfers,
     "place_xfers_naive": place_xfers_naive,
+    "shard_stores": shard_stores,
 }
 
 
@@ -989,10 +1173,23 @@ def rewrite(plan: Plan, catalog: FunctionCatalog,
 
 
 def rewrite_with_trace(plan: Plan, catalog: FunctionCatalog,
-                       pipeline=DEFAULT_PIPELINE) -> tuple:
+                       pipeline=DEFAULT_PIPELINE, syscat=None) -> tuple:
     """Like :func:`rewrite`, also returning per-rule timing/size records
     ``[{"rule", "wall_ms", "nodes_before", "nodes_after"}, ...]`` for the
-    EXPLAIN report of the staged plan pipeline."""
+    EXPLAIN report of the staged plan pipeline.  ``syscat`` (the mesh-aware
+    system catalog) is installed for passes that shard against the mesh —
+    without it ``shard_stores`` no-ops."""
+    import time
+
+    token = _ACTIVE_SYSCAT.set(syscat)
+    try:
+        return _rewrite_with_trace(plan, catalog, pipeline)
+    finally:
+        _ACTIVE_SYSCAT.reset(token)
+
+
+def _rewrite_with_trace(plan: Plan, catalog: FunctionCatalog,
+                        pipeline=DEFAULT_PIPELINE) -> tuple:
     import time
 
     infer_types(plan, catalog)

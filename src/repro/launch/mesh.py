@@ -38,6 +38,44 @@ def data_spec(mesh) -> P:
     return P(axes if len(axes) > 1 else (axes[0] if axes else None))
 
 
+def data_axis_size(mesh) -> int:
+    """Devices along the ``data`` axis (1 for no mesh / no data axis) —
+    the shard count every store partitions over."""
+    if mesh is None or "data" not in getattr(mesh, "axis_names", ()):
+        return 1
+    return int(mesh.shape["data"])
+
+
+def row_sharding(mesh):
+    """NamedSharding for a row/node/doc-partitioned 1-D store array."""
+    return jax.sharding.NamedSharding(mesh, P("data"))
+
+
+def replicated_sharding(mesh):
+    return jax.sharding.NamedSharding(mesh, P())
+
+
+def shard_store_inputs(mesh, values: dict) -> dict:
+    """Place store payloads on the mesh: array leaves whose leading dim
+    divides the data axis go row-partitioned, everything else replicated.
+    Payloads are logically global either way — this only picks device
+    placement, so unsharded execution of the same values stays valid."""
+    n = data_axis_size(mesh)
+    if n <= 1:
+        return values
+    rs, rep = row_sharding(mesh), replicated_sharding(mesh)
+
+    def place(x):
+        try:
+            shape = x.shape
+        except AttributeError:
+            return x
+        sh = rs if (len(shape) >= 1 and shape[0] % n == 0) else rep
+        return jax.device_put(x, sh)
+
+    return {k: jax.tree.map(place, v) for k, v in values.items()}
+
+
 def input_shardings(mesh, input_specs: dict) -> dict:
     """Batch-leading inputs shard over (pod, data)."""
     out = {}

@@ -57,7 +57,7 @@ class ColumnStore:
     """
 
     def __init__(self, columns: Dict[str, np.ndarray],
-                 capacity: Optional[int] = None):
+                 capacity: Optional[int] = None, shards: int = 1):
         if not columns:
             raise ValidationError("ColumnStore needs >= 1 column")
         lens = {k: len(v) for k, v in columns.items()}
@@ -70,7 +70,23 @@ class ColumnStore:
         if self.capacity < self.rows:
             raise ValidationError(
                 f"capacity {self.capacity} < ingested rows {self.rows}")
+        # row-range sharding over the mesh's data axis: capacity rounds up
+        # to a shard multiple (the pad rows are valid=False, so every kernel
+        # already ignores them) and the type advertises partitioning="row"
+        self.shards = int(shards)
+        if self.shards < 1:
+            raise ValidationError(f"shards {self.shards} < 1")
+        if self.shards > 1:
+            self.capacity += (-self.capacity) % self.shards
         self.version = 0
+
+    def with_shards(self, shards: int) -> "ColumnStore":
+        """This table re-declared as row-partitioned over ``shards`` mesh
+        slices (shares the ingested column data)."""
+        out = ColumnStore(self._cols, capacity=self.capacity, shards=shards)
+        out.rows = self.rows
+        out.version = self.version
+        return out
 
     @staticmethod
     def _canon_col(name: str, col: np.ndarray) -> np.ndarray:
@@ -91,7 +107,8 @@ class ColumnStore:
         # is the fully-valid default (None), keeping base-table types stable
         exp = None if self.rows == self.capacity else self.rows
         return TableT(tuple((k, str(v.dtype)) for k, v in self._cols.items()),
-                      self.capacity, exp)
+                      self.capacity, exp,
+                      "row" if self.shards > 1 else None)
 
     def payload(self) -> BoundedRel:
         cols = {}
@@ -126,6 +143,8 @@ class ColumnStore:
             self._cols[k] = np.concatenate([self._cols[k], v])
         self.rows += next(iter(lens.values()))
         self.capacity = max(self.capacity, self.rows)
+        if self.shards > 1:
+            self.capacity += (-self.capacity) % self.shards
         self.version += 1
         return self
 

@@ -34,13 +34,34 @@ from .graph_kernels import scatter_add_pallas
 class GraphStore:
     """Host-side CSR container built from an edge list."""
 
-    def __init__(self, indptr, indices, src, weights, n_nodes: int):
+    def __init__(self, indptr, indices, src, weights, n_nodes: int,
+                 shards: int = 1):
         self.indptr = np.asarray(indptr, np.int32)
         self.indices = np.asarray(indices, np.int32)
         self.src = np.asarray(src, np.int32)
         self.weights = np.asarray(weights, np.float32)
         self.n_nodes = int(n_nodes)
         self.n_edges = int(self.indices.shape[0])
+        self.shards = int(shards)
+        if self.shards < 1:
+            raise ValidationError(f"shards {self.shards} < 1")
+        if self.n_nodes % self.shards:
+            raise ValidationError(
+                f"shards {self.shards} must divide n_nodes {self.n_nodes}; "
+                f"pad the node domain (with_shards pads automatically)")
+
+    def with_shards(self, shards: int) -> "GraphStore":
+        """This graph re-declared as dst-block partitioned over ``shards``
+        mesh slices.  The node domain pads up to a shard multiple with
+        isolated (edgeless) vertices; `payload()` then additionally carries
+        the dst-block edge arrays the block-partitioned SpMV runs on."""
+        n = self.n_nodes + (-self.n_nodes) % int(shards)
+        indptr = self.indptr
+        if n != self.n_nodes:
+            pad = np.full(n - self.n_nodes, self.indptr[-1], np.int32)
+            indptr = np.concatenate([self.indptr, pad])
+        return GraphStore(indptr, self.indices, self.src, self.weights, n,
+                          shards=int(shards))
 
     @classmethod
     def from_edges(cls, src, dst, n_nodes: int, weights=None,
@@ -73,16 +94,50 @@ class GraphStore:
     @property
     def type(self) -> GraphT:
         return GraphT(self.n_nodes, self.n_edges,
-                      weighted=bool((self.weights != 1.0).any()))
+                      weighted=bool((self.weights != 1.0).any()),
+                      partitioning="block" if self.shards > 1 else None)
 
     def payload(self) -> dict:
         out_deg = np.maximum(np.diff(self.indptr), 1).astype(np.float32)
-        return {
+        out = {
             "indptr": jnp.asarray(self.indptr),
             "indices": jnp.asarray(self.indices),   # dst per edge
             "src": jnp.asarray(self.src),           # src per edge
             "weights": jnp.asarray(self.weights),
             "out_deg": jnp.asarray(out_deg),
+        }
+        if self.shards > 1:
+            out.update(self._block_payload())
+        return out
+
+    def _block_payload(self) -> dict:
+        """Dst-block edge partition for the block-partitioned SpMV: shard d
+        owns dst nodes ``[d*n/s, (d+1)*n/s)`` and exactly the edges landing
+        there.  The selection is *stable* over the CSR (src-sorted) edge
+        order, so within every dst segment the contribution order matches
+        the dense SpMV — block-partitioned segment sums stay bitwise equal.
+        Blocks pad to the max block edge count; pad slots carry
+        ``dst_local = n_local`` (an out-of-range segment id: scatters drop
+        it) and weight 0."""
+        s, n = self.shards, self.n_nodes
+        n_local = n // s
+        block = self.indices // n_local                # dst block per edge
+        counts = np.bincount(block, minlength=s)
+        e_max = max(int(counts.max()) if counts.size else 0, 1)
+        src_b = np.zeros((s, e_max), np.int32)
+        dstl_b = np.full((s, e_max), n_local, np.int32)    # pad -> dropped
+        w_b = np.zeros((s, e_max), np.float32)
+        order = np.argsort(block, kind="stable")       # dst-block grouping
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        for d in range(s):
+            sel = order[starts[d]:starts[d + 1]]
+            src_b[d, :sel.size] = self.src[sel]
+            dstl_b[d, :sel.size] = self.indices[sel] - d * n_local
+            w_b[d, :sel.size] = self.weights[sel]
+        return {
+            "blk_src": jnp.asarray(src_b.reshape(-1)),
+            "blk_dst_local": jnp.asarray(dstl_b.reshape(-1)),
+            "blk_weights": jnp.asarray(w_b.reshape(-1)),
         }
 
 

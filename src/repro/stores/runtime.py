@@ -32,6 +32,9 @@ from .graph_store import (expand_frontier, expand_frontier_blockskip,
                           pagerank, triangle_count)
 from .masked_kernels import (compact_prefix_pallas, join_probe_pallas,
                              masked_segment_agg_pallas, masked_tfidf_pallas)
+from .sharded import (_shardable, sharded_broadcast_join, sharded_count,
+                      sharded_expand, sharded_group_agg, sharded_pagerank,
+                      sharded_partitioned_join, sharded_tfidf_topk)
 from .text_store import (masked_topk, tfidf_scores, tfidf_topk,
                          tfidf_topk_blockskip, tfidf_topk_masked)
 
@@ -75,7 +78,14 @@ def _step_rel_filter(tbl, attrs, ctx=None):
         site = attrs.get("site")
         if site is None:
             site = filter_site(attrs, rel.col_names(), rel.capacity)
-        _record_count(ctx, tuple(site), out.count,
+        count = out.count
+        mesh = getattr(ctx, "mesh", None)
+        if (attrs.get("dist") == "row"
+                and _shardable(mesh, out.valid.shape[0])):
+            # shard-local survivor count + psum: integer addition is
+            # associative, so SelectivityFeedback sees the exact count
+            count = sharded_count(out.valid, mesh)
+        _record_count(ctx, tuple(site), count,
                       jnp.maximum(rel.count, 1))
     return out
 
@@ -230,6 +240,19 @@ def _i_rel_filter(ctx, args, node):
 
 @REL_ENGINE.impl("rel_hash_join")
 def _i_rel_join(ctx, args, node):
+    a = node.attrs
+    mesh = getattr(ctx, "mesh", None)
+    if a.get("dist") == "broadcast":
+        left, right = as_bounded(args[0]), as_bounded(args[1])
+        if _shardable(mesh, left.capacity):
+            # probe side row-partitioned, build side replicated: each shard
+            # probes its block against the full build (bitwise = dense)
+            idx, matched = sharded_broadcast_join(
+                left.cols[a["left_on"]], right.cols[a["right_on"]], mesh)
+            cols = _merge_join_cols(left, right, a["right_on"], idx)
+            valid = left.valid & matched & right.valid[idx]
+            return BoundedRel(cols, valid, None,
+                              left.overflow | right.overflow)
     return _step_rel_join(args[0], args[1], node.attrs, ctx)
 
 
@@ -241,11 +264,47 @@ def _i_rel_join_probe(ctx, args, node):
 
 @REL_ENGINE.impl("bounded_join_col")
 def _i_bounded_join(ctx, args, node):
+    a = node.attrs
+    mesh = getattr(ctx, "mesh", None)
+    if a.get("dist") == "partitioned":
+        left, right = as_bounded(args[0]), as_bounded(args[1])
+        cap = int(a["capacity"])
+        if _shardable(mesh, left.capacity, right.capacity, cap):
+            # co-partition both sides on the key (one all-to-all of fixed
+            # bucket_cap buckets), then join shard-locally.  Output rows
+            # land in shard-major slot order: same match *set* as the
+            # dense join, different slot order.
+            lidx, ridx, valid, count, ovf = sharded_partitioned_join(
+                left.cols[a["left_on"]], left.valid,
+                right.cols[a["right_on"]], right.valid,
+                cap, mesh, int(a.get("bucket_cap", 64)))
+            gathered = left.with_cols(
+                {k: v[lidx] for k, v in left.cols.items()})
+            cols = _merge_join_cols(gathered, right, a["right_on"], ridx)
+            return BoundedRel(cols, valid, count,
+                              ovf | left.overflow | right.overflow)
     return _step_bounded_join(args[0], args[1], node.attrs, ctx)
 
 
 @REL_ENGINE.impl("rel_group_agg_col")
 def _i_rel_group(ctx, args, node):
+    a = node.attrs
+    mesh = getattr(ctx, "mesh", None)
+    rel = as_bounded(args[0])
+    if a.get("dist") == "row" and _shardable(mesh, rel.capacity):
+        # shard-local segment reduce + psum/pmax (cross-shard float sums
+        # re-associate: allclose to the dense aggregate, not bitwise)
+        key = rel.cols[a["key"]]
+        g = int(a["num_groups"])
+        cols = {a["key"]: jnp.arange(g, dtype=jnp.int32)}
+        for out_name, fn, col in a["aggs"]:
+            vals = None if fn == "count" else rel.cols[col]
+            r = sharded_group_agg(vals, key, g, rel.valid, fn, mesh)
+            if fn == "max":
+                r, _valid = r
+            cols[out_name] = r
+        count = sharded_group_agg(None, key, g, rel.valid, "count", mesh)
+        return BoundedRel(cols, count > 0, None, rel.overflow)
     return _step_rel_group_agg(args[0], node.attrs, ctx)
 
 
@@ -322,6 +381,12 @@ def _i_sel_mask(ctx, args, node):
 
 @GRAPH_ENGINE.impl("graph_expand_csr")
 def _i_expand_csr(ctx, args, node):
+    g, mesh = args[0], getattr(ctx, "mesh", None)
+    if (node.attrs.get("dist") == "block" and "blk_src" in g
+            and _shardable(mesh, g["indptr"].shape[0] - 1,
+                           g["blk_src"].shape[0])):
+        return sharded_expand(g, args[1],
+                              int(node.attrs.get("hops", 1)), mesh)
     return expand_frontier(args[0], args[1],
                            hops=int(node.attrs.get("hops", 1)))
 
@@ -341,6 +406,14 @@ def _i_expand_pallas(ctx, args, node):
 
 @GRAPH_ENGINE.impl("graph_pagerank_csr")
 def _i_pagerank_csr(ctx, args, node):
+    g, mesh = args[0], getattr(ctx, "mesh", None)
+    if (node.attrs.get("dist") == "block" and "blk_src" in g
+            and _shardable(mesh, g["indptr"].shape[0] - 1,
+                           g["blk_src"].shape[0])):
+        return sharded_pagerank(
+            g, int(node.attrs.get("iters", 10)),
+            float(node.attrs.get("damping", 0.85)),
+            args[1] if len(args) > 1 else None, mesh)
     return pagerank(args[0], iters=int(node.attrs.get("iters", 10)),
                     damping=float(node.attrs.get("damping", 0.85)),
                     personalization=args[1] if len(args) > 1 else None)
@@ -389,6 +462,13 @@ def _i_text_topk(ctx, args, node):
         # corpus, then mask + top-k (the bitwise reference the skipping
         # candidates must reproduce)
         return _topk_rel(*tfidf_topk_masked(args[0], args[1], args[2], k))
+    c, mesh = args[0], getattr(ctx, "mesh", None)
+    if (node.attrs.get("dist") == "doc" and "blk_doc_local" in c
+            and _shardable(mesh, c["doc_len"].shape[0],
+                           c["blk_doc_local"].shape[0])):
+        # shard-local score + local top-k, then a fixed-capacity candidate
+        # merge (bitwise = the dense top-k, incl. tie-breaking)
+        return _topk_rel(*sharded_tfidf_topk(c, args[1], k, mesh))
     return _topk_rel(*tfidf_topk(args[0], args[1], k))
 
 
@@ -438,6 +518,33 @@ def _i_xfer_pin(ctx, args, node):
 
 def _host_roundtrip(v):
     return jax.tree.map(lambda a: np.array(a, copy=True), v)
+
+
+@_XLA.impl("xfer_local", "xfer_repartition")
+def _i_xfer_local(ctx, args, node):
+    # layout-compatible handoff (and the repartition placement: the actual
+    # all-to-all executes *fused inside* the partitioned join's shard_map —
+    # this node is where the planner prices that traffic)
+    return args[0]
+
+
+@_XLA.impl("xfer_replicate")
+def _i_xfer_replicate(ctx, args, node):
+    # all-gather a data-partitioned value for dense consumers: realized as
+    # a replicated sharding constraint on the mesh (GSPMD inserts the
+    # gather); identity off-mesh
+    mesh = getattr(ctx, "mesh", None)
+    if mesh is None:
+        return args[0]
+    rep = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+    def pin(a):
+        try:
+            return jax.lax.with_sharding_constraint(a, rep)
+        except Exception:
+            return a
+
+    return jax.tree.map(pin, args[0])
 
 
 @_XLA.impl("xfer_spill")

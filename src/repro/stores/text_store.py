@@ -25,13 +25,23 @@ from ..core.ir import CorpusT, ValidationError
 class TextStore:
     """Host-side container: tokenized documents -> inverted-index COO."""
 
-    def __init__(self, doc_ids, term_ids, tf, doc_len, idf, vocab: int):
+    def __init__(self, doc_ids, term_ids, tf, doc_len, idf, vocab: int,
+                 shards: int = 1):
         self.doc_ids = np.asarray(doc_ids, np.int32)
         self.term_ids = np.asarray(term_ids, np.int32)
         self.tf = np.asarray(tf, np.float32)
         self.doc_len = np.asarray(doc_len, np.float32)
         self.idf = np.asarray(idf, np.float32)
         self.vocab = int(vocab)
+        self.shards = int(shards)
+        if self.shards < 1:
+            raise ValidationError(f"shards {self.shards} < 1")
+        if self.shards > 1 and self.doc_len.shape[0] % self.shards:
+            # document-range partitioning needs equal doc blocks: pad with
+            # empty docs (doc_len 1, no postings -> score exactly 0.0)
+            pad = (-self.doc_len.shape[0]) % self.shards
+            self.doc_len = np.concatenate(
+                [self.doc_len, np.ones(pad, np.float32)])
         self.n_docs = int(self.doc_len.shape[0])
         self.n_postings = int(self.doc_ids.shape[0])
         # document frequency per term — kept so incremental appends can
@@ -65,12 +75,20 @@ class TextStore:
         return (np.log((1.0 + n_docs) / (1.0 + df)) + 1.0)  # smoothed idf
 
     @classmethod
-    def from_docs(cls, docs: Sequence[Iterable[int]], vocab: int
-                  ) -> "TextStore":
+    def from_docs(cls, docs: Sequence[Iterable[int]], vocab: int,
+                  shards: int = 1) -> "TextStore":
         """``docs``: one iterable of term ids per document."""
         doc_ids, term_ids, tfs, doc_len, df = cls._index_docs(docs, vocab, 0)
         return cls(doc_ids, term_ids, tfs, doc_len, cls._idf(len(docs), df),
-                   vocab)
+                   vocab, shards=shards)
+
+    def with_shards(self, shards: int) -> "TextStore":
+        """This corpus re-declared as document-partitioned over ``shards``
+        mesh slices (pads the doc domain to a shard multiple)."""
+        out = TextStore(self.doc_ids, self.term_ids, self.tf,
+                        self.doc_len, self.idf, self.vocab, shards=shards)
+        out.version = self.version
+        return out
 
     def append(self, docs: Sequence[Iterable[int]]) -> "TextStore":
         """Append documents and reindex: postings extend (doc ids continue
@@ -96,15 +114,47 @@ class TextStore:
 
     @property
     def type(self) -> CorpusT:
-        return CorpusT(self.n_docs, self.vocab, self.n_postings)
+        return CorpusT(self.n_docs, self.vocab, self.n_postings,
+                       "doc" if self.shards > 1 else None)
 
     def payload(self) -> dict:
-        return {
+        out = {
             "doc_ids": jnp.asarray(self.doc_ids),
             "term_ids": jnp.asarray(self.term_ids),
             "tf": jnp.asarray(self.tf),
             "doc_len": jnp.asarray(self.doc_len),
             "idf": jnp.asarray(self.idf),
+        }
+        if self.shards > 1:
+            out.update(self._block_payload())
+        return out
+
+    def _block_payload(self) -> dict:
+        """Doc-block posting partition for shard-local scoring: shard d owns
+        docs ``[d*n/s, (d+1)*n/s)`` and their postings, padded per block to
+        the max block posting count.  Pad slots carry ``doc_local =
+        n_local`` (dropped by the scatter) and tf=0, and the stable
+        selection preserves per-doc posting order, so shard-local
+        segment sums stay bitwise equal to the dense scoring."""
+        s, n = self.shards, self.n_docs
+        n_local = n // s
+        block = self.doc_ids // n_local
+        counts = np.bincount(block, minlength=s)
+        p_max = max(int(counts.max()) if counts.size else 0, 1)
+        docl_b = np.full((s, p_max), n_local, np.int32)    # pad -> dropped
+        term_b = np.zeros((s, p_max), np.int32)
+        tf_b = np.zeros((s, p_max), np.float32)
+        order = np.argsort(block, kind="stable")
+        starts = np.concatenate([[0], np.cumsum(counts)])
+        for d in range(s):
+            sel = order[starts[d]:starts[d + 1]]
+            docl_b[d, :sel.size] = self.doc_ids[sel] - d * n_local
+            term_b[d, :sel.size] = self.term_ids[sel]
+            tf_b[d, :sel.size] = self.tf[sel]
+        return {
+            "blk_doc_local": jnp.asarray(docl_b.reshape(-1)),
+            "blk_term_ids": jnp.asarray(term_b.reshape(-1)),
+            "blk_tf": jnp.asarray(tf_b.reshape(-1)),
         }
 
     def query_vector(self, terms: Iterable[int]) -> np.ndarray:

@@ -502,3 +502,59 @@ def test_legacy_allow_pallas_still_maps_through():
     assert fwd.staged.options.engines == ("xla", "pallas")
     assert fwd.report
     assert any("attn_flash" in r["costs"] for r in fwd.report)
+
+
+# --------------------------------------------------------------------------
+# sharded stores in plan identity
+# --------------------------------------------------------------------------
+
+def _tri_store_plan(shards):
+    from repro.stores import ColumnStore
+    table = ColumnStore({"k": np.arange(64, dtype=np.int32),
+                         "v": np.ones(64, np.float32)})
+    if shards > 1:
+        table = table.with_shards(shards)
+    with Analysis(f"pid_s{shards}", CAT) as a:
+        t = a.op("rel_scan", a.bind("tweets", table))
+        f = a.op("rel_filter", t, col="v", cmp="ge", value=0.5)
+        g = a.op("rel_group_agg", f, key="k", num_groups=64,
+                 aggs=(("n", "count", None),))
+        a.store(a.op("col_tensor", g, col="n", dim="nodes"))
+    return a
+
+
+def test_sharding_round_trips_through_plan_id():
+    """Input partitioning and mesh shape are both part of plan identity.
+    Round trip: rebuilding the same program reproduces the id exactly, so
+    the only misses below come from the sharding declarations themselves."""
+    assert _tri_store_plan(1).plan_id(SYS) == _tri_store_plan(1).plan_id(SYS)
+    assert _tri_store_plan(8).plan_id(SYS) == _tri_store_plan(8).plan_id(SYS)
+    # per-input partitioning ("row" on the bound table type) changes the id
+    assert _tri_store_plan(1).plan_id(SYS) != _tri_store_plan(8).plan_id(SYS)
+    # mesh shape changes the id through the syscat fingerprint
+    sys8 = SystemCatalog(mesh_shape=(8, 1))
+    assert _tri_store_plan(8).plan_id(SYS) != _tri_store_plan(8).plan_id(sys8)
+
+
+def test_sharded_stores_miss_unsharded_cache_entry():
+    """A plan compiled for 1 device must not be served to the 8-way sharded
+    program (and vice versa): the staged cache sees four distinct keys for
+    {unsharded, sharded} x {(1,1) mesh, (8,1) mesh}."""
+    from repro.stores import store_engines
+    cache = PlanCache()
+    opts = PlanOptions(engines=resolve_engines(store_engines()))
+    sys8 = SystemCatalog(mesh_shape=(8, 1))
+    keys = {staged_plan_id(a.plan, CAT, sc, opts)
+            for a in (_tri_store_plan(1), _tri_store_plan(8))
+            for sc in (SYS, sys8)}
+    assert len(keys) == 4
+    s1 = compile_staged(_tri_store_plan(1).plan, CAT, SYS, cache=cache,
+                        options=opts)
+    s8 = compile_staged(_tri_store_plan(8).plan, CAT, sys8, cache=cache,
+                        options=opts)
+    assert s8 is not s1 and s8.plan_id != s1.plan_id
+    assert cache.stats()["misses"] == 2 and cache.stats()["hits"] == 0
+    # and the sharded compile is a hit only for its exact key
+    s8b = compile_staged(_tri_store_plan(8).plan, CAT, sys8, cache=cache,
+                        options=opts)
+    assert s8b is s8 and cache.stats()["hits"] == 1

@@ -197,3 +197,208 @@ def test_tfidf_agrees_with_reference(case):
     want = R.tfidf_scores_ref(tx.doc_ids, tx.term_ids, tx.tf, tx.doc_len,
                               tx.idf, q)
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# shard invariance: distributed kernels vs their dense versions
+# --------------------------------------------------------------------------
+# Guarantee per kernel (each asserted at exactly that strength below):
+#   bitwise   — broadcast join, PageRank, k-hop expand, top-k TF-IDF: the
+#               stable dst-block / doc-block selection preserves per-
+#               destination contribution order, and the top-k merge
+#               reproduces lax.top_k's (score desc, doc asc) tie-breaking;
+#   allclose  — group aggregate: the cross-shard psum re-associates float
+#               sums (max stays bitwise via pmax, but sum/mean do not);
+#   set-equal — partitioned join: the all_to_all lands output slots in
+#               shard-major order, so the match *set* and the exact global
+#               count agree while slot order differs.
+# The mesh spans every local device: 1 in the default tier-1 run (the
+# kernels still execute through shard_map), 8 under CI's forced host
+# platform — the same tests then exercise real cross-shard collectives.
+
+from repro.launch.mesh import make_cpu_mesh
+from repro.stores.graph_store import expand_frontier
+from repro.stores.sharded import (sharded_broadcast_join, sharded_count,
+                                  sharded_expand, sharded_group_agg,
+                                  sharded_pagerank, sharded_partitioned_join,
+                                  sharded_tfidf_topk)
+from repro.stores.text_store import tfidf_topk
+
+N_DEV = jax.local_device_count()
+MESH = make_cpu_mesh(N_DEV, 1)
+SHARD_SETTINGS = dict(max_examples=10, deadline=None)
+
+
+@st.composite
+def sharded_bjoin_case(draw):
+    per = draw(st.integers(1, 8))
+    n_right = draw(st.integers(1, 40))
+    universe = draw(st.integers(n_right, 80))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.RandomState(seed)
+    rkeys = rng.permutation(universe)[:n_right].astype(np.int32)  # unique
+    lkeys = rng.randint(0, universe, per * N_DEV).astype(np.int32)
+    return lkeys, rkeys
+
+
+@given(sharded_bjoin_case())
+@settings(**SHARD_SETTINGS)
+def test_sharded_broadcast_join_bitwise(case):
+    """Probe row-partitioned, build replicated: the probe-aligned output
+    is bitwise identical to the dense hash join."""
+    lkeys, rkeys = case
+    gi, gm = sharded_broadcast_join(jnp.asarray(lkeys), jnp.asarray(rkeys),
+                                    MESH)
+    wi, wm = hash_join(jnp.asarray(lkeys), jnp.asarray(rkeys))
+    np.testing.assert_array_equal(np.asarray(gm), np.asarray(wm))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+
+
+@st.composite
+def sharded_pjoin_case(draw):
+    nl = draw(st.integers(1, 4)) * N_DEV
+    nr = draw(st.integers(1, 3)) * N_DEV
+    universe = draw(st.integers(1, 16))        # small domain -> duplicates
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.RandomState(seed)
+    # capacity gives every shard headroom for the worst case (all matches
+    # hashing to one owner), so neither side can overflow and the global
+    # match set is uniquely determined
+    return (rng.randint(0, universe, nl).astype(np.int32),
+            rng.rand(nl) > 0.3,
+            rng.randint(0, universe, nr).astype(np.int32),
+            rng.rand(nr) > 0.3,
+            nl * nr * N_DEV)
+
+
+@given(sharded_pjoin_case())
+@settings(**SHARD_SETTINGS)
+def test_sharded_partitioned_join_set_equal(case):
+    """Co-partitioned join: slot order is shard-major (not the dense
+    order), but the set of matched (left row, right row) pairs and the
+    exact global count agree with the dense non-unique join."""
+    lk, lm, rk, rm, cap = case
+    gl, gr, gv, gc, go = sharded_partitioned_join(
+        jnp.asarray(lk), jnp.asarray(lm), jnp.asarray(rk), jnp.asarray(rm),
+        cap, MESH, bucket_cap=max(len(lk), len(rk)))
+    wl, wr, wv, wc, wo = hash_join_nonunique(
+        jnp.asarray(lk), jnp.asarray(lm), jnp.asarray(rk), jnp.asarray(rm),
+        cap)
+    assert int(gc) == int(wc) and not bool(go) and not bool(wo)
+    got = np.stack([np.asarray(gl)[np.asarray(gv)],
+                    np.asarray(gr)[np.asarray(gv)]], 1)
+    want = np.stack([np.asarray(wl)[np.asarray(wv)],
+                     np.asarray(wr)[np.asarray(wv)]], 1)
+    got = got[np.lexsort(got.T[::-1])]
+    want = want[np.lexsort(want.T[::-1])]
+    np.testing.assert_array_equal(got, want)
+
+
+@st.composite
+def sharded_group_case(draw):
+    groups = draw(st.integers(1, 12))
+    n = draw(st.integers(1, 10)) * N_DEV
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.RandomState(seed)
+    return (rng.randn(n).astype(np.float32),
+            rng.randint(0, groups, n).astype(np.int32),
+            groups,
+            rng.rand(n) > 0.4,
+            draw(st.sampled_from(["sum", "count", "mean", "max"])))
+
+
+@given(sharded_group_case())
+@settings(**SHARD_SETTINGS)
+def test_sharded_group_agg_allclose_and_count_exact(case):
+    """psum-merged segment aggregate: float sums re-associate across
+    shards (allclose); the psum'd valid-row count — the selectivity
+    feedback path — is integer-exact."""
+    vals, keys, groups, mask, fn = case
+    got = sharded_group_agg(jnp.asarray(vals), jnp.asarray(keys), groups,
+                            jnp.asarray(mask), fn, MESH)
+    want = group_agg(jnp.asarray(vals), jnp.asarray(keys), groups,
+                     jnp.asarray(mask), fn)
+    if fn == "max":
+        (got, gvalid), (want, wvalid) = got, want
+        np.testing.assert_array_equal(np.asarray(gvalid), np.asarray(wvalid))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    assert int(sharded_count(jnp.asarray(mask), MESH)) == int(mask.sum())
+
+
+@st.composite
+def sharded_graph_case(draw):
+    n = draw(st.integers(2, 40))
+    e = draw(st.integers(1, 150))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.RandomState(seed)
+    g = GraphStore.from_edges(rng.randint(0, n, e), rng.randint(0, n, e),
+                              n, symmetric=True).with_shards(N_DEV)
+    return (g, rng.rand(g.n_nodes).astype(np.float32),
+            draw(st.integers(1, 4)))
+
+
+@pytest.mark.skipif(
+    N_DEV < 2,
+    reason="block/doc partitioning needs >= 2 devices: with_shards(1) "
+           "carries no block payload")
+@given(sharded_graph_case())
+@settings(**SHARD_SETTINGS)
+def test_sharded_pagerank_bitwise(case):
+    """Dst-block SpMV with a per-iteration frontier all-gather: the stable
+    dst-block edge selection preserves per-destination contribution order,
+    so the sharded iteration is bitwise equal to the dense one."""
+    g, p, iters = case
+    pay = g.payload()
+    got = sharded_pagerank(pay, iters, 0.85, jnp.asarray(p), MESH)
+    want = pagerank(pay, iters=iters, damping=0.85,
+                    personalization=jnp.asarray(p))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.skipif(
+    N_DEV < 2,
+    reason="block/doc partitioning needs >= 2 devices: with_shards(1) "
+           "carries no block payload")
+@given(sharded_graph_case())
+@settings(**SHARD_SETTINGS)
+def test_sharded_expand_bitwise(case):
+    g, p, hops = case
+    pay = g.payload()
+    frontier = jnp.asarray((p > 0.7).astype(np.float32))
+    got = sharded_expand(pay, frontier, hops, MESH)
+    want = expand_frontier(pay, frontier, hops)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@st.composite
+def sharded_corpus_case(draw):
+    vocab = draw(st.integers(2, 24))
+    n_docs = draw(st.integers(1, 25))
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    rng = np.random.RandomState(seed)
+    docs = [rng.randint(0, vocab, rng.randint(1, 10)) for _ in range(n_docs)]
+    tx = TextStore.from_docs(docs, vocab).with_shards(N_DEV)
+    return tx, rng.randint(0, vocab, draw(st.integers(1, 5))), \
+        draw(st.integers(1, 40))
+
+
+@pytest.mark.skipif(
+    N_DEV < 2,
+    reason="block/doc partitioning needs >= 2 devices: with_shards(1) "
+           "carries no block payload")
+@given(sharded_corpus_case())
+@settings(**SHARD_SETTINGS)
+def test_sharded_topk_bitwise(case):
+    """Shard-local top-k + fixed-capacity merge ordered by (score desc,
+    doc asc): exactly lax.top_k's lowest-index tie-breaking, so ids,
+    scores, and valid flags are all bitwise equal to the dense top-k —
+    zero-score ties included."""
+    tx, q_terms, k = case
+    pay = tx.payload()
+    q = jnp.asarray(tx.query_vector(q_terms))
+    gi, gs, gv = sharded_tfidf_topk(pay, q, k, MESH)
+    wi, ws, wv = tfidf_topk(pay, q, k)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gs), np.asarray(ws))
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(wv))
