@@ -1,22 +1,67 @@
 """Shared benchmark utilities."""
 import time
+from contextlib import contextmanager
 
 import jax
 
 
-def time_fn(fn, *args, warmup=2, iters=5):
-    """Median wall time of a jitted callable, in seconds."""
-    for _ in range(warmup):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    ts = []
-    for _ in range(iters):
+class PhaseRecorder:
+    """Per-phase wall-time provenance for a benchmark run: how long each
+    named phase (warmup, measure, plan, trace, ...) actually took, emitted
+    into the benchmark's JSON report so the trajectory file carries its own
+    timing provenance alongside the results."""
+
+    def __init__(self):
+        self.phases: dict = {}     # name -> accumulated seconds
+
+    @contextmanager
+    def phase(self, name: str):
         t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        ts.append(time.perf_counter() - t0)
+        try:
+            yield
+        finally:
+            self.phases[name] = (self.phases.get(name, 0.0)
+                                 + time.perf_counter() - t0)
+
+    def as_dict(self) -> dict:
+        """Phase timings in milliseconds, JSON-ready."""
+        return {name: sec * 1e3 for name, sec in self.phases.items()}
+
+
+def time_fn(fn, *args, warmup=2, iters=5, phases=None):
+    """Median wall time of a jitted callable, in seconds."""
+    rec = phases if phases is not None else PhaseRecorder()
+    with rec.phase("warmup"):
+        for _ in range(warmup):
+            out = fn(*args)
+            jax.block_until_ready(out)
+    ts = []
+    with rec.phase("measure"):
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = fn(*args)
+            jax.block_until_ready(out)
+            ts.append(time.perf_counter() - t0)
     ts.sort()
     return ts[len(ts) // 2]
+
+
+def min_time(fn, *args, warmup=2, iters=10, phases=None):
+    """min-of-N wall time of a callable, in seconds: background noise in
+    shared CI runners is strictly additive, so the minimum is the clean
+    estimate of the path's cost.  Warmup and measure loops record into
+    ``phases`` (a :class:`PhaseRecorder`) when given."""
+    rec = phases if phases is not None else PhaseRecorder()
+    with rec.phase("warmup"):
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+    best = float("inf")
+    with rec.phase("measure"):
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def emit(rows):

@@ -47,7 +47,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit
+from benchmarks.common import PhaseRecorder, emit, min_time
 from repro.core.adil import Analysis
 
 # report path anchored at the repo root regardless of the invoking CWD (CI
@@ -232,11 +232,16 @@ def build_bounded_workload(rng, selectivity, *, tweets, hashtags, metrics):
     return a, inputs
 
 
+# sections the per-mode runs own inside the one shared artifact: a
+# top-level (selective) write must carry them along, never clobber them
+SECTIONS = ("bounded", "sharded", "placement")
+
+
 def merge_report(json_out, report, section=None):
-    """Write ``report`` to ``json_out``, preserving the other mode's
-    section: the bounded sweep lands under ``section="bounded"`` inside
-    whatever is already there; the selective sweep becomes the top level
-    but carries a prior "bounded" section along."""
+    """Write ``report`` to ``json_out``, preserving the other modes'
+    sections: a mode's sweep lands under its ``section`` inside whatever
+    is already there; the selective sweep becomes the top level but
+    carries all prior sections along."""
     base = {}
     if os.path.exists(json_out):
         try:
@@ -248,27 +253,73 @@ def merge_report(json_out, report, section=None):
         base[section] = report
         out = base
     else:
-        if "bounded" in base:
-            report = dict(report, bounded=base["bounded"])
-        out = report
+        carried = {k: base[k] for k in SECTIONS if k in base}
+        out = dict(report, **carried)
     with open(json_out, "w") as fh:
         json.dump(out, fh, indent=2)
 
 
-def t_min(f, inputs, warmup=2, iters=10):
-    """min-of-N: background noise in shared CI runners is strictly
-    additive, so the minimum is the clean estimate of each path's cost."""
-    for _ in range(warmup):
-        jax.block_until_ready(f(inputs))
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(f(inputs))
-        best = min(best, time.perf_counter() - t0)
-    return best
+def t_min(f, inputs, warmup=2, iters=10, phases=None):
+    """min-of-N timing (see ``benchmarks.common.min_time``); kept here as
+    the name other benchmarks import (``tri_store_sharded``)."""
+    return min_time(f, inputs, warmup=warmup, iters=iters, phases=phases)
+
+
+def run_traced(args, planned, inputs, phases):
+    """EXPLAIN ANALYZE smoke (``--trace-out``): run the plan eagerly
+    traced vs untraced (min-of-N on both sides), enforce the <= 5%
+    overhead guard, write the Chrome-trace + JSON-lines exports, and print
+    the merged ``predicted~ / observed=`` report."""
+    from repro.core.tracing import validate_chrome_trace
+
+    f_plain = lambda i: planned({}, i)            # noqa: E731
+    f_traced = lambda i: planned.analyze({}, i)   # noqa: E731
+    with phases.phase("trace"):
+        # interleaved min-of-N: clock drift / runner noise hits both paths
+        # equally instead of biasing whichever loop ran second
+        jax.block_until_ready(f_plain(inputs))
+        jax.block_until_ready(f_traced(inputs))
+        t_plain = t_traced = float("inf")
+        for _ in range(8):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f_plain(inputs))
+            t_plain = min(t_plain, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            jax.block_until_ready(f_traced(inputs))
+            t_traced = min(t_traced, time.perf_counter() - t0)
+    overhead = t_traced / t_plain - 1.0
+    ok = overhead <= 0.05
+    print(f"[tri_store_eff] eager untraced {t_plain * 1e3:.1f} ms vs "
+          f"traced {t_traced * 1e3:.1f} ms -> overhead {overhead:+.1%} "
+          f"({'ok' if ok else 'FAIL: > 5%'})")
+
+    trace = planned.last_run_trace
+    trace.to_chrome(args.trace_out)
+    jsonl = os.path.splitext(args.trace_out)[0] + ".jsonl"
+    trace.to_jsonl(jsonl)
+    with open(args.trace_out) as fh:
+        errs = validate_chrome_trace(json.load(fh))
+    if errs:
+        print(f"[tri_store_eff] FAIL: chrome trace schema: {errs[:5]}")
+        ok = False
+    print(f"[tri_store_eff] wrote {args.trace_out} "
+          f"({len(trace.spans)} spans; load at ui.perfetto.dev) and {jsonl}")
+
+    report = planned.explain(analyze=True)
+    head = report.index("  EXPLAIN ANALYZE")
+    print(report[head:])
+
+    return ok, {
+        "untraced_ms": t_plain * 1e3, "traced_ms": t_traced * 1e3,
+        "overhead": overhead, "overhead_ok": bool(ok),
+        "spans": len(trace.spans), "wall_ms": trace.wall_ms,
+        "sync_ms": trace.sync_ms, "chrome": args.trace_out, "jsonl": jsonl,
+        "collective_totals": trace.collective_totals(),
+    }
 
 
 def run_placement(args):
+    phases = PhaseRecorder()
     rng = np.random.RandomState(0)
     size = (dict(tweets=120_000, docs=6_000, hashtags=1024, edges=4_000,
                  vocab=256, terms_hi=6, iters=2) if args.smoke else
@@ -280,9 +331,10 @@ def run_placement(args):
     # is placement, and identical impls guarantee bitwise-equal results)
     engines = store_engines()
     syscat = SystemCatalog()
-    planned = analysis.compile(syscat, engines=engines, cache=False)
-    naive = analysis.compile(syscat, engines=engines, cache=False,
-                             rewrite_pipeline=NAIVE_PIPELINE)
+    with phases.phase("plan"):
+        planned = analysis.compile(syscat, engines=engines, cache=False)
+        naive = analysis.compile(syscat, engines=engines, cache=False,
+                                 rewrite_pipeline=NAIVE_PIPELINE)
 
     n_pin = sum(1 for r in planned.report
                 if r["pattern"] == "xfer_op" and r["chosen"] == "xfer_pin")
@@ -298,8 +350,8 @@ def run_placement(args):
     identical = np.array_equal(out_p, out_n)
     print(f"[tri_store_eff] bitwise-identical results: {identical}")
 
-    t_planned = t_min(fp, inputs)
-    t_naive = t_min(fn, inputs)
+    t_planned = t_min(fp, inputs, phases=phases)
+    t_naive = t_min(fn, inputs, phases=phases)
     speedup = t_naive / t_planned
     emit([
         ("tri_planned", t_planned * 1e6, f"speedup={speedup:.2f}x"),
@@ -314,10 +366,27 @@ def run_placement(args):
     if speedup < args.min_speedup:
         print(f"[tri_store_eff] FAIL: speedup {speedup:.2f}x < "
               f"{args.min_speedup:.1f}x")
+
+    report = {
+        "mode": "placement", "smoke": bool(args.smoke),
+        "min_speedup": args.min_speedup, "workload": size,
+        "planned_ms": t_planned * 1e3, "naive_ms": t_naive * 1e3,
+        "speedup": speedup, "identical": bool(identical),
+        "pinned": n_pin, "spilled": n_spill,
+    }
+    if args.trace_out:
+        trace_ok, trace_report = run_traced(args, planned, inputs, phases)
+        ok = ok and trace_ok
+        report["trace"] = trace_report
+    report["phases_ms"] = phases.as_dict()
+    report["ok"] = bool(ok)
+    merge_report(args.json_out, report, section="placement")
+    print(f"[tri_store_eff] wrote {args.json_out} (placement section)")
     return 0 if ok else 1
 
 
 def run_selective(args):
+    phases = PhaseRecorder()
     size = (dict(tweets=120_000, hashtags=16_384, edges=60_000,
                  vocab=512, terms_lo=10, terms_hi=18) if args.smoke else
             dict(tweets=250_000, hashtags=32_768, edges=150_000,
@@ -329,16 +398,17 @@ def run_selective(args):
     for sel in sweep:
         rng = np.random.RandomState(0)
         analysis, inputs = build_selective_workload(rng, sel, **size)
-        pushed = analysis.compile(syscat, engines=engines, cache=False)
-        unpushed = analysis.compile(syscat, engines=engines, cache=False,
-                                    rewrite_pipeline=UNPUSHED_PIPELINE)
+        with phases.phase("plan"):
+            pushed = analysis.compile(syscat, engines=engines, cache=False)
+            unpushed = analysis.compile(syscat, engines=engines, cache=False,
+                                        rewrite_pipeline=UNPUSHED_PIPELINE)
         impls = {n.impl for n in pushed.concrete.topo()}
         fp = jax.jit(lambda i, p=pushed: p({}, i))
         fu = jax.jit(lambda i, u=unpushed: u({}, i))
         identical = bool(np.array_equal(np.asarray(fp(inputs)),
                                         np.asarray(fu(inputs))))
-        tp = t_min(fp, inputs)
-        tu = t_min(fu, inputs)
+        tp = t_min(fp, inputs, phases=phases)
+        tu = t_min(fu, inputs, phases=phases)
         speedup = tu / tp
         rows.append({
             "selectivity": sel,
@@ -363,6 +433,7 @@ def run_selective(args):
         "benchmark": "tri_store_eff", "mode": "selective",
         "smoke": bool(args.smoke), "min_speedup": args.min_speedup,
         "workload": size, "sweep": rows, "ok": bool(ok),
+        "phases_ms": phases.as_dict(),
     }
     merge_report(args.json_out, report)
     print(f"[tri_store_eff] wrote {args.json_out}")
@@ -373,6 +444,7 @@ def run_selective(args):
 
 
 def run_bounded(args):
+    phases = PhaseRecorder()
     size = (dict(tweets=150_000, hashtags=4096, metrics=6) if args.smoke
             else dict(tweets=400_000, hashtags=8192, metrics=8))
     sweep = [0.01, 0.05, 0.10, 1.0]
@@ -382,9 +454,11 @@ def run_bounded(args):
     for sel in sweep:
         rng = np.random.RandomState(0)
         analysis, inputs = build_bounded_workload(rng, sel, **size)
-        compacted = analysis.compile(syscat, engines=engines, cache=False)
-        masked = analysis.compile(syscat, engines=engines, cache=False,
-                                  rewrite_pipeline=UNCOMPACTED_PIPELINE)
+        with phases.phase("plan"):
+            compacted = analysis.compile(syscat, engines=engines,
+                                         cache=False)
+            masked = analysis.compile(syscat, engines=engines, cache=False,
+                                      rewrite_pipeline=UNCOMPACTED_PIPELINE)
         # compact appears standalone or as a step inside a fused rel chain
         has_compact = any(
             "compact" in n.impl
@@ -394,8 +468,8 @@ def run_bounded(args):
         fm = jax.jit(lambda i, m=masked: m({}, i))
         identical = bool(np.array_equal(np.asarray(fc(inputs)),
                                         np.asarray(fm(inputs))))
-        tc = t_min(fc, inputs)
-        tm = t_min(fm, inputs)
+        tc = t_min(fc, inputs, phases=phases)
+        tm = t_min(fm, inputs, phases=phases)
         speedup = tm / tc
         rows.append({
             "selectivity": sel,
@@ -423,7 +497,7 @@ def run_bounded(args):
     report = {
         "mode": "bounded", "smoke": bool(args.smoke),
         "min_speedup": args.min_speedup, "workload": size,
-        "sweep": rows, "ok": bool(ok),
+        "sweep": rows, "ok": bool(ok), "phases_ms": phases.as_dict(),
     }
     merge_report(args.json_out, report, section="bounded")
     print(f"[tri_store_eff] wrote {args.json_out} (bounded section)")
@@ -445,6 +519,11 @@ def main(argv=None):
                          "masked-dense")
     ap.add_argument("--min-speedup", type=float, default=2.0)
     ap.add_argument("--json-out", default=DEFAULT_JSON_OUT)
+    ap.add_argument("--trace-out", default=None,
+                    help="EXPLAIN ANALYZE the placement plan: write a "
+                         "Chrome-trace JSON (Perfetto-loadable) here plus "
+                         "a .jsonl span log, and enforce the <= 5% traced "
+                         "overhead guard (placement mode only)")
     args = ap.parse_args(argv)
     if args.bounded:
         return run_bounded(args)

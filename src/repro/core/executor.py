@@ -15,6 +15,7 @@ applied at the logical level), with optional rematerialization policy.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass, field, replace
 from typing import Any, Callable, Optional
 
@@ -22,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from .buffering import BufferingDecision
-from .cost_model import CostModel
+from .cost_model import CostModel, raw_features
 from .engines import dispatch, get_engine, resolve_engines
 from .ir import FunctionCatalog, Plan, SystemCatalog
 from .physical import PHYS_OPS, PhysPlan
@@ -128,6 +129,7 @@ class ExecContext:
     mesh: Optional[Any] = None
     rules: ShardingRules = ShardingRules()
     interpret: bool = True          # pallas interpret mode (CPU container)
+    tracer: Optional[Any] = None    # core.tracing.Tracer; None = fast path
 
     def params_for(self, node):
         path = node.attrs.get("pp")
@@ -507,20 +509,75 @@ def _i_filter(ctx, args, node):
 # --------------------------------------------------------------------------
 
 def run_plan(pplan: PhysPlan, ctx: ExecContext, values: dict) -> tuple:
+    tracer = ctx.tracer
+    if tracer is None or not tracer.enabled:
+        # the untouched fast path: tracing off means zero per-op overhead
+        env = dict(values)
+        for n in pplan.topo():
+            opdef = PHYS_OPS.get(n.impl)
+            fn = dispatch(n.impl, opdef.backend if opdef else None)
+            if fn is None:
+                raise NotImplementedError(
+                    f"no engine implements {n.impl!r}")
+            env[n.id] = fn(ctx, [env[i] for i in n.inputs], n)
+        return tuple(env[o] for o in pplan.outputs)
+    return _run_plan_traced(pplan, ctx, values)
+
+
+def _run_plan_traced(pplan: PhysPlan, ctx: ExecContext, values: dict) -> tuple:
+    """run_plan with one span per physical op.  Span durations are dispatch
+    times (JAX async dispatch); the caller device-syncs once per run.
+    Device-side observations (BoundedRel counts, overflow flags) are
+    *deferred* into the tracer and fetched in one transfer at resolve()."""
+    from .tracing import tree_bytes, xfer_wire_bytes
+    tracer = ctx.tracer
+    n_data = 1
+    if ctx.mesh is not None and "data" in getattr(ctx.mesh, "axis_names", ()):
+        n_data = int(ctx.mesh.shape["data"])
     env = dict(values)
     for n in pplan.topo():
         opdef = PHYS_OPS.get(n.impl)
         fn = dispatch(n.impl, opdef.backend if opdef else None)
         if fn is None:
-            raise NotImplementedError(
-                f"no engine implements {n.impl!r}")
-        env[n.id] = fn(ctx, [env[i] for i in n.inputs], n)
+            raise NotImplementedError(f"no engine implements {n.impl!r}")
+        attrs = {"impl": n.impl,
+                 "engine": (opdef.backend or "xla") if opdef else "xla"}
+        if "dist" in n.attrs:
+            attrs["dist"] = n.attrs["dist"]
+        with tracer.span(n.id, "op", **attrs) as sp:
+            out = fn(ctx, [env[i] for i in n.inputs], n)
+            if n.impl.startswith("xfer_"):
+                kind = n.impl[len("xfer_"):]
+                payload = tree_bytes(out)
+                sp.attrs["xfer_kind"] = kind
+                sp.attrs["payload_bytes"] = payload
+                sp.attrs["wire_bytes"] = xfer_wire_bytes(kind, payload,
+                                                         n_data)
+            # duck-typed BoundedRel (avoids a core -> stores import): its
+            # count/overflow are device scalars — defer, don't fetch
+            if hasattr(out, "cols") and hasattr(out, "valid"):
+                tracer.defer("count", out.count)
+                tracer.defer("overflow", out.overflow)
+                sp.attrs["capacity"] = int(out.capacity)
+        env[n.id] = out
     return tuple(env[o] for o in pplan.outputs)
 
 
 # --------------------------------------------------------------------------
 # end-to-end: logical plan -> planned jittable function
 # --------------------------------------------------------------------------
+
+def _drain_counts(resolved, feedback) -> None:
+    """Fold already-resolved count-sink entries into a feedback store."""
+    for site, count, capacity in resolved:
+        if site and site[0] == "compact_overflow":
+            # a capacity bound dropped rows: flag the originating
+            # predicate site so re-planning backs off from compacting it
+            if count > 0:
+                feedback.note_overflow(tuple(site[1]))
+            continue
+        feedback.record(site, count, capacity)
+
 
 @dataclass
 class PlannedFunction:
@@ -544,6 +601,8 @@ class PlannedFunction:
     interpret: bool = True
     plan_id: str = ""
     staged: Optional[Any] = None     # StagedPhysicalPlan
+    last_run_trace: Optional[Any] = None   # RunTrace of the last analyze()
+    _predicted: Optional[dict] = None      # node id -> (seconds, features)
 
     @classmethod
     def from_staged(cls, staged, syscat: SystemCatalog, *,
@@ -554,8 +613,21 @@ class PlannedFunction:
                    syscat, rules or ShardingRules(), mesh, interpret,
                    staged.plan_id, staged)
 
-    def explain(self) -> str:
-        return self.staged.explain() if self.staged is not None else ""
+    def explain(self, analyze=False) -> str:
+        """The plan-time EXPLAIN report; with ``analyze`` the runtime
+        section merges in.  ``analyze=True`` uses the last :meth:`analyze`
+        run's trace; a RunTrace may also be passed directly."""
+        if self.staged is None:
+            return ""
+        trace = None
+        if analyze is not False and analyze is not None:
+            trace = analyze if hasattr(analyze, "spans") \
+                else self.last_run_trace
+            if trace is None:
+                raise ValueError(
+                    "explain(analyze=True) needs a run trace: call "
+                    ".analyze(params, inputs) first")
+        return self.staged.explain(analyze=trace)
 
     def __call__(self, params, inputs: dict, aux: Optional[dict] = None):
         ctx = ExecContext(root=params, scope=params, aux=aux or {},
@@ -564,28 +636,99 @@ class PlannedFunction:
         outs = run_plan(self.concrete, ctx, inputs)
         return outs if len(outs) > 1 else outs[0]
 
+    # -- EXPLAIN ANALYZE ----------------------------------------------------
+    def _predict_costs(self, cost_model=None) -> dict:
+        """Cost-model predictions per concrete node (memoized: the plan is
+        immutable, so one walk serves every analyze run)."""
+        if self._predicted is not None and cost_model is None:
+            return self._predicted
+        cm = cost_model or CostModel()
+        predicted: dict = {}
+
+        def visit(plan):
+            for n in plan.topo():
+                if n.subplan is not None:
+                    visit(n.subplan)
+                in_types = [plan.types.get(i) or plan.inputs.get(i)
+                            for i in n.inputs]
+                try:
+                    feats = raw_features(n.impl, in_types, n.attrs,
+                                         self.syscat)
+                    sec = cm.op_seconds(n.impl, in_types, n.attrs,
+                                        self.syscat)
+                except Exception:
+                    continue
+                predicted[n.id] = (float(sec), feats)
+
+        visit(self.concrete)
+        if cost_model is None:
+            object.__setattr__(self, "_predicted", predicted)
+        return predicted
+
+    def analyze(self, params, inputs: dict, aux: Optional[dict] = None, *,
+                feedback=None, cost_model=None):
+        """EXPLAIN ANALYZE execution: run the plan **eagerly** under a span
+        tracer, device-sync **once** at the end, and build a
+        :class:`~repro.core.tracing.RunTrace` pairing every physical node's
+        observed dispatch-ms / counts / xfer bytes with the cost model's
+        prediction.  The trace lands in ``self.last_run_trace`` (rendered by
+        ``explain(analyze=True)``) and its ``(impl, features, observed_s)``
+        samples feed ``core.feedback.fit_weights``.  With ``feedback``
+        given, the count sink also drains into it (superset of
+        :meth:`observe`).  Returns the plan outputs, like ``__call__``."""
+        from .tracing import RunTrace, Tracer
+        tracer = Tracer()
+        sink: list = []
+        run_aux = dict(aux or {})
+        run_aux["count_sink"] = sink
+        ctx = ExecContext(root=params, scope=params, aux=run_aux,
+                          mesh=self.mesh, rules=self.rules,
+                          interpret=self.interpret, tracer=tracer)
+        t0 = time.perf_counter()
+        with tracer.span("run", "run", plan_id=self.plan_id):
+            outs = run_plan(self.concrete, ctx, inputs)
+        with tracer.span("device_sync", "sync") as sync_sp:
+            jax.block_until_ready(outs)
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        # ONE device_get: deferred span attrs + the count sink together
+        counts = tracer.resolve(sink)
+        predicted = self._predict_costs(cost_model)
+        samples = []
+        for sp in tracer.spans:
+            hit = predicted.get(sp.name)
+            if hit is None:
+                continue
+            sec, feats = hit
+            sp.attrs["predicted_s"] = sec
+            samples.append((sp.attrs.get("impl", sp.name), feats, sp.dur))
+        trace = RunTrace(spans=list(tracer.spans), wall_ms=wall_ms,
+                         sync_ms=sync_sp.dur_ms if sync_sp else 0.0,
+                         counts=counts, samples=samples,
+                         plan_id=self.plan_id)
+        object.__setattr__(self, "last_run_trace", trace)
+        if feedback is not None:
+            _drain_counts(counts, feedback)
+        return outs if len(outs) > 1 else outs[0]
+
     def observe(self, params, inputs: dict, feedback,
                 aux: Optional[dict] = None):
         """Execute the plan **eagerly** while recording observed
         cardinalities: every ``rel_filter`` / ``sel_mask`` site reports its
         actual ``count / capacity`` into ``feedback`` (a
         ``SelectivityFeedback``).  BoundedRel makes the count a concrete
-        runtime value outside jit, so observation is one un-jitted run —
-        re-compiling with the same feedback object then re-plans under the
-        observed selectivities (and misses the plan cache by construction).
+        runtime value outside jit, so observation is one un-jitted run;
+        the accumulated device-side counts transfer in **one**
+        ``device_get`` at the end (``resolve_counts`` — the same transfer
+        point EXPLAIN ANALYZE uses), never per site.  Re-compiling with the
+        same feedback object then re-plans under the observed
+        selectivities (and misses the plan cache by construction).
         Returns the plan outputs, exactly like ``__call__``."""
+        from .tracing import resolve_counts
         sink: list = []
         out_aux = dict(aux or {})
         out_aux["count_sink"] = sink
         outs = self.__call__(params, inputs, aux=out_aux)
-        for site, count, capacity in sink:
-            if site and site[0] == "compact_overflow":
-                # a capacity bound dropped rows: flag the originating
-                # predicate site so re-planning backs off from compacting it
-                if float(count) > 0:
-                    feedback.note_overflow(tuple(site[1]))
-                continue
-            feedback.record(site, float(count), int(capacity))
+        _drain_counts(resolve_counts(sink), feedback)
         return outs
 
 

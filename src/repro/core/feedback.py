@@ -124,6 +124,32 @@ class SelectivityFeedback:
                 f"fp={self.fingerprint()[:8]})")
 
 
+def fit_weights(traces, model=None, *, min_samples: int = 3):
+    """Refit cost-model constants from accumulated EXPLAIN ANALYZE traces.
+
+    ``traces``: an iterable of :class:`~repro.core.tracing.RunTrace`
+    objects (``PlannedFunction.analyze`` accumulates one per run), whose
+    ``samples`` carry ``(impl, raw-feature dict, observed_seconds)`` rows —
+    exactly the §6.2 calibration dataset.  Impls with fewer than
+    ``min_samples`` observations are skipped (a one-point fit would just
+    memorize dispatch noise).  Returns the (given or fresh)
+    :class:`~repro.core.cost_model.CostModel` with refit per-impl Eq.-2
+    weights; its changed ``fingerprint()`` invalidates cached plans, so the
+    next compile re-selects candidates under the calibrated model — the
+    adaptive-execution roadmap item's refit half."""
+    from .cost_model import CostModel
+    by_impl: dict = {}
+    for tr in traces:
+        for impl, feats, sec in getattr(tr, "samples", ()) or ():
+            by_impl.setdefault(impl, []).append((impl, feats, float(sec)))
+    rows = [s for ss in by_impl.values() if len(ss) >= min_samples
+            for s in ss]
+    model = model if model is not None else CostModel()
+    if rows:
+        model.fit(rows)
+    return model
+
+
 def active_feedback() -> Optional[SelectivityFeedback]:
     """The feedback store installed for the current planning run."""
     return _ACTIVE.get()

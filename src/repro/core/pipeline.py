@@ -214,9 +214,14 @@ class StagedPhysicalPlan:
     trace: list
     options: PlanOptions
 
-    def explain(self) -> str:
+    def explain(self, analyze=None) -> str:
         """EXPLAIN-style report: per-pass wall time, node-count deltas, and
-        the cost model's candidate choices."""
+        the cost model's candidate choices.  With ``analyze`` (a
+        :class:`~repro.core.tracing.RunTrace` from
+        ``PlannedFunction.analyze``), an **EXPLAIN ANALYZE** section merges
+        the plan-time records with the runtime spans: one
+        ``predicted~ / observed=`` row per executed physical node, plus
+        observed counts and per-shard collective totals."""
         avail = next((r.info["engine_availability"] for r in self.trace
                       if "engine_availability" in r.info), None)
         eng = ",".join(
@@ -270,7 +275,48 @@ class StagedPhysicalPlan:
             costs = {k: f"{v:.3e}" for k, v in r["costs"].items()}
             lines.append(f"  choice [{r['pattern']}] -> {r['chosen']} "
                          f"({r.get('engine', '?')}) costs={costs}")
+        if analyze is not None:
+            lines.extend(self._explain_analyze(analyze))
         return "\n".join(lines)
+
+    def _explain_analyze(self, trace) -> list:
+        """Render one executed run against this plan: the runtime half of
+        the report.  Observed times are per-op *dispatch* ms (the run
+        device-syncs once, in the trailing ``device_sync`` span)."""
+        lines = [f"  EXPLAIN ANALYZE wall={trace.wall_ms:.2f} ms "
+                 f"(sync {trace.sync_ms:.2f} ms, "
+                 f"{len(trace.op_spans())} op spans, "
+                 f"plan {trace.plan_id[:12]})"]
+        for sp in trace.op_spans():
+            a = sp.attrs
+            pred = a.get("predicted_s")
+            pred_s = f"{pred:.3e}s" if pred is not None else "n/a"
+            row = (f"  analyze {sp.name:<18} [{a.get('impl', '?')}] "
+                   f"predicted~{pred_s} observed={sp.dur_ms:.3f}ms")
+            if "count" in a:
+                row += f" count={a['count']:.0f}/{a.get('capacity', '?')}"
+            if "overflow" in a:
+                row += f" overflow={bool(a['overflow'])}"
+            if "xfer_kind" in a:
+                row += (f" kind={a['xfer_kind']} "
+                        f"bytes={a.get('payload_bytes', 0)} "
+                        f"wire~{a.get('wire_bytes', 0.0):.0f}B")
+            if "dist" in a:
+                row += f" dist={a['dist']}"
+            if "coll_bytes" in a:
+                row += (f" coll={a.get('coll', 'collective')}"
+                        f"~{a['coll_bytes']:.0f}B")
+            lines.append(row)
+        totals = trace.collective_totals()
+        if totals:
+            lines.append("  collective totals (per shard):")
+            for kind in sorted(totals):
+                t = totals[kind]
+                lines.append(f"    {kind}: {t['ops']} ops, "
+                             f"{t['bytes']:.0f} B")
+        for site, count, cap in trace.counts:
+            lines.append(f"  observed {site}: count={count:.0f}/{cap}")
+        return lines
 
     @property
     def total_ms(self) -> float:

@@ -39,7 +39,7 @@ from ..models.decode import decode_step, decode_step_batched, init_cache
 from ..models.lm import CATALOG, LM
 from .admission import AdmissionController, bucket_len
 from .kv_pool import PagedKVPool
-from .metrics import RequestMetrics, ServingMetrics
+from .metrics import MetricsRegistry, RequestMetrics, ServingMetrics
 from .scheduler import ContinuousBatchScheduler
 
 
@@ -72,7 +72,8 @@ class AsyncServingRuntime:
                  plan_cache: Optional[PlanCache] = None,
                  plan_cache_dir: Optional[str] = None,
                  admission: Optional[AdmissionController] = None,
-                 use_prefill_kv: Optional[bool] = None):
+                 use_prefill_kv: Optional[bool] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -92,7 +93,12 @@ class AsyncServingRuntime:
                                 page_size=page_size, page_budget=page_budget)
         self.scheduler = ContinuousBatchScheduler(max_batch)
         self.admission = admission or AdmissionController()
-        self.metrics = ServingMetrics()
+        # one registry for both workload families: LM request series land
+        # as "lm.*" summaries, analytical runs (run_analysis) as
+        # "analytics.*" — a shared registry makes one report() cover both
+        self.registry = registry if registry is not None else \
+            MetricsRegistry()
+        self.metrics = ServingMetrics(registry=self.registry)
         self._prefill_fns: dict = {}     # bucket -> (PlannedFunction, jitted)
         self._jitted_by_plan: dict = {}  # plan_id -> jitted callable
         # the pool cache is donated (argnums 1): on backends with donation
@@ -330,6 +336,32 @@ class AsyncServingRuntime:
               timeout_s: float = 300.0) -> list:
         """Synchronous wrapper around :meth:`run`."""
         return asyncio.run(self.run(requests, timeout_s=timeout_s))
+
+    # -- analytical requests --------------------------------------------------
+    def run_analysis(self, planned, params, inputs: dict, *,
+                     analyze: bool = False, aux: Optional[dict] = None):
+        """Execute an analytical (tri-store) :class:`PlannedFunction`
+        through the runtime's shared metrics registry, so LM and
+        analytical traffic report into one place: wall time lands in the
+        ``analytics.run_ms`` summary, request/trace counts in
+        ``analytics.*`` counters.  With ``analyze=True`` the run goes
+        through ``PlannedFunction.analyze`` (EXPLAIN ANALYZE tracing) and
+        the trace's wall/sync split is recorded too."""
+        t0 = time.perf_counter()
+        if analyze:
+            outs = planned.analyze(params, inputs, aux=aux)
+            tr = planned.last_run_trace
+            self.registry.summary("analytics.trace_wall_ms").observe(
+                tr.wall_ms)
+            self.registry.summary("analytics.sync_ms").observe(tr.sync_ms)
+            self.registry.count("analytics.traced")
+        else:
+            outs = planned(params, inputs, aux=aux)
+            jax.block_until_ready(outs)
+        self.registry.summary("analytics.run_ms").observe(
+            (time.perf_counter() - t0) * 1e3)
+        self.registry.count("analytics.requests")
+        return outs
 
 
 def serve_sequential(model: LM, params, requests: Sequence[ServeRequest], *,

@@ -32,9 +32,11 @@ from .graph_store import (expand_frontier, expand_frontier_blockskip,
                           pagerank, triangle_count)
 from .masked_kernels import (compact_prefix_pallas, join_probe_pallas,
                              masked_segment_agg_pallas, masked_tfidf_pallas)
-from .sharded import (_shardable, sharded_broadcast_join, sharded_count,
-                      sharded_expand, sharded_group_agg, sharded_pagerank,
-                      sharded_partitioned_join, sharded_tfidf_topk)
+from .sharded import (_shardable, coll_all_to_all_bytes, coll_allgather_bytes,
+                      coll_psum_bytes, data_axis_size, sharded_broadcast_join,
+                      sharded_count, sharded_expand, sharded_group_agg,
+                      sharded_pagerank, sharded_partitioned_join,
+                      sharded_tfidf_topk)
 from .text_store import (masked_topk, tfidf_scores, tfidf_topk,
                          tfidf_topk_blockskip, tfidf_topk_masked)
 
@@ -45,10 +47,22 @@ _PALLAS = get_engine("pallas")
 def _record_count(ctx, site, count, capacity):
     """Cardinality observation hook: when the caller planted a
     ``count_sink`` (PlannedFunction.observe runs plans eagerly with one),
-    append this site's observed (count, capacity)."""
+    append this site's observed (count, capacity).  Counts stay on device
+    — the sink drains in **one** ``device_get`` per run
+    (``tracing.resolve_counts``), never per site."""
     sink = None if ctx is None else ctx.aux.get("count_sink")
     if sink is not None:
         sink.append((site, count, capacity))
+
+
+def _annotate(ctx, **attrs):
+    """Runtime-attribution hook: when the executor traced this op
+    (``ExecContext.tracer``), report which dist strategy the impl actually
+    dispatched and the per-shard collective bytes its kernel moves.  A
+    cheap no-op when tracing is off."""
+    tr = None if ctx is None else getattr(ctx, "tracer", None)
+    if tr is not None:
+        tr.annotate(**attrs)
 
 
 # --------------------------------------------------------------------------
@@ -85,6 +99,8 @@ def _step_rel_filter(tbl, attrs, ctx=None):
             # shard-local survivor count + psum: integer addition is
             # associative, so SelectivityFeedback sees the exact count
             count = sharded_count(out.valid, mesh)
+            _annotate(ctx, dist="row", coll="psum",
+                      coll_bytes=coll_psum_bytes(4, data_axis_size(mesh)))
         _record_count(ctx, tuple(site), count,
                       jnp.maximum(rel.count, 1))
     return out
@@ -249,6 +265,11 @@ def _i_rel_join(ctx, args, node):
             # probes its block against the full build (bitwise = dense)
             idx, matched = sharded_broadcast_join(
                 left.cols[a["left_on"]], right.cols[a["right_on"]], mesh)
+            n = data_axis_size(mesh)
+            build_b = sum(int(v.size) * v.dtype.itemsize
+                          for v in right.cols.values()) + right.capacity
+            _annotate(ctx, dist="broadcast", coll="all_gather",
+                      coll_bytes=coll_allgather_bytes(build_b, n))
             cols = _merge_join_cols(left, right, a["right_on"], idx)
             valid = left.valid & matched & right.valid[idx]
             return BoundedRel(cols, valid, None,
@@ -274,10 +295,18 @@ def _i_bounded_join(ctx, args, node):
             # bucket_cap buckets), then join shard-locally.  Output rows
             # land in shard-major slot order: same match *set* as the
             # dense join, different slot order.
+            bucket_cap = int(a.get("bucket_cap", 64))
             lidx, ridx, valid, count, ovf = sharded_partitioned_join(
                 left.cols[a["left_on"]], left.valid,
                 right.cols[a["right_on"]], right.valid,
-                cap, mesh, int(a.get("bucket_cap", 64)))
+                cap, mesh, bucket_cap)
+            n = data_axis_size(mesh)
+            # both sides route (n, bucket_cap) staged buckets of
+            # (key, slot-index, validity) rows through one all_to_all
+            staged = 2 * n * bucket_cap * (4 + 4 + 1)
+            _annotate(ctx, dist="partitioned", coll="all_to_all",
+                      coll_bytes=coll_all_to_all_bytes(staged, n),
+                      bucket_cap=bucket_cap)
             gathered = left.with_cols(
                 {k: v[lidx] for k, v in left.cols.items()})
             cols = _merge_join_cols(gathered, right, a["right_on"], ridx)
@@ -296,6 +325,9 @@ def _i_rel_group(ctx, args, node):
         # re-associate: allclose to the dense aggregate, not bitwise)
         key = rel.cols[a["key"]]
         g = int(a["num_groups"])
+        _annotate(ctx, dist="row", coll="psum",
+                  coll_bytes=coll_psum_bytes(
+                      (len(a["aggs"]) + 1) * g * 4, data_axis_size(mesh)))
         cols = {a["key"]: jnp.arange(g, dtype=jnp.int32)}
         for out_name, fn, col in a["aggs"]:
             vals = None if fn == "count" else rel.cols[col]
@@ -385,8 +417,12 @@ def _i_expand_csr(ctx, args, node):
     if (node.attrs.get("dist") == "block" and "blk_src" in g
             and _shardable(mesh, g["indptr"].shape[0] - 1,
                            g["blk_src"].shape[0])):
-        return sharded_expand(g, args[1],
-                              int(node.attrs.get("hops", 1)), mesh)
+        hops = int(node.attrs.get("hops", 1))
+        nodes_b = (g["indptr"].shape[0] - 1) * 4
+        _annotate(ctx, dist="block", coll="all_gather",
+                  coll_bytes=hops * coll_allgather_bytes(
+                      nodes_b, data_axis_size(mesh)))
+        return sharded_expand(g, args[1], hops, mesh)
     return expand_frontier(args[0], args[1],
                            hops=int(node.attrs.get("hops", 1)))
 
@@ -410,9 +446,13 @@ def _i_pagerank_csr(ctx, args, node):
     if (node.attrs.get("dist") == "block" and "blk_src" in g
             and _shardable(mesh, g["indptr"].shape[0] - 1,
                            g["blk_src"].shape[0])):
+        iters = int(node.attrs.get("iters", 10))
+        nodes_b = (g["indptr"].shape[0] - 1) * 4
+        _annotate(ctx, dist="block", coll="all_gather",
+                  coll_bytes=iters * coll_allgather_bytes(
+                      nodes_b, data_axis_size(mesh)))
         return sharded_pagerank(
-            g, int(node.attrs.get("iters", 10)),
-            float(node.attrs.get("damping", 0.85)),
+            g, iters, float(node.attrs.get("damping", 0.85)),
             args[1] if len(args) > 1 else None, mesh)
     return pagerank(args[0], iters=int(node.attrs.get("iters", 10)),
                     damping=float(node.attrs.get("damping", 0.85)),
@@ -468,6 +508,9 @@ def _i_text_topk(ctx, args, node):
                            c["blk_doc_local"].shape[0])):
         # shard-local score + local top-k, then a fixed-capacity candidate
         # merge (bitwise = the dense top-k, incl. tie-breaking)
+        n = data_axis_size(mesh)
+        _annotate(ctx, dist="doc", coll="all_gather",
+                  coll_bytes=coll_allgather_bytes(n * k * 8, n))
         return _topk_rel(*sharded_tfidf_topk(c, args[1], k, mesh))
     return _topk_rel(*tfidf_topk(args[0], args[1], k))
 

@@ -52,6 +52,34 @@ def _shardable(mesh, *lengths) -> bool:
 
 
 # --------------------------------------------------------------------------
+# collective-byte attribution (the runtime side of the cost model's wire-
+# byte formulas: what each kernel's collectives actually move, per shard)
+# --------------------------------------------------------------------------
+
+
+def coll_allgather_bytes(nbytes: float, n: int) -> float:
+    """Per-shard wire bytes of all-gathering an ``nbytes`` value that is
+    partitioned over ``n`` shards: each receives the other (n-1)/n."""
+    n = max(1, int(n))
+    return float(nbytes) * (n - 1) / n
+
+
+def coll_psum_bytes(nbytes: float, n: int) -> float:
+    """Per-shard wire bytes of a tree all-reduce over an ``nbytes``-sized
+    replicated result: log2(n) exchange rounds."""
+    import math
+    return float(nbytes) * math.log2(max(int(n), 2))
+
+
+def coll_all_to_all_bytes(nbytes: float, n: int) -> float:
+    """Per-shard wire bytes of an all-to-all over staged buckets totalling
+    ``nbytes`` per shard: every shard keeps its own 1/n and ships the
+    rest."""
+    n = max(1, int(n))
+    return float(nbytes) * (n - 1) / n
+
+
+# --------------------------------------------------------------------------
 # filter count (the psum feedback path)
 # --------------------------------------------------------------------------
 

@@ -378,3 +378,39 @@ def test_runtime_rejects_oversized_and_sheds_overload(rng):
         rt.submit(ServeRequest(
             i, tuple(rng.randint(0, cfg.vocab, 8).tolist()), 4))
     assert rt.metrics.rejected >= 2      # "big" + queue-full sheds
+
+
+def test_run_analysis_shares_metrics_registry(rng):
+    """Analytical (tri-store) requests report into the same registry as
+    the LM serving series: one report covers both workload families."""
+    from repro.core.adil import Analysis
+    from repro.stores import ColumnStore, store_engines
+    from repro.core.ir import standard_catalog
+
+    _, model, params = smoke_model()
+    rt = AsyncServingRuntime(model, params, max_batch=1, max_seq=32,
+                             plan_cache=PlanCache())
+    table = ColumnStore({"k": np.arange(64, dtype=np.int32),
+                         "v": rng.rand(64).astype(np.float32)})
+    with Analysis("serve_analytics", standard_catalog()) as a:
+        t = a.op("rel_scan", a.bind("t", table))
+        g = a.op("rel_group_agg", t, key="k", num_groups=64,
+                 aggs=(("s", "sum", "v"),))
+        a.store(a.op("col_tensor", g, col="s", dim="nodes"))
+    planned = a.compile(SystemCatalog(), engines=store_engines(),
+                        cache=False)
+    inputs = {"t": table.payload()}
+
+    plain = rt.run_analysis(planned, {}, inputs)
+    traced = rt.run_analysis(planned, {}, inputs, analyze=True)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(traced))
+
+    reg = rt.registry
+    assert reg.counters["analytics.requests"] == 2
+    assert reg.counters["analytics.traced"] == 1
+    assert reg.summary("analytics.run_ms").count == 2
+    assert reg.summary("analytics.trace_wall_ms").count == 1
+    # LM series live in the same registry next to the analytics series
+    assert "lm.ttft_s" in reg.summaries
+    rep = reg.report()
+    assert "analytics.run_ms" in rep and "lm.ttft_s" in rep
