@@ -1,8 +1,13 @@
 """Shared benchmark utilities."""
+import json
+import os
+import subprocess
 import time
 from contextlib import contextmanager
 
 import jax
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 class PhaseRecorder:
@@ -68,3 +73,84 @@ def emit(rows):
     """Print ``name,us_per_call,derived`` CSV rows."""
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+# --------------------------------------------------------------------------
+# report provenance + the shared BENCH_tri_store.json merge
+# --------------------------------------------------------------------------
+
+
+def git_sha(short: int = 12) -> str:
+    """The commit this run measured: CI's ``GITHUB_SHA`` when set, else
+    ``git rev-parse HEAD``, else ``"unknown"`` (a bare tarball checkout
+    still benchmarks, it just can't be compared across commits)."""
+    sha = os.environ.get("GITHUB_SHA", "")
+    if not sha:
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+                capture_output=True, text=True, timeout=10,
+            ).stdout.strip()
+        except Exception:
+            sha = ""
+    return sha[:short] if sha else "unknown"
+
+
+def provenance(mesh_shape=None) -> dict:
+    """What produced this report: commit, device fleet, platform.  Stamped
+    into every section ``merge_report`` writes — the history gate refuses
+    to compare records whose provenance differs (an 8-device sweep is not
+    a regression of a 1-device sweep)."""
+    out = {
+        "git_sha": git_sha(),
+        "devices": jax.device_count(),
+        "platform": jax.default_backend(),
+        "cpu_count": os.cpu_count(),
+        "recorded_at": time.time(),
+    }
+    if mesh_shape is not None:
+        out["mesh_shape"] = list(mesh_shape)
+    return out
+
+
+# sections the per-mode runs own inside the one shared artifact: a
+# top-level (selective) write must carry them along, never clobber them
+SECTIONS = ("bounded", "sharded", "placement")
+
+
+def merge_report(json_out, report, section=None, mesh_shape=None,
+                 history_out=None):
+    """Write ``report`` to ``json_out``, preserving the other modes'
+    sections: a mode's sweep lands under its ``section`` inside whatever
+    is already there; the selective sweep becomes the top level but
+    carries all prior sections along.  Every write stamps provenance
+    (git SHA, device count, mesh shape) into the section and appends a
+    one-line record to the benchmark history JSONL
+    (``BENCH_history.jsonl`` next to ``json_out`` unless ``history_out``
+    overrides; the CI regression gate diffs consecutive histories)."""
+    report = dict(report)
+    report["provenance"] = provenance(mesh_shape)
+    base = {}
+    if os.path.exists(json_out):
+        try:
+            with open(json_out) as fh:
+                base = json.load(fh)
+        except Exception:
+            base = {}
+    if section is not None:
+        base[section] = report
+        out = base
+    else:
+        carried = {k: base[k] for k in SECTIONS if k in base}
+        out = dict(report, **carried)
+    with open(json_out, "w") as fh:
+        json.dump(out, fh, indent=2)
+    try:
+        from benchmarks.history import append_record
+        if history_out is None:
+            history_out = os.path.join(
+                os.path.dirname(os.path.abspath(json_out)),
+                "BENCH_history.jsonl")
+        append_record(history_out, section or "selective", report)
+    except Exception as exc:      # history is telemetry, never a failure
+        print(f"[common] history append skipped: {exc!r}")

@@ -1,0 +1,198 @@
+"""Benchmark history + the CI perf-regression gate.
+
+Every ``merge_report`` write appends one git-SHA-stamped JSONL record to
+``BENCH_history.jsonl`` — section name, provenance (commit, device count,
+mesh shape, platform, smoke flag), and the section's *pinned metrics*
+(the wall-times the guard bars already watch).  The ``check`` subcommand
+compares the newest record per section against the previous run's history
+artifact and fails on material slowdown:
+
+    python -m benchmarks.history check \
+        --prev prev/BENCH_history.jsonl --new BENCH_history.jsonl \
+        --threshold 0.20
+
+Records are only compared when their provenance matches (same smoke flag,
+same device count): an 8-device sweep regressing against a 1-device sweep
+would be noise, not signal.  A missing previous artifact (first run,
+expired artifact) passes with a notice — the gate bootstraps itself.
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def extract_metrics(section: str, report: dict) -> dict:
+    """The pinned wall-time metrics per section: the *optimized* path's
+    time, keyed so sweeps compare pointwise (per selectivity / per size),
+    not as an average that hides a regressed point."""
+    out = {}
+    if section == "placement":
+        if "planned_ms" in report:
+            out["planned_ms"] = float(report["planned_ms"])
+    elif section == "selective":
+        for row in report.get("sweep", ()):
+            out[f"pushed_ms@{row['selectivity']:g}"] = \
+                float(row["pushed_ms"])
+    elif section == "bounded":
+        for row in report.get("sweep", ()):
+            out[f"compacted_ms@{row['selectivity']:g}"] = \
+                float(row["compacted_ms"])
+    elif section == "sharded":
+        for row in report.get("sweep", ()):
+            out[f"sharded_ms@{row['tweets']}"] = float(row["sharded_ms"])
+    return out
+
+
+def append_record(path: str, section: str, report: dict) -> dict:
+    """Append one history record for a section run; returns the record."""
+    prov = report.get("provenance", {})
+    rec = {
+        "record": "bench",
+        "section": section,
+        "ts": prov.get("recorded_at", time.time()),
+        "git_sha": prov.get("git_sha", "unknown"),
+        "devices": prov.get("devices"),
+        "mesh_shape": prov.get("mesh_shape"),
+        "platform": prov.get("platform"),
+        "smoke": report.get("smoke"),
+        "ok": report.get("ok"),
+        "metrics": extract_metrics(section, report),
+    }
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    with open(path, "a") as fh:
+        fh.write(json.dumps(rec) + "\n")
+    return rec
+
+
+def load_history(path: str) -> list:
+    """All bench records in file order (corrupt lines skipped)."""
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except Exception:
+                continue
+            if rec.get("record") == "bench":
+                out.append(rec)
+    return out
+
+
+def latest_per_section(records: list) -> dict:
+    out = {}
+    for rec in records:            # file order: later lines win
+        out[rec["section"]] = rec
+    return out
+
+
+def _comparable(prev: dict, new: dict) -> bool:
+    return (prev.get("smoke") == new.get("smoke")
+            and prev.get("devices") == new.get("devices")
+            and prev.get("platform") == new.get("platform"))
+
+
+def compare(prev_records: list, new_records: list,
+            threshold: float = 0.20) -> dict:
+    """Newest-per-section diff: every shared pinned metric whose new time
+    exceeds ``(1 + threshold) * previous`` is a regression.  Sections or
+    metrics present on only one side, and provenance-mismatched pairs,
+    are skipped (reported, not failed)."""
+    prev_by = latest_per_section(prev_records)
+    new_by = latest_per_section(new_records)
+    regressions, compared, skipped = [], [], []
+    for section, new in sorted(new_by.items()):
+        prev = prev_by.get(section)
+        if prev is None:
+            skipped.append((section, "no previous record"))
+            continue
+        if not _comparable(prev, new):
+            skipped.append((section, "provenance mismatch "
+                            f"(prev {prev.get('smoke')}/{prev.get('devices')}"
+                            f"dev vs new {new.get('smoke')}/"
+                            f"{new.get('devices')}dev)"))
+            continue
+        for name, new_ms in sorted(new.get("metrics", {}).items()):
+            prev_ms = prev.get("metrics", {}).get(name)
+            if prev_ms is None or prev_ms <= 0:
+                continue
+            ratio = new_ms / prev_ms
+            row = {"section": section, "metric": name,
+                   "prev_ms": prev_ms, "new_ms": new_ms, "ratio": ratio,
+                   "prev_sha": prev.get("git_sha"),
+                   "new_sha": new.get("git_sha")}
+            compared.append(row)
+            if ratio > 1.0 + threshold:
+                regressions.append(row)
+    return {"regressions": regressions, "compared": compared,
+            "skipped": skipped, "threshold": threshold}
+
+
+def check(prev_path: str, new_path: str, threshold: float = 0.20) -> int:
+    """The CI gate: exit 1 on any regression past the threshold.  Missing
+    or empty previous history passes (bootstrap), as does zero comparable
+    metrics — the gate only fails on *evidence* of a slowdown."""
+    prev = load_history(prev_path)
+    new = load_history(new_path)
+    if not new:
+        print(f"[history] FAIL: no new records in {new_path}")
+        return 1
+    if not prev:
+        print(f"[history] no previous history at {prev_path}: "
+              f"bootstrap run, gate passes")
+        return 0
+    result = compare(prev, new, threshold)
+    for section, why in result["skipped"]:
+        print(f"[history] skip {section}: {why}")
+    for row in result["compared"]:
+        mark = "REGRESSION" if row in result["regressions"] else "ok"
+        print(f"[history] {row['section']}/{row['metric']}: "
+              f"{row['prev_ms']:.1f} ms ({row['prev_sha']}) -> "
+              f"{row['new_ms']:.1f} ms ({row['new_sha']}) = "
+              f"{row['ratio']:.2f}x  {mark}")
+    if result["regressions"]:
+        print(f"[history] FAIL: {len(result['regressions'])} metric(s) "
+              f"slower than {1 + threshold:.2f}x the previous run")
+        return 1
+    if not result["compared"]:
+        print("[history] no comparable metrics (all skipped): gate passes")
+    else:
+        print(f"[history] {len(result['compared'])} metric(s) within "
+              f"{1 + threshold:.2f}x: gate passes")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    ap_app = sub.add_parser("append", help="append a record from a report "
+                            "JSON section (what merge_report does inline)")
+    ap_app.add_argument("--history", default="BENCH_history.jsonl")
+    ap_app.add_argument("--report", required=True)
+    ap_app.add_argument("--section", required=True)
+    ap_chk = sub.add_parser("check", help="compare against the previous "
+                            "run's history; exit 1 on regression")
+    ap_chk.add_argument("--prev", required=True)
+    ap_chk.add_argument("--new", required=True)
+    ap_chk.add_argument("--threshold", type=float, default=0.20)
+    args = ap.parse_args(argv)
+    if args.cmd == "append":
+        with open(args.report) as fh:
+            doc = json.load(fh)
+        section_report = doc.get(args.section, doc)
+        rec = append_record(args.history, args.section, section_report)
+        print(f"[history] appended {args.section} @ {rec['git_sha']} "
+              f"to {args.history}")
+        return 0
+    return check(args.prev, args.new, args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -232,31 +232,10 @@ def build_bounded_workload(rng, selectivity, *, tweets, hashtags, metrics):
     return a, inputs
 
 
-# sections the per-mode runs own inside the one shared artifact: a
-# top-level (selective) write must carry them along, never clobber them
-SECTIONS = ("bounded", "sharded", "placement")
-
-
-def merge_report(json_out, report, section=None):
-    """Write ``report`` to ``json_out``, preserving the other modes'
-    sections: a mode's sweep lands under its ``section`` inside whatever
-    is already there; the selective sweep becomes the top level but
-    carries all prior sections along."""
-    base = {}
-    if os.path.exists(json_out):
-        try:
-            with open(json_out) as fh:
-                base = json.load(fh)
-        except Exception:
-            base = {}
-    if section is not None:
-        base[section] = report
-        out = base
-    else:
-        carried = {k: base[k] for k in SECTIONS if k in base}
-        out = dict(report, **carried)
-    with open(json_out, "w") as fh:
-        json.dump(out, fh, indent=2)
+# merge_report / SECTIONS moved to benchmarks.common (provenance stamping
+# + history append live there now); re-exported here because
+# tri_store_sharded and older tooling import them from this module
+from benchmarks.common import SECTIONS, merge_report  # noqa: E402,F401
 
 
 def t_min(f, inputs, warmup=2, iters=10, phases=None):
@@ -272,8 +251,13 @@ def run_traced(args, planned, inputs, phases):
     the merged ``predicted~ / observed=`` report."""
     from repro.core.tracing import validate_chrome_trace
 
+    recorder = None
+    if getattr(args, "flight_dir", None):
+        from repro.core.ledger import FlightRecorder
+        recorder = FlightRecorder(capacity=32, dump_dir=args.flight_dir)
+
     f_plain = lambda i: planned({}, i)            # noqa: E731
-    f_traced = lambda i: planned.analyze({}, i)   # noqa: E731
+    f_traced = lambda i: planned.analyze({}, i, recorder=recorder)  # noqa: E731
     with phases.phase("trace"):
         # interleaved min-of-N: clock drift / runner noise hits both paths
         # equally instead of biasing whichever loop ran second
@@ -309,22 +293,35 @@ def run_traced(args, planned, inputs, phases):
     head = report.index("  EXPLAIN ANALYZE")
     print(report[head:])
 
-    return ok, {
+    out = {
         "untraced_ms": t_plain * 1e3, "traced_ms": t_traced * 1e3,
         "overhead": overhead, "overhead_ok": bool(ok),
         "spans": len(trace.spans), "wall_ms": trace.wall_ms,
         "sync_ms": trace.sync_ms, "chrome": args.trace_out, "jsonl": jsonl,
         "collective_totals": trace.collective_totals(),
     }
+    if recorder is not None:
+        # end-of-run dump: the flight ring (every analyze's RunTrace
+        # summary + any overflow trips) lands as a JSONL artifact
+        dump = recorder.trip("run_complete", {"benchmark": "tri_store_eff"})
+        out["flight"] = {"events": len(recorder), "trips":
+                         [r for r, _ in recorder.trips], "dump": dump}
+        print(f"[tri_store_eff] flight recorder: {len(recorder)} events, "
+              f"dumped to {dump}")
+    return ok, out
 
 
 def run_placement(args):
+    from repro.core.ledger import default_ledger
     phases = PhaseRecorder()
     rng = np.random.RandomState(0)
     size = (dict(tweets=120_000, docs=6_000, hashtags=1024, edges=4_000,
                  vocab=256, terms_hi=6, iters=2) if args.smoke else
             dict(tweets=250_000, docs=30_000, hashtags=2048, edges=20_000,
                  vocab=512, terms_hi=6, iters=3))
+    # clean accounting baseline: the only registrations after this reset
+    # are this workload's three store payloads (+ plan-cache inserts)
+    default_ledger().reset()
     analysis, inputs = build_workload(rng, **size)
 
     # identical engine set for both paths (no pallas: the point under test
@@ -374,6 +371,33 @@ def run_placement(args):
         "speedup": speedup, "identical": bool(identical),
         "pinned": n_pin, "spilled": n_spill,
     }
+    # ledger gate: the cost model's capacity-derived byte prediction must
+    # land within 2x of the measured payload bytes for *every* store
+    ledger = default_ledger()
+    ledger_rows = []
+    ledger_ok = True
+    for entry, pred, act, ratio in ledger.predicted_vs_actual():
+        within = ratio is not None and 0.5 <= ratio <= 2.0
+        ledger_ok &= within
+        ledger_rows.append({
+            "owner": "/".join(map(str, entry.owner)), "kind": entry.kind,
+            "predicted_bytes": pred, "actual_bytes": act,
+            "ratio": ratio, "within_2x": bool(within)})
+        print(f"[tri_store_eff] ledger {entry.kind}: predicted "
+              f"{pred / 1e6:.2f} MB, actual {act / 1e6:.2f} MB "
+              f"({ratio:.2f}x) {'ok' if within else 'FAIL: outside 2x'}")
+    if not ledger_rows:
+        ledger_ok = False
+        print("[tri_store_eff] FAIL: no ledger predictions registered")
+    print(ledger.report())
+    ok = ok and ledger_ok
+    report["ledger"] = {
+        "ok": bool(ledger_ok), "rows": ledger_rows,
+        "total_bytes": ledger.total_bytes(),
+        "peak_bytes": ledger.peak_bytes,
+        "leaks": [reason for reason, _e in ledger.leaks()],
+    }
+
     if args.trace_out:
         trace_ok, trace_report = run_traced(args, planned, inputs, phases)
         ok = ok and trace_ok
@@ -524,6 +548,10 @@ def main(argv=None):
                          "Chrome-trace JSON (Perfetto-loadable) here plus "
                          "a .jsonl span log, and enforce the <= 5% traced "
                          "overhead guard (placement mode only)")
+    ap.add_argument("--flight-dir", default=None,
+                    help="flight-recorder dump directory: traced runs "
+                         "record RunTrace summaries into a bounded ring "
+                         "and dump JSONL here on overflow / completion")
     args = ap.parse_args(argv)
     if args.bounded:
         return run_bounded(args)

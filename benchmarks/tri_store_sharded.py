@@ -223,7 +223,8 @@ def main(argv=None):
         "devices": n_dev, "cpu_count": os.cpu_count(),
         "min_speedup": args.min_speedup, "sweep": rows, "ok": bool(ok),
     }
-    merge_report(args.json_out, report, section="sharded")
+    merge_report(args.json_out, report, section="sharded",
+                 mesh_shape=tuple(mesh.devices.shape))
     print(f"[tri_store_sharded] wrote {args.json_out} (sharded section)")
     emit([(f"tri_sharded_{r['tweets']}", r["sharded_ms"] * 1e3,
            f"vs_replicated={r['speedup_vs_replicated']:.2f}x")

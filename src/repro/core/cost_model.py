@@ -723,3 +723,31 @@ def select_candidates(pp: PhysPlan, syscat: SystemCatalog,
 
     visit(pp)
     return choices, report
+
+
+# --------------------------------------------------------------------------
+# Resident-byte prediction (ledger predicted-vs-actual)
+# --------------------------------------------------------------------------
+
+
+def predicted_resident_bytes(t) -> Optional[int]:
+    """Cost-model expectation for the *device-resident* bytes a store holds
+    for a value of type ``t`` — ``bytesize()`` (capacity-derived: padded
+    columns + validity, CSR arrays, COO postings) plus the shard-local
+    block payloads a partitioned store keeps alongside the replicated
+    structure.  The MemoryLedger compares this against the measured
+    ``tree_bytes`` of the actual payload; the tri-store benchmark enforces
+    2x agreement."""
+    base = t.bytesize() if hasattr(t, "bytesize") else None
+    if base is None:
+        return None
+    extra = 0
+    if isinstance(t, GraphT) and getattr(t, "partitioning", None):
+        # dst-block payload: blk_src + blk_dst_local (int32) + blk_weights
+        # (f32), each padded to the max per-block edge count ~ edges total
+        extra = t.edges * 12
+    elif isinstance(t, CorpusT) and getattr(t, "partitioning", None):
+        # doc-block payload: blk_doc_local + blk_term_ids (int32) + blk_tf
+        # (f32) padded per partition ~ postings total
+        extra = t.postings * 12
+    return int(base + extra)

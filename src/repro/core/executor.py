@@ -666,7 +666,7 @@ class PlannedFunction:
         return predicted
 
     def analyze(self, params, inputs: dict, aux: Optional[dict] = None, *,
-                feedback=None, cost_model=None):
+                feedback=None, cost_model=None, recorder=None):
         """EXPLAIN ANALYZE execution: run the plan **eagerly** under a span
         tracer, device-sync **once** at the end, and build a
         :class:`~repro.core.tracing.RunTrace` pairing every physical node's
@@ -675,7 +675,11 @@ class PlannedFunction:
         ``explain(analyze=True)``) and its ``(impl, features, observed_s)``
         samples feed ``core.feedback.fit_weights``.  With ``feedback``
         given, the count sink also drains into it (superset of
-        :meth:`observe`).  Returns the plan outputs, like ``__call__``."""
+        :meth:`observe`).  With ``recorder`` (a
+        :class:`~repro.core.ledger.FlightRecorder`), the run's trace summary
+        lands in the ring, and two incident triggers trip a dump: an
+        executor exception, and any BoundedRel overflow observed in the
+        resolved counts.  Returns the plan outputs, like ``__call__``."""
         from .tracing import RunTrace, Tracer
         tracer = Tracer()
         sink: list = []
@@ -685,10 +689,16 @@ class PlannedFunction:
                           mesh=self.mesh, rules=self.rules,
                           interpret=self.interpret, tracer=tracer)
         t0 = time.perf_counter()
-        with tracer.span("run", "run", plan_id=self.plan_id):
-            outs = run_plan(self.concrete, ctx, inputs)
-        with tracer.span("device_sync", "sync") as sync_sp:
-            jax.block_until_ready(outs)
+        try:
+            with tracer.span("run", "run", plan_id=self.plan_id):
+                outs = run_plan(self.concrete, ctx, inputs)
+            with tracer.span("device_sync", "sync") as sync_sp:
+                jax.block_until_ready(outs)
+        except Exception as exc:
+            if recorder is not None:
+                recorder.trip("executor_error", {
+                    "plan_id": self.plan_id, "error": repr(exc)})
+            raise
         wall_ms = (time.perf_counter() - t0) * 1e3
         # ONE device_get: deferred span attrs + the count sink together
         counts = tracer.resolve(sink)
@@ -706,6 +716,19 @@ class PlannedFunction:
                          counts=counts, samples=samples,
                          plan_id=self.plan_id)
         object.__setattr__(self, "last_run_trace", trace)
+        if recorder is not None:
+            recorder.record_trace(trace)
+            overflows = [
+                {"site": list(map(str, site)), "count": float(c),
+                 "capacity": int(cap)}
+                for site, c, cap in counts
+                if site and site[0] == "compact_overflow" and c > 0]
+            overflows += [
+                {"span": sp.name, "capacity": sp.attrs.get("capacity")}
+                for sp in trace.spans if sp.attrs.get("overflow")]
+            if overflows:
+                recorder.trip("overflow", {"plan_id": self.plan_id,
+                                           "overflows": overflows})
         if feedback is not None:
             _drain_counts(counts, feedback)
         return outs if len(outs) > 1 else outs[0]

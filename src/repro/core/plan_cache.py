@@ -22,6 +22,35 @@ import tempfile
 from collections import OrderedDict
 from typing import Any, Optional
 
+# per-node bookkeeping overhead (dataclass + dict slots, interned strings)
+# and the fallback for opaque entries staged_bytes cannot walk
+_NODE_BYTES = 256
+_FALLBACK_BYTES = 1024
+
+
+def staged_bytes(staged) -> int:
+    """Estimated resident bytes of a cached staged plan: per-node overhead
+    plus the nbytes of any array constants folded into node attrs (the part
+    that actually scales — a plan embedding a broadcast build side can dwarf
+    a hundred constant-free plans).  An explicit ``nbytes`` attribute wins;
+    anything unwalkable falls back to a flat constant so byte accounting
+    degrades to count accounting, never raises."""
+    nb = getattr(staged, "nbytes", None)
+    if isinstance(nb, (int, float)) and nb >= 0:
+        return int(nb)
+    try:
+        import jax
+        total = 0
+        for node in staged.concrete.topo():
+            total += _NODE_BYTES
+            for leaf in jax.tree_util.tree_leaves(dict(node.attrs)):
+                n = getattr(leaf, "nbytes", None)
+                if n is not None:
+                    total += int(n)
+        return max(total, _NODE_BYTES)
+    except Exception:
+        return _FALLBACK_BYTES
+
 
 class PlanCache:
     """LRU map: plan_id -> StagedPhysicalPlan, with hit/miss accounting.
@@ -37,21 +66,44 @@ class PlanCache:
     *concurrently active* second cost model's hot entries protected: being
     looked up under the new calibration re-proves an entry live, so two
     callers sharing one cache cannot thrash each other's working sets.
+
+    Alongside the entry-count bound, an optional ``byte_budget`` bounds the
+    *bytes* the cached staged plans hold (estimated per entry at insert,
+    registered in the MemoryLedger under ``("plan_cache", plan_id)``).
+    Byte-budget eviction is stale-first, then **largest-first** — entry
+    count is a poor proxy for memory when staged plans embed folded
+    constants of very different sizes, so the budget sheds the biggest
+    non-stale entry rather than the coldest.
     """
 
-    def __init__(self, maxsize: int = 128):
+    def __init__(self, maxsize: int = 128,
+                 byte_budget: Optional[int] = None, ledger=None):
         if maxsize < 1:
             raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        if byte_budget is not None and byte_budget < 1:
+            raise ValueError(f"byte_budget must be >= 1, got {byte_budget}")
         self.maxsize = maxsize
+        self.byte_budget = byte_budget
+        self._ledger = ledger                # None -> default_ledger(), lazy
         self._entries: "OrderedDict[str, Any]" = OrderedDict()
         self._fps: dict = {}                 # plan_id -> fit fingerprint
         self._seen_epoch: dict = {}          # plan_id -> epoch of last touch
+        self._sizes: dict = {}               # plan_id -> estimated bytes
         self._epoch = 0                      # bumps when the fit changes
         self.current_fingerprint: Optional[str] = None
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.stale_evictions = 0
+        self.byte_evictions = 0
+        self.bytes_in_cache = 0
+
+    @property
+    def ledger(self):
+        if self._ledger is None:
+            from .ledger import default_ledger
+            self._ledger = default_ledger()
+        return self._ledger
 
     def note_fingerprint(self, fingerprint: str) -> None:
         """Record the fingerprint of the cost model in current use (called
@@ -82,7 +134,14 @@ class PlanCache:
 
     def insert(self, plan_id: str, staged, fingerprint: Optional[str] = None
                ) -> None:
+        if plan_id in self._entries:
+            self.bytes_in_cache -= self._sizes.get(plan_id, 0)
         self._entries[plan_id] = staged
+        nb = staged_bytes(staged)
+        self._sizes[plan_id] = nb
+        self.bytes_in_cache += nb
+        self.ledger.register(("plan_cache", plan_id), nbytes=nb,
+                             kind="plan_cache")
         if fingerprint is not None:
             self._fps[plan_id] = fingerprint
             self.note_fingerprint(fingerprint)
@@ -90,6 +149,37 @@ class PlanCache:
         self._entries.move_to_end(plan_id)
         while len(self._entries) > self.maxsize:
             self._evict_one()
+        # byte budget on top of the count bound: stale entries go first
+        # (LRU among themselves), then the *largest* live entry — the goal
+        # is bytes back per eviction, not recency.  The newest entry is
+        # never evicted on its own insert (len > 1), even when it alone
+        # exceeds the budget: callers still get their plan cached until
+        # something else arrives.
+        if self.byte_budget is not None:
+            while (self.bytes_in_cache > self.byte_budget
+                   and len(self._entries) > 1):
+                self._evict_one_bytes(keep=plan_id)
+
+    def _evict_one_bytes(self, keep: Optional[str] = None) -> None:
+        victim = None
+        if self.current_fingerprint is not None:
+            victim = next((p for p in self._entries
+                           if p != keep and self._is_stale(p)), None)
+        if victim is not None:
+            self.stale_evictions += 1
+        else:
+            victim = max((p for p in self._entries if p != keep),
+                         key=lambda p: self._sizes.get(p, 0))
+        self._drop(victim)
+        self.evictions += 1
+        self.byte_evictions += 1
+
+    def _drop(self, plan_id: str) -> None:
+        del self._entries[plan_id]
+        self._fps.pop(plan_id, None)
+        self._seen_epoch.pop(plan_id, None)
+        self.bytes_in_cache -= self._sizes.pop(plan_id, 0)
+        self.ledger.release(("plan_cache", plan_id))
 
     def _is_stale(self, plan_id: str) -> bool:
         fp = self._fps.get(plan_id)
@@ -105,19 +195,22 @@ class PlanCache:
             victim = next(iter(self._entries))
         else:
             self.stale_evictions += 1
-        del self._entries[victim]
-        self._fps.pop(victim, None)
-        self._seen_epoch.pop(victim, None)
+        self._drop(victim)
         self.evictions += 1
 
     def clear(self) -> None:
+        for plan_id in self._entries:
+            self.ledger.release(("plan_cache", plan_id))
         self._entries.clear()
         self._fps.clear()
         self._seen_epoch.clear()
+        self._sizes.clear()
+        self.bytes_in_cache = 0
         self._epoch = 0
         self.current_fingerprint = None
         self.hits = self.misses = self.evictions = 0
         self.stale_evictions = 0
+        self.byte_evictions = 0
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -134,6 +227,9 @@ class PlanCache:
             "misses": self.misses,
             "evictions": self.evictions,
             "stale_evictions": self.stale_evictions,
+            "byte_evictions": self.byte_evictions,
+            "bytes": self.bytes_in_cache,
+            "byte_budget": self.byte_budget,
             "hit_rate": (self.hits / total) if total else 0.0,
         }
 

@@ -304,7 +304,11 @@ class RunTrace:
     def chrome_events(self) -> list:
         """Chrome trace-event list (Perfetto/chrome://tracing loadable):
         ``ph="X"`` complete events in microseconds, plus process/thread
-        metadata events."""
+        metadata events, plus ``ph="C"`` **counter-track** events for the
+        resolved cardinality observations — every span whose deferred
+        count/overflow resolved, and every count-sink site, gets a counter
+        sample at the span's (or run's) end so the BoundedRel counts are
+        visible in the timeline, not only in the report."""
         pid = os.getpid()
         tids = {}
         events = [{"ph": "M", "pid": pid, "tid": 0, "name": "process_name",
@@ -316,6 +320,23 @@ class RunTrace:
                 "name": sp.name, "cat": sp.cat,
                 "ts": sp.t0 * 1e6, "dur": sp.dur * 1e6,
                 "args": {k: _jsonable(v) for k, v in sp.attrs.items()},
+            })
+            if "count" in sp.attrs:
+                args = {"count": float(sp.attrs["count"])}
+                if "overflow" in sp.attrs:
+                    args["overflow"] = float(sp.attrs["overflow"] or 0.0)
+                events.append({
+                    "ph": "C", "pid": pid, "tid": tid,
+                    "name": f"count:{sp.name}",
+                    "ts": (sp.t0 + sp.dur) * 1e6, "args": args,
+                })
+        run_end = max((sp.t0 + sp.dur for sp in self.spans), default=0.0)
+        for site, count, cap in self.counts:
+            events.append({
+                "ph": "C", "pid": pid, "tid": 0,
+                "name": "count:" + "/".join(map(str, site)),
+                "ts": run_end * 1e6,
+                "args": {"count": float(count), "capacity": float(cap)},
             })
         for raw, tid in tids.items():
             events.append({"ph": "M", "pid": pid, "tid": tid,
@@ -363,4 +384,13 @@ def validate_chrome_trace(doc: dict) -> list:
             for k in ("ts", "dur"):
                 if not isinstance(ev.get(k), (int, float)):
                     errs.append(f"event {i}: non-numeric {k!r}")
+        if ph == "C":
+            if not isinstance(ev.get("ts"), (int, float)):
+                errs.append(f"event {i}: non-numeric 'ts'")
+            args = ev.get("args")
+            if not isinstance(args, dict) or not args or \
+                    any(not isinstance(v, (int, float))
+                        for v in args.values()):
+                errs.append(f"event {i}: counter args must be a non-empty "
+                            f"dict of numeric series")
     return errs

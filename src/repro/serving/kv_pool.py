@@ -47,7 +47,8 @@ class PageTable:
 
 class PagedKVPool:
     def __init__(self, model, n_slots: int, max_seq: int, *,
-                 page_size: int = 16, page_budget: int | None = None):
+                 page_size: int = 16, page_budget: int | None = None,
+                 registry=None, ledger=None):
         if n_slots < 1 or max_seq < 1 or page_size < 1:
             raise ValueError("n_slots, max_seq, page_size must be >= 1")
         self.model = model
@@ -64,6 +65,15 @@ class PagedKVPool:
         self._free_slots = list(range(n_slots))
         self._tables: dict = {}      # request_id -> PageTable
         self.pages_in_use = 0
+        # occupancy/fragmentation gauges live in the shared registry (one
+        # report covers serving + analytics); the ledger records the one
+        # allocation — resident for the runtime's lifetime, so it never
+        # re-registers
+        self.registry = registry
+        if ledger is not None:
+            ledger.register(("kv_pool", f"{id(self):#x}"), self.cache,
+                            kind="kv_pool")
+        self._update_gauges()
         # jitted write paths with a *traced* slot index: one XLA program per
         # prefill bucket (seed) / one total (adopt), instead of an eager
         # recompile per (slot, prompt_len) combination on every join.  The
@@ -97,6 +107,7 @@ class PagedKVPool:
                        [(slot, j) for j in range(n_pages)])
         self._tables[request_id] = pt
         self.pages_in_use += n_pages
+        self._update_gauges()
         return pt
 
     def extend(self, request_id, n_tokens: int) -> bool:
@@ -114,6 +125,7 @@ class PagedKVPool:
         start = len(pt.pages)
         pt.pages.extend((pt.slot, j) for j in range(start, start + need))
         self.pages_in_use += need
+        self._update_gauges()
         return True
 
     def free(self, request_id) -> int:
@@ -122,6 +134,11 @@ class PagedKVPool:
         self.pages_in_use -= len(pt.pages)
         self._free_slots.append(pt.slot)
         self._free_slots.sort()
+        if self.registry is not None:
+            # final page count = the request's lifetime footprint
+            self.registry.summary("kv.pages_per_request").observe(
+                len(pt.pages))
+        self._update_gauges()
         return pt.slot
 
     def table(self, request_id) -> PageTable:
@@ -181,6 +198,48 @@ class PagedKVPool:
             "page_size": self.page_size,
             "fill": self.pages_in_use / max(self.page_budget, 1),
         }
+
+    def fragmentation(self) -> dict:
+        """Free-space shape, not just amount.  Pages are slot-local and
+        each slot's used pages are a prefix, so the free space is one tail
+        run per slot; ``max_contig_free_run`` — the longest such run,
+        counting runs that span consecutive fully-free slots — is the
+        largest single-request footprint that can still be admitted
+        without eviction."""
+        free_pages = self.page_budget - self.pages_in_use
+        used_by_slot = {}
+        for pt in self._tables.values():
+            used_by_slot[pt.slot] = used_by_slot.get(pt.slot, 0) \
+                + len(pt.pages)
+        # slot-major page order: a used slot's occupied prefix breaks the
+        # run, its free tail starts the next one (adjacent to the next
+        # slot's first page); fully-free slots extend the current run
+        max_run = 0
+        cur = 0
+        for slot in range(self.n_slots):
+            used = used_by_slot.get(slot, 0)
+            if used:
+                max_run = max(max_run, cur)
+                cur = self.pages_per_slot - used
+            else:
+                cur += self.pages_per_slot
+        max_run = max(max_run, cur)
+        # the budget caps any admission below the geometric free run
+        max_run = min(max_run, free_pages)
+        return {"free_pages": free_pages,
+                "free_slots": len(self._free_slots),
+                "max_contig_free_run": max_run}
+
+    def _update_gauges(self) -> None:
+        if self.registry is None:
+            return
+        frag = self.fragmentation()
+        self.registry.gauge("kv.free_pages").set(frag["free_pages"])
+        self.registry.gauge("kv.free_slots").set(frag["free_slots"])
+        self.registry.gauge("kv.max_contig_free_run").set(
+            frag["max_contig_free_run"])
+        self.registry.gauge("kv.fill").set(
+            self.pages_in_use / max(self.page_budget, 1))
 
 
 __all__ = ["PagedKVPool", "PageTable", "attn_block_indices"]

@@ -118,21 +118,97 @@ class Summary:
                 f"p99={s['p99']:.4g})")
 
 
+class Gauge:
+    """A point-in-time level (queue depth *now*, resident bytes *now*) —
+    distinct from a Summary (a distribution of observations) and a counter
+    (a monotone total).  Tracks its own peak/trough so intermittent
+    snapshot readers still see the extremes between reads."""
+
+    __slots__ = ("name", "value", "peak", "trough", "updates")
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self.value = 0.0
+        self.peak = float("-inf")
+        self.trough = float("inf")
+        self.updates = 0
+
+    def set(self, value) -> float:
+        v = float(value)
+        self.value = v
+        self.peak = max(self.peak, v)
+        self.trough = min(self.trough, v)
+        self.updates += 1
+        return v
+
+    def inc(self, delta=1.0) -> float:
+        return self.set(self.value + float(delta))
+
+    def dec(self, delta=1.0) -> float:
+        return self.set(self.value - float(delta))
+
+    def snapshot(self) -> dict:
+        return {"value": self.value,
+                "peak": self.peak if self.updates else 0.0,
+                "trough": self.trough if self.updates else 0.0,
+                "updates": self.updates}
+
+    def __repr__(self):
+        return f"Gauge({self.name}={self.value:.4g} peak={self.peak:.4g})"
+
+
+class Counter:
+    """Named monotone counter view over a registry's counter table (the
+    table itself stays a plain ``{name: int}`` dict — existing consumers
+    index ``registry.counters`` directly)."""
+
+    __slots__ = ("name", "_counters")
+
+    def __init__(self, name: str, counters: dict):
+        self.name = name
+        self._counters = counters
+        self._counters.setdefault(name, 0)
+
+    def inc(self, delta: int = 1) -> int:
+        if delta < 0:
+            raise ValueError(f"counter {self.name}: negative delta {delta}")
+        self._counters[self.name] = self._counters.get(self.name, 0) + delta
+        return self._counters[self.name]
+
+    @property
+    def value(self) -> int:
+        return self._counters.get(self.name, 0)
+
+    def __repr__(self):
+        return f"Counter({self.name}={self.value})"
+
+
 class MetricsRegistry:
-    """Named summaries + counters shared across workload families: the LM
-    serving path registers ``lm.*`` series, analytical requests
-    ``analytics.*`` — one registry, one report."""
+    """Named summaries + gauges + counters shared across workload families:
+    the LM serving path registers ``lm.*`` series, analytical requests
+    ``analytics.*``, the resource ledger ``ledger.*`` — one registry, one
+    report."""
 
     def __init__(self, keep_samples: bool = True):
         self.keep_samples = bool(keep_samples)
         self.summaries: dict = {}
         self.counters: dict = {}
+        self.gauges: dict = {}
 
     def summary(self, name: str) -> Summary:
         s = self.summaries.get(name)
         if s is None:
             s = self.summaries[name] = Summary(name, self.keep_samples)
         return s
+
+    def gauge(self, name: str) -> Gauge:
+        g = self.gauges.get(name)
+        if g is None:
+            g = self.gauges[name] = Gauge(name)
+        return g
+
+    def counter(self, name: str) -> Counter:
+        return Counter(name, self.counters)
 
     def count(self, name: str, delta: int = 1) -> int:
         self.counters[name] = self.counters.get(name, 0) + delta
@@ -141,6 +217,8 @@ class MetricsRegistry:
     def snapshot(self) -> dict:
         return {"summaries": {k: v.snapshot()
                               for k, v in sorted(self.summaries.items())},
+                "gauges": {k: v.snapshot()
+                           for k, v in sorted(self.gauges.items())},
                 "counters": dict(sorted(self.counters.items()))}
 
     def report(self) -> str:
@@ -151,6 +229,10 @@ class MetricsRegistry:
                 f"[metrics] {name}: n={s['count']} mean={s['mean']:.4g} "
                 f"p50={s['p50']:.4g} p95={s['p95']:.4g} p99={s['p99']:.4g} "
                 f"max={s['max']:.4g}")
+        for name in sorted(self.gauges):
+            g = self.gauges[name].snapshot()
+            lines.append(f"[metrics] {name}: {g['value']:.4g} "
+                         f"(peak {g['peak']:.4g})")
         for name in sorted(self.counters):
             lines.append(f"[metrics] {name}: {self.counters[name]}")
         return "\n".join(lines)

@@ -33,6 +33,7 @@ import numpy as np
 
 from ..core.executor import plan_and_compile
 from ..core.ir import SystemCatalog
+from ..core.ledger import FlightRecorder, MemoryLedger, default_ledger
 from ..core.plan_cache import (PlanCache, default_plan_cache,
                                load_plan_cache, save_plan_cache)
 from ..models.decode import decode_step, decode_step_batched, init_cache
@@ -73,7 +74,10 @@ class AsyncServingRuntime:
                  plan_cache_dir: Optional[str] = None,
                  admission: Optional[AdmissionController] = None,
                  use_prefill_kv: Optional[bool] = None,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 ledger: Optional[MemoryLedger] = None,
+                 recorder: Optional[FlightRecorder] = None,
+                 snapshot_every: int = 64):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -89,15 +93,24 @@ class AsyncServingRuntime:
             load_plan_cache(plan_cache_dir, self.pc)   # warm start
         self.kv_mode = model.supports_prefill_kv() if use_prefill_kv is None \
             else bool(use_prefill_kv)
-        self.pool = PagedKVPool(model, max_batch, max_seq,
-                                page_size=page_size, page_budget=page_budget)
-        self.scheduler = ContinuousBatchScheduler(max_batch)
-        self.admission = admission or AdmissionController()
         # one registry for both workload families: LM request series land
         # as "lm.*" summaries, analytical runs (run_analysis) as
         # "analytics.*" — a shared registry makes one report() cover both
         self.registry = registry if registry is not None else \
             MetricsRegistry()
+        # resource accounting + incident capture: the ledger tracks every
+        # resident pytree (KV pool, plan-cache entries, store payloads);
+        # the flight recorder keeps a bounded ring of recent run traces +
+        # telemetry snapshots, dumped on rejection / overflow / error
+        self.ledger = ledger if ledger is not None else \
+            getattr(self.pc, "ledger", None) or default_ledger()
+        self.recorder = recorder if recorder is not None else FlightRecorder()
+        self.snapshot_every = max(int(snapshot_every), 1)
+        self.pool = PagedKVPool(model, max_batch, max_seq,
+                                page_size=page_size, page_budget=page_budget,
+                                registry=self.registry, ledger=self.ledger)
+        self.scheduler = ContinuousBatchScheduler(max_batch)
+        self.admission = admission or AdmissionController()
         self.metrics = ServingMetrics(registry=self.registry)
         self._prefill_fns: dict = {}     # bucket -> (PlannedFunction, jitted)
         self._jitted_by_plan: dict = {}  # plan_id -> jitted callable
@@ -146,6 +159,13 @@ class AsyncServingRuntime:
 
             jitted = jax.jit(_prefill_call)
             self._jitted_by_plan[fwd.plan_id] = jitted
+            # tie the jitted wrapper's lifetime to its plan-cache entry:
+            # _jitted_by_plan never evicts, so once byte-budget eviction
+            # drops the entry this registration shows up in ledger.leaks()
+            # as "evicted" — a real retained-executable leak signal
+            self.ledger.register(
+                ("plan_jit", fwd.plan_id), nbytes=0, kind="plan_jit",
+                tied_to=("plan_cache", fwd.plan_id))
         self._prefill_fns[bucket] = (fwd, jitted)
         return fwd, jitted, (time.perf_counter() - t0) * 1e3
 
@@ -174,10 +194,45 @@ class AsyncServingRuntime:
             self._dstep1(self.params, init_cache(self.model, 1, self.max_seq),
                          toks[:1], jnp.int32(0))
 
+    # -- telemetry ----------------------------------------------------------
+    def telemetry_snapshot(self) -> dict:
+        """One continuous-telemetry record: ledger totals, KV occupancy +
+        fragmentation, per-bucket queue depth, plan-cache hit/byte ratios,
+        decode-batch occupancy.  Published as registry gauges and recorded
+        in the flight recorder ring."""
+        pc_stats = self.pc.stats()
+        snap = {
+            "ledger": self.ledger.snapshot(),
+            "kv": {**self.pool.occupancy(), **self.pool.fragmentation()},
+            "queues": {b: len(q) for b, q in self.scheduler.queues.items()
+                       if q},
+            "queue_depth": self.scheduler.queue_depth(),
+            "active_slots": self.scheduler.n_active(),
+            "plan_cache": pc_stats,
+            "ticks": self.metrics.ticks,
+        }
+        g = self.registry.gauge
+        g("ledger.total_bytes").set(snap["ledger"]["total_bytes"])
+        g("ledger.peak_bytes").set(snap["ledger"]["peak_bytes"])
+        g("plan_cache.hit_rate").set(pc_stats["hit_rate"])
+        g("plan_cache.bytes").set(pc_stats["bytes"])
+        g("serving.queue_depth").set(snap["queue_depth"])
+        g("serving.active_slots").set(snap["active_slots"])
+        return snap
+
+    def _maybe_snapshot(self, force: bool = False) -> None:
+        if force or self.metrics.ticks % self.snapshot_every == 0:
+            self.recorder.record("telemetry", self.telemetry_snapshot())
+
     # -- admission ----------------------------------------------------------
     def _reject(self, req: ServeRequest, reason: str) -> None:
         self.metrics.rejected += 1
         self._results[req.rid] = ServeResult(req.rid, [], "rejected", None)
+        self.recorder.trip("admission_reject", {
+            "rid": str(req.rid), "reason": reason,
+            "prompt_len": req.prompt_len, "gen": req.gen,
+            "queue_depth": self.scheduler.queue_depth(),
+            "active": self.scheduler.n_active()})
 
     def submit(self, req: ServeRequest) -> None:
         if req.prompt_len < 1 or req.gen < 1:
@@ -277,6 +332,7 @@ class AsyncServingRuntime:
         active = self.scheduler.active()
         self.metrics.observe_tick(self.scheduler.queue_depth(),
                                   self.pool.occupancy()["fill"])
+        self._maybe_snapshot()
         if not active:
             return False
         toks = np.zeros((self.max_batch, 1), np.int32)
@@ -346,21 +402,36 @@ class AsyncServingRuntime:
         ``analytics.run_ms`` summary, request/trace counts in
         ``analytics.*`` counters.  With ``analyze=True`` the run goes
         through ``PlannedFunction.analyze`` (EXPLAIN ANALYZE tracing) and
-        the trace's wall/sync split is recorded too."""
+        the trace's wall/sync split is recorded too.  Either path feeds the
+        flight recorder: traced runs land their RunTrace summary in the
+        ring (and trip a dump on BoundedRel overflow, inside ``analyze``);
+        an executor exception trips an ``executor_error`` dump."""
         t0 = time.perf_counter()
-        if analyze:
-            outs = planned.analyze(params, inputs, aux=aux)
-            tr = planned.last_run_trace
-            self.registry.summary("analytics.trace_wall_ms").observe(
-                tr.wall_ms)
-            self.registry.summary("analytics.sync_ms").observe(tr.sync_ms)
-            self.registry.count("analytics.traced")
-        else:
-            outs = planned(params, inputs, aux=aux)
-            jax.block_until_ready(outs)
+        try:
+            if analyze:
+                outs = planned.analyze(params, inputs, aux=aux,
+                                       recorder=self.recorder)
+                tr = planned.last_run_trace
+                self.registry.summary("analytics.trace_wall_ms").observe(
+                    tr.wall_ms)
+                self.registry.summary("analytics.sync_ms").observe(
+                    tr.sync_ms)
+                self.registry.count("analytics.traced")
+            else:
+                outs = planned(params, inputs, aux=aux)
+                jax.block_until_ready(outs)
+        except Exception as exc:
+            # analyze() already tripped for its own failures; only the
+            # untraced path needs the executor_error capture here
+            if not analyze:
+                self.recorder.trip("executor_error", {
+                    "plan_id": getattr(planned, "plan_id", ""),
+                    "error": repr(exc)})
+            raise
         self.registry.summary("analytics.run_ms").observe(
             (time.perf_counter() - t0) * 1e3)
         self.registry.count("analytics.requests")
+        self._maybe_snapshot(force=True)
         return outs
 
 

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.ir import TableT, ValidationError
+from ..core.ledger import register_store_payload
 from .bounded import MASK, BoundedRel
 
 _CMP = {
@@ -116,7 +117,9 @@ class ColumnStore:
             pad = self.capacity - self.rows
             cols[k] = jnp.asarray(np.pad(v, (0, pad)) if pad else v)
         valid = jnp.arange(self.capacity, dtype=jnp.int32) < self.rows
-        return BoundedRel(cols, valid, jnp.int32(self.rows))
+        rel = BoundedRel(cols, valid, jnp.int32(self.rows))
+        register_store_payload(self, rel, "column_store")
+        return rel
 
     def column(self, name: str) -> np.ndarray:
         return self._cols[name][:self.rows]

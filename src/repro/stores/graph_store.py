@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.ir import GraphT, ValidationError
+from ..core.ledger import register_store_payload
 from .graph_kernels import scatter_add_pallas
 
 
@@ -49,6 +50,10 @@ class GraphStore:
             raise ValidationError(
                 f"shards {self.shards} must divide n_nodes {self.n_nodes}; "
                 f"pad the node domain (with_shards pads automatically)")
+        # monotonic content version (parity with Column/Text stores): bumped
+        # by any future mutation; the ledger snapshots it per payload so
+        # consumers pinning stale payloads are flagged as leaks
+        self.version = 0
 
     def with_shards(self, shards: int) -> "GraphStore":
         """This graph re-declared as dst-block partitioned over ``shards``
@@ -60,8 +65,10 @@ class GraphStore:
         if n != self.n_nodes:
             pad = np.full(n - self.n_nodes, self.indptr[-1], np.int32)
             indptr = np.concatenate([self.indptr, pad])
-        return GraphStore(indptr, self.indices, self.src, self.weights, n,
-                          shards=int(shards))
+        out = GraphStore(indptr, self.indices, self.src, self.weights, n,
+                         shards=int(shards))
+        out.version = self.version
+        return out
 
     @classmethod
     def from_edges(cls, src, dst, n_nodes: int, weights=None,
@@ -108,6 +115,7 @@ class GraphStore:
         }
         if self.shards > 1:
             out.update(self._block_payload())
+        register_store_payload(self, out, "graph_store")
         return out
 
     def _block_payload(self) -> dict:

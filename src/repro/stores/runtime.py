@@ -24,6 +24,7 @@ import numpy as np
 
 from ..core.engines import get_engine
 from ..core.feedback import filter_site, sel_mask_site
+from ..core.ledger import default_ledger
 from .base import GRAPH_ENGINE, REL_ENGINE, TEXT_ENGINE
 from .bounded import BoundedRel, as_bounded, compact_rel
 from .column_store import (filter_mask, group_agg, hash_join,
@@ -307,6 +308,12 @@ def _i_bounded_join(ctx, args, node):
             _annotate(ctx, dist="partitioned", coll="all_to_all",
                       coll_bytes=coll_all_to_all_bytes(staged, n),
                       bucket_cap=bucket_cap)
+            # shuffle scratch counts toward the ledger high-water mark:
+            # the staged buckets live only inside this executed program,
+            # but their bytes are real device memory at peak
+            default_ledger().note_transient(
+                ("shuffle_buckets", node.id), staged * n,
+                kind="shuffle_buckets")
             gathered = left.with_cols(
                 {k: v[lidx] for k, v in left.cols.items()})
             cols = _merge_join_cols(gathered, right, a["right_on"], ridx)

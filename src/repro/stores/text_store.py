@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.ir import CorpusT, ValidationError
+from ..core.ledger import register_store_payload
 
 
 class TextStore:
@@ -127,6 +128,7 @@ class TextStore:
         }
         if self.shards > 1:
             out.update(self._block_payload())
+        register_store_payload(self, out, "text_store")
         return out
 
     def _block_payload(self) -> dict:

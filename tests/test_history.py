@@ -1,0 +1,192 @@
+"""Benchmark history + the CI perf-regression gate: provenance stamping in
+merge_report, history-record append/load, newest-per-section comparison,
+provenance-mismatch skipping, the bootstrap path, and the >20%-slowdown
+failure the gate exists for."""
+import json
+import os
+
+from benchmarks.common import SECTIONS, merge_report, provenance
+from benchmarks.history import (append_record, check, compare,
+                                extract_metrics, latest_per_section,
+                                load_history)
+
+
+def _rec(section, metrics, *, smoke=True, devices=1, platform="cpu",
+         sha="aaa"):
+    return {"record": "bench", "section": section, "git_sha": sha,
+            "devices": devices, "platform": platform, "smoke": smoke,
+            "ok": True, "metrics": metrics}
+
+
+# --------------------------------------------------------------------------
+# pinned-metric extraction per section
+# --------------------------------------------------------------------------
+
+
+def test_extract_metrics_per_section():
+    assert extract_metrics("placement", {"planned_ms": 12.5}) == \
+        {"planned_ms": 12.5}
+    sel = {"sweep": [{"selectivity": 0.01, "pushed_ms": 3.0},
+                     {"selectivity": 0.1, "pushed_ms": 5.0}]}
+    assert extract_metrics("selective", sel) == \
+        {"pushed_ms@0.01": 3.0, "pushed_ms@0.1": 5.0}
+    bnd = {"sweep": [{"selectivity": 0.05, "compacted_ms": 7.0}]}
+    assert extract_metrics("bounded", bnd) == {"compacted_ms@0.05": 7.0}
+    shd = {"sweep": [{"tweets": 48000, "sharded_ms": 99.0}]}
+    assert extract_metrics("sharded", shd) == {"sharded_ms@48000": 99.0}
+    assert extract_metrics("unknown", {"x": 1}) == {}
+
+
+# --------------------------------------------------------------------------
+# append / load round-trip
+# --------------------------------------------------------------------------
+
+
+def test_append_and_load_roundtrip(tmp_path):
+    path = str(tmp_path / "BENCH_history.jsonl")
+    report = {"planned_ms": 10.0, "smoke": True, "ok": True,
+              "provenance": {"git_sha": "abc123", "devices": 1,
+                             "platform": "cpu", "recorded_at": 1.0}}
+    rec = append_record(path, "placement", report)
+    assert rec["git_sha"] == "abc123"
+    assert rec["metrics"] == {"planned_ms": 10.0}
+    append_record(path, "placement", dict(report, planned_ms=11.0))
+    records = load_history(path)
+    assert len(records) == 2
+    # later lines win in the newest-per-section view
+    latest = latest_per_section(records)
+    assert latest["placement"]["metrics"]["planned_ms"] == 11.0
+
+
+def test_load_history_skips_corrupt_lines(tmp_path):
+    path = str(tmp_path / "h.jsonl")
+    with open(path, "w") as fh:
+        fh.write("not json\n")
+        fh.write(json.dumps(_rec("placement", {"planned_ms": 1.0})) + "\n")
+        fh.write(json.dumps({"record": "other"}) + "\n")
+    assert len(load_history(path)) == 1
+    assert load_history(str(tmp_path / "missing.jsonl")) == []
+
+
+# --------------------------------------------------------------------------
+# the gate: regression threshold, provenance matching, bootstrap
+# --------------------------------------------------------------------------
+
+
+def _write(path, records):
+    with open(path, "w") as fh:
+        for rec in records:
+            fh.write(json.dumps(rec) + "\n")
+
+
+def test_gate_trips_on_25_percent_slowdown(tmp_path, capsys):
+    prev = str(tmp_path / "prev.jsonl")
+    new = str(tmp_path / "new.jsonl")
+    _write(prev, [_rec("placement", {"planned_ms": 100.0})])
+    _write(new, [_rec("placement", {"planned_ms": 125.0}, sha="bbb")])
+    assert check(prev, new, threshold=0.20) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+
+def test_gate_passes_within_threshold(tmp_path):
+    prev = str(tmp_path / "prev.jsonl")
+    new = str(tmp_path / "new.jsonl")
+    _write(prev, [_rec("placement", {"planned_ms": 100.0}),
+                  _rec("bounded", {"compacted_ms@0.05": 50.0})])
+    _write(new, [_rec("placement", {"planned_ms": 115.0}, sha="bbb"),
+                 _rec("bounded", {"compacted_ms@0.05": 40.0}, sha="bbb")])
+    assert check(prev, new, threshold=0.20) == 0
+
+
+def test_gate_skips_provenance_mismatch(tmp_path, capsys):
+    prev = str(tmp_path / "prev.jsonl")
+    new = str(tmp_path / "new.jsonl")
+    # 3x slower, but the previous record measured a full (non-smoke)
+    # 8-device run: not comparable, skipped, gate passes
+    _write(prev, [_rec("sharded", {"sharded_ms@48000": 10.0},
+                       smoke=False, devices=8)])
+    _write(new, [_rec("sharded", {"sharded_ms@48000": 30.0})])
+    assert check(prev, new, threshold=0.20) == 0
+    out = capsys.readouterr().out
+    assert "skip sharded" in out and "no comparable metrics" in out
+
+
+def test_gate_bootstraps_without_previous_history(tmp_path):
+    new = str(tmp_path / "new.jsonl")
+    _write(new, [_rec("placement", {"planned_ms": 100.0})])
+    assert check(str(tmp_path / "missing.jsonl"), new) == 0
+
+
+def test_gate_fails_on_empty_new_history(tmp_path):
+    prev = str(tmp_path / "prev.jsonl")
+    _write(prev, [_rec("placement", {"planned_ms": 100.0})])
+    assert check(prev, str(tmp_path / "empty.jsonl")) == 1
+
+
+def test_compare_is_newest_per_section_and_pointwise(tmp_path):
+    prev = [_rec("bounded", {"compacted_ms@0.01": 10.0,
+                             "compacted_ms@0.1": 20.0})]
+    # two new records for the section: only the later one is compared
+    new = [_rec("bounded", {"compacted_ms@0.01": 50.0,
+                            "compacted_ms@0.1": 50.0}, sha="bbb"),
+           _rec("bounded", {"compacted_ms@0.01": 10.5,
+                            "compacted_ms@0.1": 30.0}, sha="ccc")]
+    result = compare(prev, new, threshold=0.20)
+    assert len(result["compared"]) == 2
+    # one point regressed (1.5x), the other is fine (1.05x): pointwise
+    assert [r["metric"] for r in result["regressions"]] == \
+        ["compacted_ms@0.1"]
+    assert result["regressions"][0]["new_sha"] == "ccc"
+
+
+# --------------------------------------------------------------------------
+# merge_report: provenance stamping + history side effect
+# --------------------------------------------------------------------------
+
+
+def test_provenance_carries_commit_and_fleet():
+    prov = provenance(mesh_shape=(8, 1))
+    assert set(prov) >= {"git_sha", "devices", "platform", "cpu_count",
+                         "recorded_at"}
+    assert prov["mesh_shape"] == [8, 1]
+    assert prov["devices"] >= 1
+    # inside the repo the SHA resolves (12-hex short form)
+    assert prov["git_sha"] == "unknown" or len(prov["git_sha"]) == 12
+
+
+def test_merge_report_stamps_provenance_and_appends_history(tmp_path):
+    json_out = str(tmp_path / "BENCH.json")
+    merge_report(json_out, {"planned_ms": 42.0, "smoke": True, "ok": True},
+                 section="placement")
+    doc = json.load(open(json_out))
+    prov = doc["placement"]["provenance"]
+    assert prov["devices"] >= 1 and "git_sha" in prov
+    hist = str(tmp_path / "BENCH_history.jsonl")
+    assert os.path.exists(hist)
+    (rec,) = load_history(hist)
+    assert rec["section"] == "placement"
+    assert rec["git_sha"] == prov["git_sha"]
+    assert rec["metrics"] == {"planned_ms": 42.0}
+
+
+def test_merge_report_preserves_section_merge_semantics(tmp_path):
+    json_out = str(tmp_path / "BENCH.json")
+    merge_report(json_out, {"planned_ms": 1.0}, section="placement")
+    merge_report(json_out, {"sweep": [], "ok": True}, section="bounded")
+    # a top-level (selective) write carries the prior sections along
+    merge_report(json_out, {"sweep": [], "mode": "selective"})
+    doc = json.load(open(json_out))
+    assert doc["mode"] == "selective"
+    assert doc["placement"]["planned_ms"] == 1.0
+    assert "bounded" in doc and set(SECTIONS) >= {"placement", "bounded"}
+    # each write appended one history record
+    assert len(load_history(str(tmp_path / "BENCH_history.jsonl"))) == 3
+
+
+def test_merge_report_honors_history_out_override(tmp_path):
+    json_out = str(tmp_path / "BENCH.json")
+    hist = str(tmp_path / "elsewhere" / "h.jsonl")
+    merge_report(json_out, {"planned_ms": 2.0}, section="placement",
+                 history_out=hist)
+    assert not os.path.exists(str(tmp_path / "BENCH_history.jsonl"))
+    assert len(load_history(hist)) == 1
