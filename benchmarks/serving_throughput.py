@@ -18,7 +18,17 @@ Acceptance targets (ISSUE 2), asserted here:
   * both paths emit identical token streams (greedy decode is
     deterministic; batching must not change results).
 
+Chaos mode (``--faults seed=0,rate=0.05``) replays the same trace through a
+second runtime with a pinned deterministic fault schedule and asserts the
+ISSUE 9 survival properties instead of the speedup: no hang, every request
+terminates with a result or a *structured* error, requests that dodge the
+faults are bitwise-identical to the fault-free run, and the KV pool +
+resource ledger end with zero leaks.  ``--flight-dir`` dumps flight-recorder
+incident files there (the CI chaos-smoke job uploads them on failure).
+
     PYTHONPATH=src python -m benchmarks.serving_throughput [--smoke]
+    PYTHONPATH=src python -m benchmarks.serving_throughput --smoke \
+        --faults seed=0,rate=0.05 --flight-dir /tmp/flight
 """
 import argparse
 import time
@@ -27,6 +37,8 @@ import jax
 import numpy as np
 
 from repro.configs import get_smoke_config
+from repro.core.faults import FaultInjector
+from repro.core.ledger import FlightRecorder, MemoryLedger
 from repro.core.plan_cache import PlanCache
 from repro.models import build_model
 from repro.serving import AsyncServingRuntime, ServeRequest, serve_sequential
@@ -41,6 +53,62 @@ def make_trace(rng, vocab, n_requests, prompt_lens, gen):
             for i in range(n_requests)]
 
 
+def run_chaos(model, params, reqs, prompt_lens, args):
+    """Replay the trace under a pinned fault schedule and assert the
+    survival properties (no hang, structured errors, bitwise-identical
+    non-faulted outputs, zero leaks)."""
+    # fault-free reference pass: the bitwise baseline
+    led0 = MemoryLedger()
+    rt0 = AsyncServingRuntime(model, params, max_batch=args.max_batch,
+                              max_seq=args.max_seq,
+                              plan_cache=PlanCache(ledger=led0), ledger=led0)
+    rt0.warmup(prompt_lens)
+    clean = {r.rid: r for r in rt0.serve(reqs, timeout_s=180)}
+
+    faults = FaultInjector.from_spec(args.faults)
+    recorder = FlightRecorder(dump_dir=args.flight_dir)
+    ledger = MemoryLedger()
+    rt = AsyncServingRuntime(model, params, max_batch=args.max_batch,
+                             max_seq=args.max_seq,
+                             plan_cache=PlanCache(ledger=ledger),
+                             ledger=ledger, recorder=recorder, faults=faults)
+    rt.warmup(prompt_lens)
+    t0 = time.perf_counter()
+    results = rt.serve(reqs, timeout_s=180)        # no-hang bound
+    t_chaos = time.perf_counter() - t0
+
+    n_ok = sum(1 for r in results if r.status == "ok")
+    n_err = len(results) - n_ok
+    emit([("serving_chaos", t_chaos * 1e3,
+           f"{n_ok}/{len(results)} ok, {faults.n_errors()} faults "
+           f"injected ({args.faults})")])
+    print(f"[chaos] {len(results)} requests under '{args.faults}': "
+          f"{n_ok} ok, {n_err} resolved with structured errors, "
+          f"{faults.n_errors()} faults injected in {t_chaos:.1f}s")
+
+    # -- survival asserts ---------------------------------------------------
+    assert len(results) == len(reqs), (
+        f"hang/loss: {len(reqs) - len(results)} requests never resolved")
+    for r in results:
+        if r.status == "ok":
+            assert r.tokens == clean[r.rid].tokens, (
+                f"request {r.rid}: non-faulted output diverged from the "
+                f"fault-free run")
+        else:
+            assert r.error is not None and "reason" in r.error, (
+                f"request {r.rid} resolved {r.status} without a "
+                f"structured error")
+    occ = rt.pool.occupancy()
+    assert occ["slots_used"] == 0 and occ["pages_used"] == 0, (
+        f"KV pool not drained after chaos run: {occ}")
+    leaks = rt.ledger.leaks()
+    assert not leaks, f"ledger leaks after chaos run: {leaks}"
+    print("[chaos] OK: every request terminated (result or structured "
+          "error), non-faulted outputs bitwise-identical, zero KV/ledger "
+          "leaks")
+    return n_ok, n_err
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -51,6 +119,11 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--faults", default=None, metavar="SPEC",
+                    help="chaos mode: pinned fault schedule, e.g. "
+                         "'seed=0,rate=0.05' (skips the speedup benchmark)")
+    ap.add_argument("--flight-dir", default=None,
+                    help="directory for flight-recorder incident dumps")
     args = ap.parse_args(argv)
 
     n_requests = args.requests or (8 if args.smoke else 16)
@@ -63,6 +136,9 @@ def main(argv=None):
     rng = np.random.RandomState(args.seed)
     reqs = make_trace(rng, cfg.vocab, n_requests, prompt_lens, gen)
     total_tokens = sum(r.gen for r in reqs)
+
+    if args.faults:
+        return run_chaos(model, params, reqs, prompt_lens, args)
 
     # -- sequential seed path (warm: jit memo reused across invocations) ----
     pc_seq = PlanCache()

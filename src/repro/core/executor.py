@@ -130,6 +130,7 @@ class ExecContext:
     rules: ShardingRules = ShardingRules()
     interpret: bool = True          # pallas interpret mode (CPU container)
     tracer: Optional[Any] = None    # core.tracing.Tracer; None = fast path
+    faults: Optional[Any] = None    # core.faults.FaultInjector; None = off
 
     def params_for(self, node):
         path = node.attrs.get("pp")
@@ -510,8 +511,10 @@ def _i_filter(ctx, args, node):
 
 def run_plan(pplan: PhysPlan, ctx: ExecContext, values: dict) -> tuple:
     tracer = ctx.tracer
-    if tracer is None or not tracer.enabled:
-        # the untouched fast path: tracing off means zero per-op overhead
+    traced = tracer is not None and tracer.enabled
+    if not traced and ctx.faults is None:
+        # the untouched fast path: tracing and fault injection both off
+        # means zero per-op overhead
         env = dict(values)
         for n in pplan.topo():
             opdef = PHYS_OPS.get(n.impl)
@@ -521,7 +524,40 @@ def run_plan(pplan: PhysPlan, ctx: ExecContext, values: dict) -> tuple:
                     f"no engine implements {n.impl!r}")
             env[n.id] = fn(ctx, [env[i] for i in n.inputs], n)
         return tuple(env[o] for o in pplan.outputs)
-    return _run_plan_traced(pplan, ctx, values)
+    if traced:
+        return _run_plan_traced(pplan, ctx, values)
+    return _run_plan_faulted(pplan, ctx, values)
+
+
+def _fault_site(n) -> tuple:
+    """Site key for a physical node: xfer/collective nodes get their own
+    category (the "sharded" failure class), everything else is "node"."""
+    if n.impl.startswith("xfer_"):
+        return ("xfer", n.id, n.impl)
+    return ("node", n.id, n.impl)
+
+
+def _run_plan_faulted(pplan: PhysPlan, ctx: ExecContext,
+                      values: dict) -> tuple:
+    """run_plan with a FaultInjector at every node boundary.  Impl
+    exceptions (injected or real) are wrapped into the ExecError taxonomy
+    with their site attached, so the resilience layer can classify and the
+    breaker can pick a fallback class."""
+    from .resilience import classify
+    faults = ctx.faults
+    env = dict(values)
+    for n in pplan.topo():
+        opdef = PHYS_OPS.get(n.impl)
+        fn = dispatch(n.impl, opdef.backend if opdef else None)
+        if fn is None:
+            raise NotImplementedError(f"no engine implements {n.impl!r}")
+        engine = (opdef.backend or "xla") if opdef else "xla"
+        try:
+            faults.check(_fault_site(n))
+            env[n.id] = fn(ctx, [env[i] for i in n.inputs], n)
+        except Exception as exc:
+            raise classify(exc, node=n, engine=engine) from exc
+    return tuple(env[o] for o in pplan.outputs)
 
 
 def _run_plan_traced(pplan: PhysPlan, ctx: ExecContext, values: dict) -> tuple:
@@ -545,6 +581,8 @@ def _run_plan_traced(pplan: PhysPlan, ctx: ExecContext, values: dict) -> tuple:
         if "dist" in n.attrs:
             attrs["dist"] = n.attrs["dist"]
         with tracer.span(n.id, "op", **attrs) as sp:
+            if ctx.faults is not None:
+                ctx.faults.check(_fault_site(n))
             out = fn(ctx, [env[i] for i in n.inputs], n)
             if n.impl.startswith("xfer_"):
                 kind = n.impl[len("xfer_"):]
@@ -601,6 +639,7 @@ class PlannedFunction:
     interpret: bool = True
     plan_id: str = ""
     staged: Optional[Any] = None     # StagedPhysicalPlan
+    faults: Optional[Any] = None     # core.faults.FaultInjector; None = off
     last_run_trace: Optional[Any] = None   # RunTrace of the last analyze()
     _predicted: Optional[dict] = None      # node id -> (seconds, features)
 
@@ -632,7 +671,7 @@ class PlannedFunction:
     def __call__(self, params, inputs: dict, aux: Optional[dict] = None):
         ctx = ExecContext(root=params, scope=params, aux=aux or {},
                           mesh=self.mesh, rules=self.rules,
-                          interpret=self.interpret)
+                          interpret=self.interpret, faults=self.faults)
         outs = run_plan(self.concrete, ctx, inputs)
         return outs if len(outs) > 1 else outs[0]
 
@@ -666,7 +705,8 @@ class PlannedFunction:
         return predicted
 
     def analyze(self, params, inputs: dict, aux: Optional[dict] = None, *,
-                feedback=None, cost_model=None, recorder=None):
+                feedback=None, cost_model=None, recorder=None,
+                trip_context=None):
         """EXPLAIN ANALYZE execution: run the plan **eagerly** under a span
         tracer, device-sync **once** at the end, and build a
         :class:`~repro.core.tracing.RunTrace` pairing every physical node's
@@ -679,7 +719,11 @@ class PlannedFunction:
         :class:`~repro.core.ledger.FlightRecorder`), the run's trace summary
         lands in the ring, and two incident triggers trip a dump: an
         executor exception, and any BoundedRel overflow observed in the
-        resolved counts.  Returns the plan outputs, like ``__call__``."""
+        resolved counts.  ``trip_context`` — a zero-arg callable returning a
+        dict — is merged into the ``executor_error`` trip detail, letting
+        the serving runtime attach the ledger snapshot + metrics report so
+        an incident dump shows memory/occupancy state at failure time.
+        Returns the plan outputs, like ``__call__``."""
         from .tracing import RunTrace, Tracer
         tracer = Tracer()
         sink: list = []
@@ -687,7 +731,8 @@ class PlannedFunction:
         run_aux["count_sink"] = sink
         ctx = ExecContext(root=params, scope=params, aux=run_aux,
                           mesh=self.mesh, rules=self.rules,
-                          interpret=self.interpret, tracer=tracer)
+                          interpret=self.interpret, tracer=tracer,
+                          faults=self.faults)
         t0 = time.perf_counter()
         try:
             with tracer.span("run", "run", plan_id=self.plan_id):
@@ -696,8 +741,13 @@ class PlannedFunction:
                 jax.block_until_ready(outs)
         except Exception as exc:
             if recorder is not None:
-                recorder.trip("executor_error", {
-                    "plan_id": self.plan_id, "error": repr(exc)})
+                detail = {"plan_id": self.plan_id, "error": repr(exc)}
+                if trip_context is not None:
+                    try:
+                        detail.update(trip_context() or {})
+                    except Exception:
+                        pass
+                recorder.trip("executor_error", detail)
             raise
         wall_ms = (time.perf_counter() - t0) * 1e3
         # ONE device_get: deferred span attrs + the count sink together

@@ -2,9 +2,12 @@
 
 Request flow:  admission (bucket → cached plan) → scheduler (join/leave the
 decode batch at token boundaries) → planned prefill seeds the paged KV pool
-→ batched decode.  See ARCHITECTURE.md § "Serving runtime".
+→ batched decode.  Fault tolerance (deadlines, retries, degraded-mode
+replanning) rides the same seams.  See ARCHITECTURE.md § "Serving runtime"
+and § "Fault tolerance & graceful degradation".
 """
 from .admission import AdmissionController, bucket_len
+from .degrade import DegradePolicy
 from .kv_pool import PagedKVPool, PageTable
 from .metrics import RequestMetrics, ServingMetrics
 from .runtime import (AsyncServingRuntime, ServeRequest, ServeResult,
@@ -13,6 +16,7 @@ from .scheduler import ContinuousBatchScheduler, SlotState
 
 __all__ = [
     "AdmissionController", "bucket_len",
+    "DegradePolicy",
     "PagedKVPool", "PageTable",
     "RequestMetrics", "ServingMetrics",
     "AsyncServingRuntime", "ServeRequest", "ServeResult", "serve_sequential",

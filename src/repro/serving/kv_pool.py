@@ -144,6 +144,12 @@ class PagedKVPool:
     def table(self, request_id) -> PageTable:
         return self._tables[request_id]
 
+    def holds(self, request_id) -> bool:
+        """True while the request owns a slot + pages (fault-path cleanup
+        checks this before freeing, since prefill faults can land either
+        side of the alloc)."""
+        return request_id in self._tables
+
     # -- data path ----------------------------------------------------------
     def _seed_impl(self, cache, kv_groups, slot):
         new = {g: dict(c) for g, c in cache.items()}

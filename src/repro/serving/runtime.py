@@ -32,8 +32,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.executor import plan_and_compile
+from ..core.faults import FaultInjectedError
 from ..core.ir import SystemCatalog
 from ..core.ledger import FlightRecorder, MemoryLedger, default_ledger
+from ..core.resilience import classify
 from ..core.plan_cache import (PlanCache, default_plan_cache,
                                load_plan_cache, save_plan_cache)
 from ..models.decode import decode_step, decode_step_batched, init_cache
@@ -50,6 +52,7 @@ class ServeRequest:
     prompt: tuple                    # token ids
     gen: int
     arrival: float = 0.0             # seconds after run() start
+    deadline_s: Optional[float] = None   # budget from arrival; None = none
 
     @property
     def prompt_len(self) -> int:
@@ -60,8 +63,14 @@ class ServeRequest:
 class ServeResult:
     rid: object
     tokens: list = field(default_factory=list)
-    status: str = "ok"               # ok | rejected | truncated
+    # ok | rejected | truncated | deadline_exceeded | error | timeout
+    status: str = "ok"
     metrics: Optional[RequestMetrics] = None
+    error: Optional[dict] = None     # structured failure detail (non-ok)
+
+    @property
+    def ok(self) -> bool:
+        return self.status in ("ok", "truncated")
 
 
 class AsyncServingRuntime:
@@ -77,7 +86,11 @@ class AsyncServingRuntime:
                  registry: Optional[MetricsRegistry] = None,
                  ledger: Optional[MemoryLedger] = None,
                  recorder: Optional[FlightRecorder] = None,
-                 snapshot_every: int = 64):
+                 snapshot_every: int = 64,
+                 faults=None,
+                 degrade=None,
+                 prefill_retries: int = 2,
+                 decode_fault_cap: int = 8):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -123,6 +136,19 @@ class AsyncServingRuntime:
             self.model, p, c, t, i), donate_argnums=1)
         self._results: dict = {}
         self._t0 = time.perf_counter()
+        # fault tolerance: an optional FaultInjector exercises the
+        # admission/prefill/decode seams; prefill faults retry by
+        # re-enqueueing (bounded), decode-tick faults retry the whole tick
+        # (state is untouched — the fault fires before the donated decode
+        # call); a DegradePolicy (serving.degrade) cheapens analytical
+        # plans under overload
+        self.faults = faults
+        self.degrade = degrade
+        self.prefill_retries = int(prefill_retries)
+        self.decode_fault_cap = int(decode_fault_cap)
+        self._prefill_attempts: dict = {}   # rid -> failed attempts
+        self._tick_no = 0
+        self._decode_faults = 0             # consecutive faulted ticks
 
     # -- planning ----------------------------------------------------------
     def _now(self) -> float:
@@ -227,14 +253,36 @@ class AsyncServingRuntime:
     # -- admission ----------------------------------------------------------
     def _reject(self, req: ServeRequest, reason: str) -> None:
         self.metrics.rejected += 1
-        self._results[req.rid] = ServeResult(req.rid, [], "rejected", None)
+        self._results[req.rid] = ServeResult(
+            req.rid, [], "rejected", None,
+            error={"reason": reason, "rid": str(req.rid)})
         self.recorder.trip("admission_reject", {
             "rid": str(req.rid), "reason": reason,
             "prompt_len": req.prompt_len, "gen": req.gen,
             "queue_depth": self.scheduler.queue_depth(),
             "active": self.scheduler.n_active()})
 
+    def _deadline_at(self, req: ServeRequest) -> float:
+        """Absolute (run-clock) expiry; +inf when no deadline is set."""
+        if req.deadline_s is None:
+            return float("inf")
+        return req.arrival + req.deadline_s
+
+    def _estimate_completion_s(self, req: ServeRequest) -> Optional[float]:
+        """Observed-latency completion estimate for deadline admission:
+        queue wait + TTFT + gen * TPOT from the lm.* summaries.  None until
+        enough traffic has been observed to estimate at all."""
+        s = self.metrics
+        if s._ttft.count < 1 or (req.gen > 1 and s._tpot.count < 1):
+            return None
+        return (s._queue_wait.mean + s._ttft.mean
+                + max(req.gen - 1, 0) * s._tpot.mean)
+
     def submit(self, req: ServeRequest) -> None:
+        if self.faults is not None:
+            # admission stall: the front door pauses (queue growth +
+            # deadline pressure); stall sites never raise
+            self.faults.check(("admission", str(req.rid)))
         if req.prompt_len < 1 or req.gen < 1:
             self._reject(req, "empty prompt or zero gen")
             return
@@ -246,6 +294,17 @@ class AsyncServingRuntime:
         except ValueError:
             self._reject(req, "unbucketable")
             return
+        if req.deadline_s is not None:
+            now = self._now()
+            if now >= self._deadline_at(req):
+                self._resolve_deadline(req, phase="submit")
+                return
+            est = self._estimate_completion_s(req)
+            if est is not None and now + est > self._deadline_at(req):
+                # cannot finish in time at observed latencies: shedding at
+                # the door beats burning KV pages on a doomed request
+                self._reject(req, "deadline_unmeetable")
+                return
         action = self.admission.decide(
             warm=self.is_warm(bucket),
             queue_depth=self.scheduler.queue_depth(),
@@ -257,12 +316,49 @@ class AsyncServingRuntime:
         # *planned* once the decode batch drains (scheduler-side gate)
         self.scheduler.enqueue(req, bucket, self._now())
 
+    # -- deadlines -----------------------------------------------------------
+    def _resolve_deadline(self, req: ServeRequest, *, phase: str,
+                          tokens: Sequence[int] = (), rm=None) -> None:
+        """Resolve a request whose deadline expired: structured error,
+        partial tokens preserved, one deadline_miss trip per request."""
+        self.metrics.registry.count("serving.deadline_miss")
+        self._results[req.rid] = ServeResult(
+            req.rid, list(tokens), "deadline_exceeded", rm,
+            error={"reason": "deadline_exceeded", "rid": str(req.rid),
+                   "phase": phase, "deadline_s": req.deadline_s,
+                   "tokens_done": len(tokens)})
+        self.recorder.trip("deadline_miss", {
+            "rid": str(req.rid), "phase": phase,
+            "deadline_s": req.deadline_s, "now": self._now(),
+            "tokens_done": len(tokens)})
+
+    def _expire_deadlines(self) -> None:
+        """Deadline sweep, run once per loop iteration: queued requests are
+        dropped in place; active ones leave at this token boundary, their
+        KV pages going straight back to the pool (ledger-verified — the
+        pool's one allocation never leaks per-request state)."""
+        now = self._now()
+        for w in self.scheduler.waiting():
+            if now >= self._deadline_at(w.request):
+                self.scheduler.remove(w)
+                self._resolve_deadline(w.request, phase="queued")
+        for st in list(self.scheduler.active()):
+            if now >= self._deadline_at(st.request):
+                self.scheduler.leave(st.slot)
+                self.pool.free(st.request.rid)
+                st.rm.finished_at = now
+                self._resolve_deadline(st.request, phase="decode",
+                                       tokens=st.out, rm=st.rm)
+
     # -- prefill + join ------------------------------------------------------
     def _prefill_and_join(self, req: ServeRequest, bucket: int,
                           enqueued_at: float) -> None:
         rm = RequestMetrics(req.rid, bucket=bucket,
                             prompt_len=req.prompt_len, gen=req.gen,
                             submitted_at=enqueued_at)
+        if self.faults is not None:
+            # before any allocation: a prefill fault leaves nothing behind
+            self.faults.check(("prefill", str(req.rid), bucket))
         fwd, jitted, plan_ms = self._plan_prefill(bucket)
         rm.plan_ms = plan_ms
         t0 = time.perf_counter()
@@ -313,18 +409,50 @@ class AsyncServingRuntime:
             if not self.pool.can_admit(w.request.prompt_len + 1):
                 break                        # memory pressure: keep queueing
             req = self.scheduler.pop(w)
-            self._prefill_and_join(req, w.bucket, w.enqueued_at)
+            try:
+                self._prefill_and_join(req, w.bucket, w.enqueued_at)
+            except Exception as exc:
+                self._prefill_failure(req, w.bucket, w.enqueued_at, exc)
             joined = True
         return joined
 
+    def _prefill_failure(self, req: ServeRequest, bucket: int,
+                         enqueued_at: float, exc: Exception) -> None:
+        """A prefill attempt died (injected or real).  Clean up any pages
+        the attempt claimed, then either re-enqueue (bounded retries,
+        retryable errors only) or resolve with a structured error."""
+        if self.pool.holds(req.rid):
+            self.pool.free(req.rid)
+        err = classify(exc, plan_id=f"prefill_bucket_{bucket}")
+        attempts = self._prefill_attempts.get(req.rid, 0) + 1
+        self._prefill_attempts[req.rid] = attempts
+        self.metrics.registry.count("serving.prefill_faults")
+        self.recorder.record("prefill_fault", {
+            "rid": str(req.rid), "bucket": bucket, "attempt": attempts,
+            "error": err.to_dict()})
+        if err.retryable and attempts <= self.prefill_retries:
+            # back of its bucket queue: the retry is a fresh occurrence of
+            # the fault site, so rate-injected faults clear on replay
+            self.scheduler.enqueue(req, bucket, enqueued_at)
+            return
+        self._prefill_attempts.pop(req.rid, None)
+        self._results[req.rid] = ServeResult(
+            req.rid, [], "error", None,
+            error={"reason": "prefill_failed", "rid": str(req.rid),
+                   "attempts": attempts, **err.to_dict()})
+        self.recorder.trip("prefill_error", {
+            "rid": str(req.rid), "bucket": bucket, "attempts": attempts,
+            "error": err.to_dict()})
+
     # -- decode -------------------------------------------------------------
-    def _finish(self, st, status: str) -> None:
+    def _finish(self, st, status: str, error: Optional[dict] = None) -> None:
         self.scheduler.leave(st.slot)
         self.pool.free(st.request.rid)
+        self._prefill_attempts.pop(st.request.rid, None)
         st.rm.finished_at = self._now()
         self.metrics.finish(st.rm)
         self._results[st.request.rid] = ServeResult(
-            st.request.rid, list(st.out), status, st.rm)
+            st.request.rid, list(st.out), status, st.rm, error=error)
 
     def _decode_tick(self) -> bool:
         """One continuous-batching step: every active slot decodes one token
@@ -335,6 +463,34 @@ class AsyncServingRuntime:
         self._maybe_snapshot()
         if not active:
             return False
+        self._tick_no += 1
+        if self.faults is not None:
+            # the fault fires BEFORE the donated decode call, so a faulted
+            # tick leaves the pool cache and every slot position untouched
+            # — the retry is simply the next loop iteration re-running the
+            # identical tick
+            try:
+                self.faults.check(("decode", self._tick_no))
+            except FaultInjectedError as exc:
+                self._decode_faults += 1
+                self.metrics.registry.count("serving.decode_faults")
+                self.recorder.record("decode_fault", {
+                    "tick": self._tick_no, "consecutive": self._decode_faults,
+                    "error": repr(exc)})
+                if self._decode_faults > self.decode_fault_cap:
+                    # persistently broken decode: fail the active batch
+                    # with structured errors instead of spinning forever
+                    detail = {"reason": "decode_failed",
+                              "consecutive_faults": self._decode_faults,
+                              "error": repr(exc)}
+                    self.recorder.trip("decode_error", detail)
+                    for st in list(self.scheduler.active()):
+                        self._finish(st, "error",
+                                     error={**detail,
+                                            "rid": str(st.request.rid)})
+                    self._decode_faults = 0
+                return True
+        self._decode_faults = 0
         toks = np.zeros((self.max_batch, 1), np.int32)
         idxs = np.zeros((self.max_batch,), np.int32)
         for st in active:
@@ -362,9 +518,39 @@ class AsyncServingRuntime:
                 await asyncio.sleep(delay)
             self.submit(r)
 
+    def _fail_outstanding(self, requests, timeout_s: float) -> None:
+        """Loop timeout: resolve every request that has no result yet with
+        a structured timeout error and return its resources — active slots
+        leave (KV pages freed through the normal _finish path), queued
+        entries drop, never-submitted ones resolve too.  One serve_timeout
+        trip captures the stuck state."""
+        self.recorder.trip("serve_timeout", {
+            "timeout_s": timeout_s, "done": len(self._results),
+            "expected": len(requests),
+            "queue_depth": self.scheduler.queue_depth(),
+            "active": self.scheduler.n_active(),
+            "telemetry": self.telemetry_snapshot()})
+        for st in list(self.scheduler.active()):
+            self._finish(st, "timeout",
+                         error={"reason": "timeout", "phase": "decode",
+                                "rid": str(st.request.rid),
+                                "timeout_s": timeout_s,
+                                "tokens_done": len(st.out)})
+        for w in list(self.scheduler.waiting()):
+            self.scheduler.remove(w)
+        for r in requests:
+            if r.rid not in self._results:
+                self._results[r.rid] = ServeResult(
+                    r.rid, [], "timeout", None,
+                    error={"reason": "timeout", "phase": "queued",
+                           "rid": str(r.rid), "timeout_s": timeout_s})
+
     async def run(self, requests: Sequence[ServeRequest],
                   timeout_s: float = 300.0) -> list:
-        """Serve a trace of requests; returns ServeResults in input order."""
+        """Serve a trace of requests; returns ServeResults in input order.
+        Every request terminates with a result or a structured error: a
+        loop timeout resolves the outstanding requests (freeing their KV
+        slots) instead of raising out of the loop."""
         self._t0 = time.perf_counter()
         pending = sorted(requests, key=lambda r: r.arrival)
         n_expected = len(pending)
@@ -372,11 +558,9 @@ class AsyncServingRuntime:
         try:
             while len(self._results) < n_expected:
                 if self._now() > timeout_s:
-                    raise TimeoutError(
-                        f"serving loop exceeded {timeout_s}s with "
-                        f"{len(self._results)}/{n_expected} done "
-                        f"(queue={self.scheduler.queue_depth()}, "
-                        f"active={self.scheduler.n_active()})")
+                    self._fail_outstanding(requests, timeout_s)
+                    break
+                self._expire_deadlines()
                 progressed = self._try_join()
                 progressed = self._decode_tick() or progressed
                 # yield so arrivals interleave with serving; back off when
@@ -390,12 +574,28 @@ class AsyncServingRuntime:
 
     def serve(self, requests: Sequence[ServeRequest],
               timeout_s: float = 300.0) -> list:
-        """Synchronous wrapper around :meth:`run`."""
-        return asyncio.run(self.run(requests, timeout_s=timeout_s))
+        """Synchronous wrapper around :meth:`run`.  Refuses to nest inside
+        a running event loop (asyncio.run would raise a cryptic
+        RuntimeError after partial work)."""
+        try:
+            asyncio.get_running_loop()
+        except RuntimeError:
+            return asyncio.run(self.run(requests, timeout_s=timeout_s))
+        raise RuntimeError(
+            "serve() was called from a running event loop; call "
+            "`await runtime.run(requests, timeout_s=...)` instead")
 
     # -- analytical requests --------------------------------------------------
+    def _trip_context(self) -> dict:
+        """Incident context for executor_error trips: memory + occupancy
+        state at failure time, not just the exception repr."""
+        return {"ledger": self.ledger.snapshot(),
+                "metrics": self.registry.report()}
+
     def run_analysis(self, planned, params, inputs: dict, *,
-                     analyze: bool = False, aux: Optional[dict] = None):
+                     analyze: bool = False, aux: Optional[dict] = None,
+                     deadline_s: Optional[float] = None,
+                     degrade=None):
         """Execute an analytical (tri-store) :class:`PlannedFunction`
         through the runtime's shared metrics registry, so LM and
         analytical traffic report into one place: wall time lands in the
@@ -405,12 +605,34 @@ class AsyncServingRuntime:
         the trace's wall/sync split is recorded too.  Either path feeds the
         flight recorder: traced runs land their RunTrace summary in the
         ring (and trip a dump on BoundedRel overflow, inside ``analyze``);
-        an executor exception trips an ``executor_error`` dump."""
+        an executor exception trips an ``executor_error`` dump carrying the
+        current ledger snapshot + metrics report.
+
+        ``degrade``: with a :class:`~repro.serving.degrade.DegradePolicy`
+        attached to the runtime, a standing query is transparently switched
+        to its cheaper variant under overload — pass an int to force a
+        ladder level, ``False`` to opt this call out.  ``deadline_s``
+        bounds the run's wall time *post hoc*: a miss lands an
+        ``analytics.deadline_miss`` count and a recorder event (analytical
+        plans execute as one JAX computation — there is no token boundary
+        to cancel at, so the deadline informs shedding, not abortion)."""
+        if degrade is not False and self.degrade is not None:
+            lvl = degrade if isinstance(degrade, int) \
+                and not isinstance(degrade, bool) else \
+                self.degrade.level(
+                    queue_depth=self.scheduler.queue_depth(),
+                    max_batch=self.max_batch,
+                    kv_fill=self.pool.occupancy()["fill"])
+            if lvl > 0:
+                planned = self.degrade.replan(planned, lvl, cache=self.pc)
+        if self.faults is not None and planned.faults is None:
+            planned.faults = self.faults
         t0 = time.perf_counter()
         try:
             if analyze:
                 outs = planned.analyze(params, inputs, aux=aux,
-                                       recorder=self.recorder)
+                                       recorder=self.recorder,
+                                       trip_context=self._trip_context)
                 tr = planned.last_run_trace
                 self.registry.summary("analytics.trace_wall_ms").observe(
                     tr.wall_ms)
@@ -421,15 +643,20 @@ class AsyncServingRuntime:
                 outs = planned(params, inputs, aux=aux)
                 jax.block_until_ready(outs)
         except Exception as exc:
-            # analyze() already tripped for its own failures; only the
-            # untraced path needs the executor_error capture here
+            # analyze() already tripped for its own failures (with the same
+            # trip context); only the untraced path needs capture here
             if not analyze:
                 self.recorder.trip("executor_error", {
                     "plan_id": getattr(planned, "plan_id", ""),
-                    "error": repr(exc)})
+                    "error": repr(exc), **self._trip_context()})
             raise
-        self.registry.summary("analytics.run_ms").observe(
-            (time.perf_counter() - t0) * 1e3)
+        elapsed_s = time.perf_counter() - t0
+        if deadline_s is not None and elapsed_s > deadline_s:
+            self.registry.count("analytics.deadline_miss")
+            self.recorder.record("deadline_miss", {
+                "plan_id": planned.plan_id, "kind": "analysis",
+                "deadline_s": deadline_s, "elapsed_s": elapsed_s})
+        self.registry.summary("analytics.run_ms").observe(elapsed_s * 1e3)
         self.registry.count("analytics.requests")
         self._maybe_snapshot(force=True)
         return outs

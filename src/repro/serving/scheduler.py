@@ -81,6 +81,15 @@ class ContinuousBatchScheduler:
         assert q[0] is waiting, "pop must take the queue head"
         return q.popleft().request
 
+    def remove(self, waiting: _Waiting) -> None:
+        """Drop a waiting entry from anywhere in its bucket queue (deadline
+        expiry and timeout resolution cancel mid-queue, not just heads)."""
+        self.queues[waiting.bucket].remove(waiting)
+
+    def waiting(self) -> list:
+        """Every queued entry across buckets (deadline sweep order-free)."""
+        return [w for q in self.queues.values() for w in q]
+
     # -- batch side --------------------------------------------------------
     def free_slot(self) -> Optional[int]:
         for i, s in enumerate(self.slots):

@@ -1,0 +1,630 @@
+"""Fault tolerance: deterministic injection, the ExecError taxonomy,
+retry/backoff, circuit-breaker blocklists that provably re-plan, serving
+deadlines/cancellation with zero KV leaks, and degraded-mode replanning."""
+import asyncio
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.adil import Analysis
+from repro.core.executor import ExecContext, plan_and_compile
+from repro.core.faults import FaultInjectedError, FaultInjector
+from repro.core.ir import SystemCatalog, TensorT, standard_catalog
+from repro.core.ledger import FlightRecorder, MemoryLedger
+from repro.core.plan_cache import PlanCache
+from repro.core.resilience import (CircuitBreaker, ExecError,
+                                   ResilientExecutor, RetryPolicy, classify,
+                                   degrade_options, fallback_class)
+from repro.core.rewrite import DEFAULT_PIPELINE
+from repro.models import build_model
+from repro.serving import (AsyncServingRuntime, DegradePolicy, ServeRequest,
+                           ServeResult)
+from repro.stores import (ColumnStore, GraphStore, TextStore, store_engines)
+
+CAT = standard_catalog()
+SYS = SystemCatalog()
+# keep compaction as standalone physical nodes (named fault sites) instead
+# of steps folded into fused rel chains
+NOFUSE_PIPELINE = tuple(p for p in DEFAULT_PIPELINE if p != "fuse_store_ops")
+
+
+# --------------------------------------------------------------------------
+# fault injector: determinism, spec parsing, site filters
+# --------------------------------------------------------------------------
+
+def _drive(fi, n=40):
+    for i in range(n):
+        try:
+            fi.check(("node", f"n{i % 8}", "impl_x"))
+        except FaultInjectedError:
+            pass
+    return fi.schedule()
+
+
+def test_fault_injector_same_seed_same_schedule():
+    a = _drive(FaultInjector(seed=7, rate=0.3))
+    b = _drive(FaultInjector(seed=7, rate=0.3))
+    assert a and a == b
+    # reset() replays the identical schedule on the same instance
+    fi = FaultInjector(seed=7, rate=0.3)
+    first = _drive(fi)
+    fi.reset()
+    assert _drive(fi) == first
+
+
+def test_fault_injector_different_seed_different_schedule():
+    a = _drive(FaultInjector(seed=7, rate=0.3))
+    b = _drive(FaultInjector(seed=8, rate=0.3))
+    assert a != b
+
+
+def test_fault_injector_occurrence_keyed():
+    """The n-th execution of a site is an independent decision: a site that
+    faults on occurrence 0 can pass on occurrence 1 (what makes bounded
+    retries converge under rate-based injection)."""
+    fi = FaultInjector(seed=0, rate=0.5)
+    outcomes = []
+    for _ in range(16):
+        try:
+            fi.check(("node", "same_site", "impl"))
+            outcomes.append(False)
+        except FaultInjectedError:
+            outcomes.append(True)
+    assert True in outcomes and False in outcomes
+    # and the pure decision function agrees with what happened
+    assert outcomes == [fi.would_fail(("node", "same_site", "impl"), i)
+                       for i in range(16)]
+
+
+def test_fault_injector_spec_and_filters():
+    fi = FaultInjector.from_spec("seed=3,rate=0.25,max_faults=2")
+    assert fi.seed == 3 and fi.rate == 0.25 and fi.max_faults == 2
+    with pytest.raises(ValueError):
+        FaultInjector.from_spec("seed=1,bogus=2")
+    with pytest.raises(ValueError):
+        FaultInjector(rate=1.5)
+    # category filter: only named categories raise
+    fi = FaultInjector(seed=0, rate=1.0, categories=("prefill",))
+    fi.check(("node", "n0", "impl"))           # not in categories: passes
+    with pytest.raises(FaultInjectedError):
+        fi.check(("prefill", "r1", 16))
+    # always_fail matches site substrings regardless of rate
+    fi = FaultInjector(seed=0, rate=0.0, always_fail=("compact",))
+    with pytest.raises(FaultInjectedError):
+        fi.check(("node", "compact_filter_3", "compact_gather_xla"))
+    fi.check(("node", "rel_filter_1", "rel_filter_mask"))
+    # max_faults budget: after it is spent, even always_fail sites pass
+    fi = FaultInjector(seed=0, always_fail=("x",), max_faults=1)
+    with pytest.raises(FaultInjectedError):
+        fi.check(("node", "x1", "i"))
+    fi.check(("node", "x1", "i"))
+
+
+def test_fault_injector_stall_sleeps_instead_of_raising():
+    slept = []
+    fi = FaultInjector(seed=0, rate=1.0, stall_s=0.01, sleep=slept.append)
+    fi.check(("admission", "r1"))              # stall category: no raise
+    assert slept == [0.01]
+    assert fi.schedule()[0][0] == "stall"
+
+
+# --------------------------------------------------------------------------
+# taxonomy + retry policy
+# --------------------------------------------------------------------------
+
+def test_classify_taxonomy():
+    inj = classify(FaultInjectedError(("node", "n1", "sdpa_xla"), 0))
+    assert inj.retryable
+    fatal = classify(ValueError("bad shape"), plan_id="p1")
+    assert not fatal.retryable and fatal.plan_id == "p1"
+    transient = classify(RuntimeError("xla backend blew up"))
+    assert transient.retryable
+    # passthrough: an ExecError classifies as itself
+    e = ExecError("x", retryable=False)
+    assert classify(e) is e
+    d = classify(ValueError("v"), engine="pallas").to_dict()
+    assert d["engine"] == "pallas" and d["retryable"] is False
+
+
+def test_fallback_class_mapping():
+    assert fallback_class(ExecError("e", engine="pallas")) == "pallas"
+    assert fallback_class(ExecError("e", impl="moe_gmm_pallas")) == "pallas"
+    assert fallback_class(ExecError("e", impl="xfer_replicate")) == "sharded"
+    assert fallback_class(ExecError("e", impl="compact_gather_xla")) == \
+        "compacted"
+    assert fallback_class(ExecError("e", impl="rel_filter_mask")) is None
+
+
+def test_retry_policy_deterministic_backoff_and_deadline():
+    p = RetryPolicy(max_attempts=3, base_backoff_s=0.01, jitter=0.25, seed=5)
+    a = [p.backoff_s(i) for i in (1, 2, 3)]
+    b = [RetryPolicy(max_attempts=3, base_backoff_s=0.01, jitter=0.25,
+                     seed=5).backoff_s(i) for i in (1, 2, 3)]
+    assert a == b                              # deterministic jitter
+    assert a[0] != 0.01                        # jitter actually applied
+    err = ExecError("e", retryable=True)
+    assert p.should_retry(err, 1)
+    assert not p.should_retry(err, 3)          # attempts exhausted
+    assert not p.should_retry(ExecError("e", retryable=False), 1)
+    # the next backoff must fit inside the deadline
+    assert not p.should_retry(err, 1, elapsed_s=0.999, deadline_s=1.0)
+    assert p.should_retry(err, 1, elapsed_s=0.0, deadline_s=10.0)
+
+
+def test_degrade_options_structural_fallbacks():
+    engines = ("xla", "rel", "graph", "text", "pallas")
+    pipeline = ("decompose", "cse", "choose_compaction", "place_xfers",
+                "shard_stores")
+    e2, p2 = degrade_options(engines, pipeline, ("pallas",))
+    assert "pallas" not in e2 and p2 == pipeline
+    e3, p3 = degrade_options(engines, pipeline, ("sharded", "compacted"))
+    assert e3 == engines
+    assert "shard_stores" not in p3 and "choose_compaction" not in p3
+    assert degrade_options(engines, pipeline, ()) == (engines, pipeline)
+
+
+def test_circuit_breaker_opens_and_half_opens():
+    t = [0.0]
+    br = CircuitBreaker(threshold=2, cooldown_s=10.0, clock=lambda: t[0])
+    err = ExecError("e", engine="pallas")
+    assert br.record_failure("p1", err) is None      # 1 of 2
+    assert br.record_failure("p1", err) == "pallas"  # trips open
+    assert br.is_open("p1", "pallas")
+    assert br.blocklist("p1") == ("pallas",)
+    assert br.blocklist("p2") == ()                  # per-plan isolation
+    assert br.fingerprint("p1") == ("blocklist", "pallas")
+    t[0] = 11.0                                      # cooldown expired
+    assert not br.is_open("p1", "pallas")            # half-open probe
+    assert br.blocklist("p1") == ()
+    br.record_success("p1")                          # probe succeeded
+    assert ("close", "p1", "pallas") in br.events
+
+
+# --------------------------------------------------------------------------
+# executor fault path (analytical tri-store plans run eagerly)
+# --------------------------------------------------------------------------
+
+def _stores(rng, rows=400, nodes=64, vocab=32):
+    table = ColumnStore({
+        "hashtag": rng.randint(0, nodes, rows).astype(np.int32),
+        "doc": np.arange(rows, dtype=np.int32),
+        "ts": np.arange(rows, dtype=np.int32),
+        "engagement": (rng.rand(rows) * 50).astype(np.float32),
+    })
+    e = rng.randint(0, nodes, (2, 300))
+    graph = GraphStore.from_edges(e[0], e[1], nodes, symmetric=True)
+    corpus = TextStore.from_docs(
+        [rng.randint(0, vocab, rng.randint(2, 8)) for _ in range(rows)],
+        vocab)
+    return table, graph, corpus
+
+
+def _tri_analysis(table, graph, corpus, *, selectivity=0.05, k=16,
+                  iters=3):
+    rows, nodes = table.rows, graph.n_nodes
+    cut = int(rows * (1 - selectivity))
+    with Analysis("resil", CAT) as a:
+        tw = a.bind("tweets", table)
+        gr = a.bind("g", graph)
+        cx = a.bind("cx", corpus)
+        q = a.input("q", TensorT((corpus.vocab,), "float32", ("vocab",)))
+        t = a.op("rel_scan", tw)
+        recent = a.op("rel_filter", t, col="ts", cmp="ge", value=cut,
+                      selectivity=selectivity)
+        m = a.op("sel_mask", recent, col="doc", size=corpus.n_docs)
+        sc = a.op("text_scores", cx, q)
+        hits = a.op("masked_topk", sc, m, k=k)
+        j = a.op("rel_join", recent, hits, left_on="doc", right_on="doc")
+        trel = a.op("rel_group_agg", j, key="hashtag", num_groups=nodes,
+                    aggs=(("textrel", "sum", "score"),))
+        seeds = a.op("rel_group_agg", recent, key="hashtag",
+                     num_groups=nodes, aggs=(("seed", "count", None),))
+        sv = a.op("col_tensor", seeds, col="seed", dim="nodes")
+        pr = a.op("graph_pagerank", gr, sv, iters=iters)
+        tv = a.op("col_tensor", trel, col="textrel", dim="nodes")
+        a.store(a.op("residual_add", pr, tv))
+    return a
+
+
+def _inputs(table, graph, corpus, terms=(1, 2, 3)):
+    return {"tweets": table.payload(), "g": graph.payload(),
+            "cx": corpus.payload(),
+            "q": jnp.asarray(corpus.query_vector(terms))}
+
+
+def test_faulted_path_zero_rate_is_bitwise_identical(rng):
+    """A wired-but-silent injector must not change results: the faulted
+    executor path is the fast path plus checks, nothing else."""
+    table, graph, corpus = _stores(rng)
+    a = _tri_analysis(table, graph, corpus)
+    fn = a.compile(SYS, engines=store_engines(), cache=False)
+    ins = _inputs(table, graph, corpus)
+    base = np.asarray(fn({}, ins))
+    fn.faults = FaultInjector(seed=0, rate=0.0)
+    np.testing.assert_array_equal(np.asarray(fn({}, ins)), base)
+    assert fn.faults.checked > 0               # the faulted path really ran
+
+
+def test_executor_fault_wraps_exec_error_with_site(rng):
+    table, graph, corpus = _stores(rng)
+    a = _tri_analysis(table, graph, corpus)
+    fn = a.compile(SYS, engines=store_engines(), cache=False)
+    fn.faults = FaultInjector(seed=0, always_fail=("masked_topk",))
+    with pytest.raises(ExecError) as ei:
+        fn({}, _inputs(table, graph, corpus))
+    err = ei.value
+    assert err.retryable
+    assert "masked_topk" in err.node_id or "masked_topk" in err.impl
+    assert isinstance(err.cause, FaultInjectedError)
+
+
+def test_retry_then_fallback_bitwise_identical_and_new_plan_id(rng):
+    """The flagship loop: a persistently-failing compaction op trips the
+    breaker, the re-plan drops choose_compaction (a provably different plan
+    id), and the fallback's outputs are bitwise-identical to the fault-free
+    run of the original plan."""
+    table, graph, corpus = _stores(rng)
+    a = _tri_analysis(table, graph, corpus)     # 5% selectivity: compacts
+    ins = _inputs(table, graph, corpus)
+    clean = a.compile(SYS, engines=store_engines(), cache=False,
+                      rewrite_pipeline=NOFUSE_PIPELINE)
+    assert any("compact" in n.impl for n in clean.concrete.topo())
+    expected = np.asarray(clean({}, ins))
+
+    recorder = FlightRecorder()
+    rex = ResilientExecutor(
+        CAT, SYS, engines=store_engines(),
+        rewrite_pipeline=NOFUSE_PIPELINE,
+        policy=RetryPolicy(max_attempts=3, base_backoff_s=0.0, jitter=0.0),
+        breaker=CircuitBreaker(threshold=1),
+        recorder=recorder,
+        faults=FaultInjector(seed=0, always_fail=("compact",)),
+        sleep=lambda s: None,
+        plan_kwargs={"cache": False})
+    out, fn = rex.run(a.plan, {}, ins)
+
+    np.testing.assert_array_equal(np.asarray(out), expected)
+    assert fn.plan_id != clean.plan_id          # provably re-planned
+    assert not any("compact" in n.impl for n in fn.concrete.topo())
+    base_plan_id = rex.attempts_log[0][2]       # the undegraded plan
+    assert fn.plan_id != base_plan_id           # fallback got a new identity
+    assert rex.breaker.blocklist(base_plan_id) == ("compacted",)
+    kinds = [s for s, *_ in rex.attempts_log]
+    assert kinds == ["fail", "ok"]
+    assert any(r == "breaker_open" for r, _ in recorder.trips)
+
+
+def test_transient_fault_plain_retry_same_plan(rng):
+    """A fault budget of 1 models a transient: the retry replays the same
+    plan (no breaker trip) and succeeds bitwise."""
+    table, graph, corpus = _stores(rng)
+    a = _tri_analysis(table, graph, corpus)
+    ins = _inputs(table, graph, corpus)
+    clean = a.compile(SYS, engines=store_engines(), cache=False)
+    expected = np.asarray(clean({}, ins))
+    rex = ResilientExecutor(
+        CAT, SYS, engines=store_engines(),
+        policy=RetryPolicy(max_attempts=4, base_backoff_s=0.0, jitter=0.0),
+        breaker=CircuitBreaker(threshold=10),   # never opens
+        faults=FaultInjector(seed=0, rate=1.0, categories=("node",),
+                             max_faults=1),
+        sleep=lambda s: None,
+        plan_kwargs={"cache": False})
+    out, fn = rex.run(a.plan, {}, ins)
+    np.testing.assert_array_equal(np.asarray(out), expected)
+    # same plan as attempt 1, just retried (no breaker trip, no re-plan)
+    assert fn.plan_id == rex.attempts_log[0][2]
+    assert [s for s, *_ in rex.attempts_log] == ["fail", "ok"]
+
+
+def test_fatal_error_fails_fast_no_retry(rng):
+    table, graph, corpus = _stores(rng)
+    a = _tri_analysis(table, graph, corpus)
+    rex = ResilientExecutor(CAT, SYS, engines=store_engines(),
+                            sleep=lambda s: None,
+                            plan_kwargs={"cache": False})
+    with pytest.raises(ExecError) as ei:
+        rex.run(a.plan, {}, {})                 # missing inputs: KeyError
+    assert not ei.value.retryable
+    assert len([s for s, *_ in rex.attempts_log if s == "fail"]) == 1
+
+
+def test_deadline_stops_retries(rng):
+    table, graph, corpus = _stores(rng)
+    a = _tri_analysis(table, graph, corpus)
+    recorder = FlightRecorder()
+    rex = ResilientExecutor(
+        CAT, SYS, engines=store_engines(),
+        policy=RetryPolicy(max_attempts=50, base_backoff_s=10.0,
+                           jitter=0.0),
+        recorder=recorder,
+        faults=FaultInjector(seed=0, always_fail=("masked_topk",)),
+        sleep=lambda s: None,
+        plan_kwargs={"cache": False})
+    with pytest.raises(ExecError):
+        # the 10s backoff cannot fit in a 1s deadline: one attempt only
+        rex.run(a.plan, {}, _inputs(table, graph, corpus), deadline_s=1.0)
+    assert len(rex.attempts_log) == 1
+    assert any(r == "retries_exhausted" for r, _ in recorder.trips)
+
+
+# --------------------------------------------------------------------------
+# degraded-mode replanning for standing analytical queries
+# --------------------------------------------------------------------------
+
+def test_degrade_policy_levels():
+    pol = DegradePolicy(CAT)
+    assert pol.level(queue_depth=0, max_batch=4, kv_fill=0.1) == 0
+    assert pol.level(queue_depth=4, max_batch=4, kv_fill=0.1) == 1
+    assert pol.level(queue_depth=8, max_batch=4, kv_fill=0.1) == 2
+    assert pol.level(queue_depth=0, max_batch=4, kv_fill=0.85) == 1
+    assert pol.level(queue_depth=0, max_batch=4, kv_fill=0.99) == 2
+
+
+def test_degrade_replan_clamps_and_changes_plan_id(rng):
+    table, graph, corpus = _stores(rng)
+    a = _tri_analysis(table, graph, corpus, k=64, iters=10)
+    planned = a.compile(SYS, engines=store_engines(), cache=False)
+    ins = _inputs(table, graph, corpus)
+    full = np.asarray(planned({}, ins))
+
+    pol = DegradePolicy(CAT)
+    deg = pol.replan(planned, 2, cache=False)
+    assert deg.plan_id != planned.plan_id
+    clamped = {(c["attr"], c["to"]) for e in pol.events
+               for c in e["clamps"]}
+    assert ("k", 8) in clamped and ("iters", 3) in clamped
+    out = np.asarray(deg({}, ins))
+    assert out.shape == full.shape              # same query surface
+    # level 0 and a plan with nothing to clamp return the original object
+    assert pol.replan(planned, 0) is planned
+    small = _tri_analysis(table, graph, corpus, k=4, iters=2)
+    small_fn = small.compile(SYS, engines=store_engines(), cache=False)
+    assert pol.replan(small_fn, 2, cache=False) is small_fn
+
+
+# --------------------------------------------------------------------------
+# serving: deadlines, cancellation, timeout resolution, chaos
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = get_smoke_config("qwen3-0.6b").replace(dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init_params(jax.random.key(1))
+    return cfg, model, params
+
+
+def _runtime(model, params, **kw):
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_seq", 64)
+    # one isolated ledger shared by the plan cache and the runtime, so the
+    # plan_jit -> plan_cache lifetime ties anchor correctly and leaks() == []
+    # is a real per-test invariant
+    ledger = kw.setdefault("ledger", MemoryLedger())
+    kw.setdefault("plan_cache", PlanCache(ledger=ledger))
+    return AsyncServingRuntime(model, params, **kw)
+
+
+def _trace(rng, n=4, gen=6):
+    return [ServeRequest(f"r{i}", tuple(int(t) for t in
+                                        rng.randint(0, 64, 5 + i)),
+                         gen, arrival=0.0) for i in range(n)]
+
+
+def test_serve_timeout_resolves_every_request(served, rng):
+    """Satellite: a loop timeout resolves all outstanding requests with
+    structured errors instead of raising (the final gather used to
+    KeyError)."""
+    _, model, params = served
+    rt = _runtime(model, params)
+    reqs = _trace(rng, n=3)
+    results = rt.serve(reqs, timeout_s=0.0)     # expires immediately
+    assert len(results) == len(reqs)
+    for r in results:
+        assert r.status == "timeout"
+        assert r.error and r.error["reason"] == "timeout"
+    assert rt.pool.occupancy()["slots_used"] == 0
+    assert rt.ledger.leaks() == []
+    assert any(r == "serve_timeout" for r, _ in rt.recorder.trips)
+
+
+def test_serve_inside_running_loop_raises_clear_error(served, rng):
+    _, model, params = served
+    rt = _runtime(model, params)
+
+    async def nested():
+        rt.serve(_trace(rng, n=1))
+
+    with pytest.raises(RuntimeError, match=r"await runtime\.run"):
+        asyncio.run(nested())
+
+
+def test_deadline_expired_request_gets_structured_error(served, rng):
+    _, model, params = served
+    rt = _runtime(model, params)
+    rt.warmup([8])
+    # impossible deadline: expires the moment it is submitted
+    req = ServeRequest("dl", (1, 2, 3), 4, arrival=0.0, deadline_s=0.0)
+    ok = ServeRequest("ok", (1, 2, 3), 4, arrival=0.0)
+    res = {r.rid: r for r in rt.serve([req, ok], timeout_s=120.0)}
+    assert res["dl"].status == "deadline_exceeded"
+    assert res["dl"].error["reason"] == "deadline_exceeded"
+    assert res["ok"].status == "ok" and len(res["ok"].tokens) == 4
+    assert rt.pool.occupancy()["slots_used"] == 0
+    assert rt.ledger.leaks() == []
+
+
+def test_token_boundary_cancellation_returns_kv_pages(served, rng):
+    """Mid-decode deadline expiry: the request leaves at the next token
+    boundary, keeps its partial tokens, and its KV pages return to the
+    pool (ledger-verified: no leaked per-request state)."""
+    _, model, params = served
+    rt = _runtime(model, params)
+    rt.warmup([8])
+    rt._t0 = time.perf_counter()
+    req = ServeRequest("c1", (1, 2, 3, 4), 32, arrival=0.0, deadline_s=60.0)
+    rt.submit(req)
+    assert rt._try_join()
+    assert rt.pool.holds("c1")
+    rt._decode_tick()
+    rt._decode_tick()
+    partial = len(rt.scheduler.active()[0].out)
+    rt._t0 -= 120.0                             # run-clock passes deadline
+    rt._expire_deadlines()
+    res = rt._results["c1"]
+    assert res.status == "deadline_exceeded"
+    assert res.error["phase"] == "decode"
+    assert len(res.tokens) == partial           # partial output preserved
+    assert not rt.pool.holds("c1")
+    assert rt.pool.occupancy()["slots_used"] == 0
+    assert rt.pool.occupancy()["pages_used"] == 0
+    assert rt.ledger.leaks() == []
+    assert rt.registry.counters["serving.deadline_miss"] == 1
+
+
+def test_prefill_fault_retries_then_matches_fault_free(served, rng):
+    """A transient prefill fault re-enqueues the request; the retry
+    succeeds and the tokens are bitwise-identical to a fault-free run."""
+    _, model, params = served
+    reqs = _trace(rng, n=2, gen=5)
+    clean_rt = _runtime(model, params)
+    clean_rt.warmup([r.prompt_len for r in reqs])
+    clean = {r.rid: r.tokens for r in clean_rt.serve(reqs, timeout_s=120.0)}
+
+    faults = FaultInjector(seed=0, rate=1.0, categories=("prefill",),
+                           max_faults=1)
+    rt = _runtime(model, params, faults=faults)
+    rt.warmup([r.prompt_len for r in reqs])
+    results = {r.rid: r for r in rt.serve(reqs, timeout_s=120.0)}
+    assert faults.n_errors() == 1
+    for r in reqs:
+        assert results[r.rid].status == "ok"
+        assert results[r.rid].tokens == clean[r.rid]
+    assert any(ev.kind == "prefill_fault" for ev in rt.recorder.events())
+    assert rt.pool.occupancy()["slots_used"] == 0
+    assert rt.ledger.leaks() == []
+
+
+def test_persistent_prefill_fault_resolves_with_error(served, rng):
+    _, model, params = served
+    faults = FaultInjector(seed=0, always_fail=("prefill",))
+    rt = _runtime(model, params, faults=faults, prefill_retries=1)
+    rt.warmup([8])
+    res = rt.serve(_trace(rng, n=1), timeout_s=120.0)[0]
+    assert res.status == "error"
+    assert res.error["reason"] == "prefill_failed"
+    assert res.error["attempts"] == 2           # initial + 1 retry
+    assert rt.pool.occupancy()["slots_used"] == 0
+    assert rt.ledger.leaks() == []
+    assert any(r == "prefill_error" for r, _ in rt.recorder.trips)
+
+
+def test_persistent_decode_fault_fails_batch_structurally(served, rng):
+    _, model, params = served
+    faults = FaultInjector(seed=0, always_fail=("decode",))
+    rt = _runtime(model, params, faults=faults, decode_fault_cap=3)
+    rt.warmup([8])
+    results = rt.serve(_trace(rng, n=2, gen=4), timeout_s=120.0)
+    for r in results:
+        assert r.status == "error"
+        assert r.error["reason"] == "decode_failed"
+    assert rt.pool.occupancy()["slots_used"] == 0
+    assert rt.ledger.leaks() == []
+
+
+def test_chaos_schedule_every_request_terminates(served, rng):
+    """The acceptance property at test scale: under a pinned seeded
+    schedule every request terminates with a result or a structured
+    error, non-faulted requests match the fault-free run bitwise, and the
+    pool + ledger end clean."""
+    _, model, params = served
+    reqs = _trace(rng, n=4, gen=5)
+    clean_rt = _runtime(model, params)
+    clean_rt.warmup([r.prompt_len for r in reqs])
+    clean = {r.rid: r.tokens for r in clean_rt.serve(reqs, timeout_s=120.0)}
+
+    faults = FaultInjector(seed=0, rate=0.10,
+                           categories=("prefill", "decode"))
+    rt = _runtime(model, params, faults=faults)
+    rt.warmup([r.prompt_len for r in reqs])
+    results = rt.serve(reqs, timeout_s=120.0)
+    assert len(results) == len(reqs)
+    for r in results:
+        assert r.status in ("ok", "truncated", "rejected", "error",
+                            "deadline_exceeded", "timeout")
+        if r.status == "ok":
+            assert r.tokens == clean[r.rid]     # bitwise vs fault-free
+        else:
+            assert r.error is not None          # structured, never silent
+    assert rt.pool.occupancy()["slots_used"] == 0
+    assert rt.pool.occupancy()["pages_used"] == 0
+    assert rt.ledger.leaks() == []
+
+
+def test_executor_error_trip_includes_ledger_and_metrics(served, rng):
+    """Satellite: run_analysis incident dumps carry memory/occupancy state
+    at failure time, not just the exception repr."""
+    _, model, params = served
+    rt = _runtime(model, params)
+    table = ColumnStore({"k": np.arange(8, dtype=np.int32),
+                         "v": np.arange(8, dtype=np.float32)})
+    with Analysis("boom", CAT) as a:
+        t = a.op("rel_scan", a.bind("t", table))
+        g = a.op("rel_group_agg", t, key="k", num_groups=8,
+                 aggs=(("s", "sum", "v"),))
+        a.store(a.op("col_tensor", g, col="s", dim="nodes"))
+    planned = a.compile(SYS, engines=store_engines(), cache=False)
+    for analyze in (False, True):
+        with pytest.raises(Exception):
+            rt.run_analysis(planned, {}, {}, analyze=analyze)  # no inputs
+    trips = [ev.payload for ev in rt.recorder.events()
+             if ev.kind == "trip"
+             and ev.payload.get("reason") == "executor_error"]
+    assert len(trips) == 2
+    for t in trips:
+        assert "ledger" in t["detail"] and "total_bytes" in \
+            t["detail"]["ledger"]
+        assert "metrics" in t["detail"]
+
+
+def test_run_analysis_degrades_under_overload(served, rng):
+    _, model, params = served
+    table, graph, corpus = _stores(rng)
+    a = _tri_analysis(table, graph, corpus, k=64, iters=10)
+    planned = a.compile(SYS, engines=store_engines(), cache=False)
+    ins = _inputs(table, graph, corpus)
+    pol = DegradePolicy(CAT)
+    rt = _runtime(model, params, degrade=pol)
+    pol.registry = rt.registry
+    pol.recorder = rt.recorder
+    # normal load: the full plan runs
+    rt.run_analysis(planned, {}, ins)
+    assert "analytics.degraded" not in rt.registry.counters
+    # forced overload level: the degraded variant runs instead
+    rt.run_analysis(planned, {}, ins, degrade=2)
+    assert rt.registry.counters["analytics.degraded"] == 1
+    assert any(ev.kind == "degrade" for ev in rt.recorder.events())
+    # opt-out leaves the plan alone even with a policy attached
+    rt.run_analysis(planned, {}, ins, degrade=False)
+    assert rt.registry.counters["analytics.degraded"] == 1
+
+
+def test_run_analysis_deadline_miss_is_recorded(served, rng):
+    _, model, params = served
+    rt = _runtime(model, params)
+    table = ColumnStore({"k": np.arange(8, dtype=np.int32),
+                         "v": np.arange(8, dtype=np.float32)})
+    with Analysis("slow", CAT) as a:
+        t = a.op("rel_scan", a.bind("t", table))
+        g = a.op("rel_group_agg", t, key="k", num_groups=8,
+                 aggs=(("s", "sum", "v"),))
+        a.store(a.op("col_tensor", g, col="s", dim="nodes"))
+    planned = a.compile(SYS, engines=store_engines(), cache=False)
+    rt.run_analysis(planned, {}, {"t": table.payload()}, deadline_s=0.0)
+    assert rt.registry.counters["analytics.deadline_miss"] == 1
+    assert any(ev.kind == "deadline_miss" for ev in rt.recorder.events())
