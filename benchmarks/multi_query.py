@@ -1,0 +1,230 @@
+"""Multi-query serving: cross-query sharing vs sequential run_analysis.
+
+16 concurrent analytical clients over one shared tri-store, with the
+overlap profile real dashboards have:
+
+  * 4 **identical** heavy tri-queries (scan -> filter -> agg -> pagerank
+    + text relevance) — exact twins, single-flighted to ONE execution;
+  * 4 heavy queries that differ **only in the text query vector** — their
+    relational/graph prefix (the expensive part) comes out of the subplan
+    cache, only the text suffix re-executes (cross-query CSE);
+  * 8 **same-shape** light text-relevance queries differing in a declared
+    ``batch_param`` leaf — coalesced into ONE vmapped planned forward.
+
+Baseline: the same 16 queries through sequential ``run_analysis`` on a
+runtime without a subplan cache (exactly what every query paid before this
+change).  Both sides fully warm (XLA primitive caches populated); the
+subplan cache is cleared after warmup so the concurrent pass must earn its
+sharing during the measured run.
+
+Acceptance (ISSUE 10), asserted here:
+  * >= 3x aggregate throughput (>= 2x under ``--smoke``);
+  * per-query results bitwise-identical to isolated runs;
+  * subplan-cache bytes within the ledger budget, zero leaks after drain.
+
+    PYTHONPATH=src python -m benchmarks.multi_query [--smoke]
+    PYTHONPATH=src python -m benchmarks.multi_query --smoke \
+        --flight-dir /tmp/flight-mq
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.adil import Analysis
+from repro.core.ir import SystemCatalog, TensorT, standard_catalog
+from repro.core.ledger import FlightRecorder, MemoryLedger
+from repro.core.plan_cache import PlanCache
+from repro.models import build_model
+from repro.serving import AnalysisRequest, AsyncServingRuntime
+from repro.stores import ColumnStore, GraphStore, TextStore, store_engines
+
+from .common import emit
+
+CAT = standard_catalog()
+SYS = SystemCatalog()
+
+
+def build_stores(rng, *, rows, nodes, vocab):
+    table = ColumnStore({
+        "hashtag": rng.randint(0, nodes, rows).astype(np.int32),
+        "doc": np.arange(rows, dtype=np.int32),
+        "engagement": (rng.gamma(2.0, 12.0, rows)).astype(np.float32),
+    })
+    e = rng.randint(0, nodes, (2, rows // 2))
+    graph = GraphStore.from_edges(e[0], e[1], nodes, symmetric=True)
+    corpus = TextStore.from_docs(
+        [rng.randint(0, vocab, rng.randint(3, 10)) for _ in range(rows)],
+        vocab)
+    return table, graph, corpus
+
+
+def heavy_analysis(table, graph, corpus, *, iters):
+    """The paper's tri-query: relational seed -> pagerank authority +
+    text relevance, fused.  The graph side dominates and is independent
+    of the text query vector ``q`` — the CSE target."""
+    nodes = graph.n_nodes
+    with Analysis("pulse", CAT) as a:
+        tw = a.bind("tweets", table)
+        gr = a.bind("g", graph)
+        cx = a.bind("cx", corpus)
+        q = a.input("q", TensorT((corpus.vocab,), "float32", ("vocab",)))
+        t = a.op("rel_scan", tw)
+        hot = a.op("rel_filter", t, col="engagement", cmp="ge", value=30.0)
+        seeds = a.op("rel_group_agg", hot, key="hashtag", num_groups=nodes,
+                     aggs=(("seed", "count", None),))
+        sv = a.op("col_tensor", seeds, col="seed", dim="nodes")
+        fr = a.op("graph_expand", gr, sv, hops=2)
+        pr = a.op("graph_pagerank", gr, fr, iters=iters, damping=0.85)
+        hits = a.op("text_topk", cx, q, k=64)
+        j = a.op("rel_join", hits, tw, left_on="doc", right_on="doc")
+        trel = a.op("rel_group_agg", j, key="hashtag", num_groups=nodes,
+                    aggs=(("textrel", "sum", "score"),))
+        tv = a.op("col_tensor", trel, col="textrel", dim="nodes")
+        a.store(a.op("residual_add", pr, tv))
+    return a, a.compile(SYS, engines=store_engines(), cache=False)
+
+
+def light_analysis(table, corpus, nodes):
+    """Per-hashtag text relevance only — cheap, fully determined by the
+    query vector: the vmapped-batching target."""
+    with Analysis("textrel", CAT) as a:
+        tw = a.bind("tweets", table)
+        cx = a.bind("cx", corpus)
+        q = a.input("q", TensorT((corpus.vocab,), "float32", ("vocab",)))
+        hits = a.op("text_topk", cx, q, k=64)
+        j = a.op("rel_join", hits, tw, left_on="doc", right_on="doc")
+        trel = a.op("rel_group_agg", j, key="hashtag", num_groups=nodes,
+                    aggs=(("textrel", "sum", "score"),))
+        a.store(a.op("col_tensor", trel, col="textrel", dim="nodes"))
+    return a, a.compile(SYS, engines=store_engines(), cache=False)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="CI-sized stores")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--budget-mb", type=int, default=64,
+                    help="subplan-cache byte budget")
+    ap.add_argument("--flight-dir", default=None,
+                    help="directory for flight-recorder incident dumps")
+    args = ap.parse_args(argv)
+
+    rows = 3_000 if args.smoke else 20_000
+    nodes = 64 if args.smoke else 128
+    vocab = 64 if args.smoke else 256
+    iters = 12 if args.smoke else 24
+    target = 2.0 if args.smoke else 3.0
+
+    rng = np.random.RandomState(args.seed)
+    table, graph, corpus = build_stores(rng, rows=rows, nodes=nodes,
+                                        vocab=vocab)
+    ah, fh = heavy_analysis(table, graph, corpus, iters=iters)
+    al, fl = light_analysis(table, corpus, nodes)
+    ins = {"tweets": table.payload(), "g": graph.payload(),
+           "cx": corpus.payload()}
+    ins_l = {"tweets": ins["tweets"], "cx": ins["cx"]}
+
+    def qv():
+        return jnp.asarray(corpus.query_vector(rng.randint(0, vocab, 6)))
+
+    qa, qb1, qb2 = qv(), qv(), qv()
+    qcs = [qv() for _ in range(8)]
+    # 16 clients: 4 exact twins + 2x2 prefix-sharing + 8 batchable
+    workload = (
+        [(fh, {**ins, "q": qa}, None, ah.store_versions())] * 4
+        + [(fh, {**ins, "q": qb1}, None, ah.store_versions())] * 2
+        + [(fh, {**ins, "q": qb2}, None, ah.store_versions())] * 2
+        + [(fl, {**ins_l, "q": q}, "q", al.store_versions()) for q in qcs])
+    n = len(workload)
+
+    # isolated references (and XLA primitive-cache warmup for both paths)
+    refs = [np.asarray(fn({}, inp)) for fn, inp, _, _ in workload]
+
+    # -- sequential baseline: no subplan cache, one query at a time --------
+    cfg = get_smoke_config("qwen3-0.6b").replace(dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init_params(jax.random.key(args.seed))
+    rt_seq = AsyncServingRuntime(model, params, max_batch=2, max_seq=32,
+                                 plan_cache=PlanCache())
+    assert rt_seq.subplans is None
+    t0 = time.perf_counter()
+    seq_out = [np.asarray(rt_seq.run_analysis(fn, {}, inp))
+               for fn, inp, _, _ in workload]
+    t_seq = time.perf_counter() - t0
+
+    # -- multi-query path: admission loop + subplan cache ------------------
+    ledger = MemoryLedger()
+    recorder = FlightRecorder(dump_dir=args.flight_dir)
+    budget = args.budget_mb << 20
+    rt = AsyncServingRuntime(model, params, max_batch=2, max_seq=32,
+                             plan_cache=PlanCache(ledger=ledger),
+                             ledger=ledger, recorder=recorder,
+                             subplan_budget=budget)
+    reqs = [AnalysisRequest(rid=i, planned=fn, inputs=inp, params={},
+                            tenant=f"client{i % 4}", batch_param=bp,
+                            store_versions=sv)
+            for i, (fn, inp, bp, sv) in enumerate(workload)]
+    # warmup pass on a throwaway runtime: the isolated-reference loop above
+    # warmed the *unbatched* shapes, this warms the vmapped ones (XLA's
+    # eager kernel cache is per shape — both paths must exclude compiles,
+    # exactly like serving_throughput warms both of its paths)
+    rt_warm = AsyncServingRuntime(model, params, max_batch=2, max_seq=32,
+                                  plan_cache=PlanCache(),
+                                  subplan_budget=budget)
+    rt_warm.serve_analyses(reqs, timeout_s=600)
+    rt.subplans.clear()                   # the measured pass earns its hits
+    t0 = time.perf_counter()
+    res = rt.serve_analyses(reqs, timeout_s=600)
+    t_conc = time.perf_counter() - t0
+
+    qps_seq, qps_conc = n / t_seq, n / t_conc
+    speedup = t_seq / t_conc
+    s = rt.metrics.analytics_summary()
+    sub = rt.subplans.stats()
+    emit([
+        ("mq_sequential", t_seq / n * 1e3, f"{qps_seq:.1f} q/s"),
+        ("mq_concurrent", t_conc / n * 1e3, f"{qps_conc:.1f} q/s"),
+        ("mq_speedup", 0.0, f"{speedup:.2f}x"),
+    ])
+    print(rt.metrics.analytics_report())
+    print(f"[bench] {n} queries: sequential {t_seq:.2f}s "
+          f"({qps_seq:.1f} q/s), multi-query {t_conc:.2f}s "
+          f"({qps_conc:.1f} q/s) -> {speedup:.2f}x")
+    print(f"[bench] shared_hits={s['shared_hits']} deduped={s['deduped']} "
+          f"batched={s['batched']}; subplan cache: {sub['entries']} "
+          f"entries, {sub['bytes'] / 1e6:.2f} MB / "
+          f"{sub['byte_budget'] / 1e6:.0f} MB budget")
+
+    # -- acceptance asserts ------------------------------------------------
+    for i, (r, ref, s_out) in enumerate(zip(res, refs, seq_out)):
+        assert r.status == "ok", f"query {i} failed: {r.error}"
+        got = np.asarray(r.value)
+        assert np.array_equal(ref, got), \
+            f"query {i}: concurrent result diverged from isolated run"
+        assert np.array_equal(ref, s_out), \
+            f"query {i}: sequential baseline diverged from isolated run"
+    assert s["deduped"] >= 5, f"expected >=5 deduped twins, got {s}"
+    assert s["batched"] >= 8, f"expected 8 vmapped-batched queries, got {s}"
+    assert s["shared_hits"] >= 1, f"expected subplan-cache reuse, got {s}"
+    assert sub["bytes"] <= budget, \
+        f"subplan cache over budget: {sub['bytes']} > {budget}"
+    led_sub = ledger.snapshot()["by_kind"].get("subplan", 0)
+    assert led_sub == sub["bytes"], \
+        f"ledger/cache byte mismatch: {led_sub} != {sub['bytes']}"
+    rt.subplans.clear()
+    assert ledger.snapshot()["by_kind"].get("subplan", 0) == 0
+    leaks = ledger.leaks()
+    assert not leaks, f"ledger leaks after drain: {leaks}"
+    assert speedup >= target, (
+        f"multi-query speedup {speedup:.2f}x < {target}x target")
+    print(f"[bench] OK: >={target}x aggregate throughput, bitwise-identical "
+          "per-query results, subplan cache within budget, zero leaks")
+    return speedup
+
+
+if __name__ == "__main__":
+    main()

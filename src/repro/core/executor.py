@@ -529,6 +529,29 @@ def run_plan(pplan: PhysPlan, ctx: ExecContext, values: dict) -> tuple:
     return _run_plan_faulted(pplan, ctx, values)
 
 
+def run_plan_subset(pplan: PhysPlan, ctx: ExecContext, values: dict,
+                    node_ids) -> dict:
+    """Execute only ``node_ids`` of a physical plan (in plan topo order),
+    seeding the environment from ``values`` — plan inputs *plus* any
+    already-materialized node outputs.  The cross-query MQO pass
+    (``core/mqo.py``) splits a plan at its subplan-cache-hit frontier and
+    runs just the residual suffix through this; the op dispatch is the same
+    fast path as :func:`run_plan`.  Returns the full environment so the
+    caller can both extract the plan outputs and insert fresh
+    intermediates into the cache."""
+    wanted = set(node_ids)
+    env = dict(values)
+    for n in pplan.topo():
+        if n.id not in wanted:
+            continue
+        opdef = PHYS_OPS.get(n.impl)
+        fn = dispatch(n.impl, opdef.backend if opdef else None)
+        if fn is None:
+            raise NotImplementedError(f"no engine implements {n.impl!r}")
+        env[n.id] = fn(ctx, [env[i] for i in n.inputs], n)
+    return env
+
+
 def _fault_site(n) -> tuple:
     """Site key for a physical node: xfer/collective nodes get their own
     category (the "sharded" failure class), everything else is "node"."""

@@ -527,6 +527,66 @@ def plan_id(plan: "Plan", catalog: "FunctionCatalog",
     return hashlib.sha256(payload.encode()).hexdigest()
 
 
+def subdag_fingerprints(plan, *, leaf_keys=None, salt: str = "") -> dict:
+    """Per-node content hashes of each node's **transitive sub-DAG**.
+
+    Returns ``{ref: sha256 hex}`` for every node id *and* every plan input
+    of ``plan``.  A node's hash covers its op/impl, canonicalized attrs
+    (same ``_canon`` as ``plan_id``), its inputs' hashes in positional
+    order, and its subplan (recursively) — so two nodes hash identically
+    iff the entire computations rooted at them are identical.  Node *ids*
+    never enter the hash: two textually different programs that share a
+    subtree share its fingerprint.
+
+    Duck-typed over logical :class:`Plan` and physical ``PhysPlan`` (both
+    expose ``topo()`` / ``nodes`` / ``inputs``; logical nodes carry ``op``,
+    physical nodes ``impl``).
+
+    ``leaf_keys``: optional ``{input name: key string}`` binding plan
+    inputs to runtime identities (store versions, argument content hashes).
+    Unbound inputs fall back to their declared type — the *structural*
+    fingerprint, stable across processes but blind to data.  With every
+    reachable input bound, the hash identifies the sub-DAG's **value**:
+    the key the cross-query subplan cache (``core/mqo.py``) shares
+    materialized intermediates under.
+
+    ``salt``: extra identity material folded into every hash (cost-model /
+    feedback fingerprints) so re-calibration provably misses the cache.
+    """
+    lk = leaf_keys or {}
+    fps: dict = {}
+
+    def fp_of(ref):
+        hit = fps.get(ref)
+        if hit is not None:
+            return hit
+        n = plan.nodes.get(ref)
+        if n is None:                    # a plan input leaf
+            key = lk.get(ref)
+            if key is None:
+                key = "type:" + repr(plan.inputs.get(ref))
+            payload = ("leaf", salt, str(key))
+        else:
+            op = getattr(n, "op", None) or getattr(n, "impl", "?")
+            ins = tuple(fp_of(i) for i in n.inputs)
+            attrs = tuple(sorted((str(k), _canon(v))
+                                 for k, v in n.attrs.items()))
+            sub = None
+            if n.subplan is not None:
+                sub = tuple(sorted(subdag_fingerprints(
+                    n.subplan, salt=salt).items()))
+            payload = ("node", salt, op, attrs, ins, sub)
+        h = hashlib.sha256(repr(payload).encode()).hexdigest()
+        fps[ref] = h
+        return h
+
+    for name in plan.inputs:
+        fp_of(name)
+    for n in plan.topo():                # topo order keeps recursion shallow
+        fp_of(n.id)
+    return fps
+
+
 # --------------------------------------------------------------------------
 # Function catalog (paper §3.1.2)
 # --------------------------------------------------------------------------

@@ -213,6 +213,28 @@ class StagedPhysicalPlan:
     buffering: BufferingDecision
     trace: list
     options: PlanOptions
+    # identity material for the cross-query subplan cache (core/mqo.py):
+    # cost-model + feedback fingerprints, folded into every sub-DAG hash so
+    # a re-calibrated plan's intermediates provably miss the cache.  Stamped
+    # by ``compile_staged``; plans unpickled from an older on-disk cache may
+    # lack the attribute — read it with ``getattr(staged, "mqo_salt", "")``.
+    mqo_salt: str = ""
+
+    def subdag_fingerprints(self, *, leaf_keys=None, salt=None) -> dict:
+        """Per-node sub-DAG content hashes of the **concrete** physical
+        plan (see :func:`repro.core.ir.subdag_fingerprints`).  The
+        structural variant (no ``leaf_keys``) is memoized — the plan is
+        immutable once staged, so one walk serves every query admission."""
+        from .ir import subdag_fingerprints as _sfp
+        s = getattr(self, "mqo_salt", "") if salt is None else salt
+        if leaf_keys is None:
+            cached = self.__dict__.get("_subdag_fp_cache")
+            if cached is not None and cached[0] == s:
+                return cached[1]
+            fps = _sfp(self.concrete, salt=s)
+            self.__dict__["_subdag_fp_cache"] = (s, fps)
+            return fps
+        return _sfp(self.concrete, leaf_keys=leaf_keys, salt=s)
 
     def explain(self, analyze=None) -> str:
         """EXPLAIN-style report: per-pass wall time, node-count deltas, and
@@ -462,6 +484,14 @@ def compile_staged(logical: Plan, catalog: FunctionCatalog,
         staged = pl.run(
             logical, catalog, syscat, options=opts, cost_model=cost_model,
             patterns=patterns, plan_id=pid)
+    # the subplan-cache salt: everything that can change a node's *output
+    # semantics or validity* without changing its structural sub-DAG hash.
+    # A refit cost model or new selectivity observations replan into a new
+    # pid anyway, so identical-salt entries are internally consistent; the
+    # salt makes the cross-query cache miss provable for intermediates
+    # materialized under the superseded calibration.
+    fb_fp = feedback.fingerprint() if feedback is not None else "none"
+    staged.mqo_salt = repr(("cm", cm_fp, "feedback", fb_fp))
     if pc is not None:
         pc.insert(pid, staged, fingerprint=cm_fp)
     return staged

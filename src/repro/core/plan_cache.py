@@ -19,6 +19,7 @@ from __future__ import annotations
 import os
 import pickle
 import tempfile
+import threading
 from collections import OrderedDict
 from typing import Any, Optional
 
@@ -85,6 +86,13 @@ class PlanCache:
         self.maxsize = maxsize
         self.byte_budget = byte_budget
         self._ledger = ledger                # None -> default_ledger(), lazy
+        # one reentrant lock covers every counter and map mutation: the
+        # serving loop's admission path and benchmark drivers look plans up
+        # from multiple tasks/threads, and the bare ``self.hits += 1``
+        # read-modify-writes (plus the OrderedDict reorders) raced —
+        # stats() could report hits + misses != lookups.  Reentrant because
+        # insert() -> note_fingerprint() nests.
+        self._lock = threading.RLock()
         self._entries: "OrderedDict[str, Any]" = OrderedDict()
         self._fps: dict = {}                 # plan_id -> fit fingerprint
         self._seen_epoch: dict = {}          # plan_id -> epoch of last touch
@@ -115,50 +123,55 @@ class PlanCache:
         each of their compiles flip currency back and forth would churn the
         staleness epoch on every interleaving.  Calibration only moves
         forward."""
-        if fingerprint == "analytic" and self.current_fingerprint is not None:
-            return
-        if fingerprint != self.current_fingerprint:
-            self._epoch += 1
-        self.current_fingerprint = fingerprint
+        with self._lock:
+            if fingerprint == "analytic" and \
+                    self.current_fingerprint is not None:
+                return
+            if fingerprint != self.current_fingerprint:
+                self._epoch += 1
+            self.current_fingerprint = fingerprint
 
     def lookup(self, plan_id: str):
         """Return the cached staged plan (refreshing recency) or None."""
-        entry = self._entries.get(plan_id)
-        if entry is None:
-            self.misses += 1
-            return None
-        self._entries.move_to_end(plan_id)
-        self._seen_epoch[plan_id] = self._epoch
-        self.hits += 1
-        return entry
+        with self._lock:
+            entry = self._entries.get(plan_id)
+            if entry is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(plan_id)
+            self._seen_epoch[plan_id] = self._epoch
+            self.hits += 1
+            return entry
 
     def insert(self, plan_id: str, staged, fingerprint: Optional[str] = None
                ) -> None:
-        if plan_id in self._entries:
-            self.bytes_in_cache -= self._sizes.get(plan_id, 0)
-        self._entries[plan_id] = staged
+        # size estimation walks the staged plan — keep it outside the lock
         nb = staged_bytes(staged)
-        self._sizes[plan_id] = nb
-        self.bytes_in_cache += nb
-        self.ledger.register(("plan_cache", plan_id), nbytes=nb,
-                             kind="plan_cache")
-        if fingerprint is not None:
-            self._fps[plan_id] = fingerprint
-            self.note_fingerprint(fingerprint)
-        self._seen_epoch[plan_id] = self._epoch
-        self._entries.move_to_end(plan_id)
-        while len(self._entries) > self.maxsize:
-            self._evict_one()
-        # byte budget on top of the count bound: stale entries go first
-        # (LRU among themselves), then the *largest* live entry — the goal
-        # is bytes back per eviction, not recency.  The newest entry is
-        # never evicted on its own insert (len > 1), even when it alone
-        # exceeds the budget: callers still get their plan cached until
-        # something else arrives.
-        if self.byte_budget is not None:
-            while (self.bytes_in_cache > self.byte_budget
-                   and len(self._entries) > 1):
-                self._evict_one_bytes(keep=plan_id)
+        with self._lock:
+            if plan_id in self._entries:
+                self.bytes_in_cache -= self._sizes.get(plan_id, 0)
+            self._entries[plan_id] = staged
+            self._sizes[plan_id] = nb
+            self.bytes_in_cache += nb
+            self.ledger.register(("plan_cache", plan_id), nbytes=nb,
+                                 kind="plan_cache")
+            if fingerprint is not None:
+                self._fps[plan_id] = fingerprint
+                self.note_fingerprint(fingerprint)
+            self._seen_epoch[plan_id] = self._epoch
+            self._entries.move_to_end(plan_id)
+            while len(self._entries) > self.maxsize:
+                self._evict_one()
+            # byte budget on top of the count bound: stale entries go first
+            # (LRU among themselves), then the *largest* live entry — the
+            # goal is bytes back per eviction, not recency.  The newest
+            # entry is never evicted on its own insert (len > 1), even when
+            # it alone exceeds the budget: callers still get their plan
+            # cached until something else arrives.
+            if self.byte_budget is not None:
+                while (self.bytes_in_cache > self.byte_budget
+                       and len(self._entries) > 1):
+                    self._evict_one_bytes(keep=plan_id)
 
     def _evict_one_bytes(self, keep: Optional[str] = None) -> None:
         victim = None
@@ -199,39 +212,43 @@ class PlanCache:
         self.evictions += 1
 
     def clear(self) -> None:
-        for plan_id in self._entries:
-            self.ledger.release(("plan_cache", plan_id))
-        self._entries.clear()
-        self._fps.clear()
-        self._seen_epoch.clear()
-        self._sizes.clear()
-        self.bytes_in_cache = 0
-        self._epoch = 0
-        self.current_fingerprint = None
-        self.hits = self.misses = self.evictions = 0
-        self.stale_evictions = 0
-        self.byte_evictions = 0
+        with self._lock:
+            for plan_id in self._entries:
+                self.ledger.release(("plan_cache", plan_id))
+            self._entries.clear()
+            self._fps.clear()
+            self._seen_epoch.clear()
+            self._sizes.clear()
+            self.bytes_in_cache = 0
+            self._epoch = 0
+            self.current_fingerprint = None
+            self.hits = self.misses = self.evictions = 0
+            self.stale_evictions = 0
+            self.byte_evictions = 0
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, plan_id: str) -> bool:
-        return plan_id in self._entries
+        with self._lock:
+            return plan_id in self._entries
 
     def stats(self) -> dict:
-        total = self.hits + self.misses
-        return {
-            "size": len(self._entries),
-            "maxsize": self.maxsize,
-            "hits": self.hits,
-            "misses": self.misses,
-            "evictions": self.evictions,
-            "stale_evictions": self.stale_evictions,
-            "byte_evictions": self.byte_evictions,
-            "bytes": self.bytes_in_cache,
-            "byte_budget": self.byte_budget,
-            "hit_rate": (self.hits / total) if total else 0.0,
-        }
+        with self._lock:
+            total = self.hits + self.misses
+            return {
+                "size": len(self._entries),
+                "maxsize": self.maxsize,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "stale_evictions": self.stale_evictions,
+                "byte_evictions": self.byte_evictions,
+                "bytes": self.bytes_in_cache,
+                "byte_budget": self.byte_budget,
+                "hit_rate": (self.hits / total) if total else 0.0,
+            }
 
     def __repr__(self):
         s = self.stats()
@@ -259,7 +276,9 @@ def save_plan_cache(cache: PlanCache, dir_path: str) -> int:
     number of newly written entries."""
     os.makedirs(dir_path, exist_ok=True)
     written = 0
-    for plan_id, staged in cache._entries.items():
+    with cache._lock:                      # snapshot: writes happen unlocked
+        entries = list(cache._entries.items())
+    for plan_id, staged in entries:
         path = os.path.join(dir_path, plan_id + _SUFFIX)
         if os.path.exists(path):
             continue

@@ -10,15 +10,16 @@ from .admission import AdmissionController, bucket_len
 from .degrade import DegradePolicy
 from .kv_pool import PagedKVPool, PageTable
 from .metrics import RequestMetrics, ServingMetrics
-from .runtime import (AsyncServingRuntime, ServeRequest, ServeResult,
-                      serve_sequential)
-from .scheduler import ContinuousBatchScheduler, SlotState
+from .runtime import (AnalysisRequest, AnalysisResult, AsyncServingRuntime,
+                      ServeRequest, ServeResult, serve_sequential)
+from .scheduler import ContinuousBatchScheduler, SlotState, TenantScheduler
 
 __all__ = [
     "AdmissionController", "bucket_len",
     "DegradePolicy",
     "PagedKVPool", "PageTable",
     "RequestMetrics", "ServingMetrics",
+    "AnalysisRequest", "AnalysisResult",
     "AsyncServingRuntime", "ServeRequest", "ServeResult", "serve_sequential",
-    "ContinuousBatchScheduler", "SlotState",
+    "ContinuousBatchScheduler", "SlotState", "TenantScheduler",
 ]

@@ -319,6 +319,34 @@ class ServingMetrics:
                 out[f"p{q}_{key}"] = s.percentile(q)
         return out
 
+    def analytics_summary(self) -> dict:
+        """The concurrent-analytics view over the shared registry: request
+        counts, TTFR (time-to-first-result — admission to result, the
+        analytical analogue of TTFT), and the multi-query sharing counters
+        (``analytics.shared_hits`` — sub-DAG cache hits + deduped
+        twins; ``analytics.batched`` — queries executed inside a vmapped
+        same-shape batch)."""
+        r = self.registry
+        ttfr = r.summary("analytics.ttfr_ms")
+        out = {
+            "requests": r.count("analytics.requests", 0),
+            "shared_hits": r.count("analytics.shared_hits", 0),
+            "batched": r.count("analytics.batched", 0),
+            "deduped": r.count("analytics.deduped", 0),
+            "mean_ttfr_ms": ttfr.mean,
+        }
+        for q in (50, 95, 99):
+            out[f"p{q}_ttfr_ms"] = ttfr.percentile(q)
+        return out
+
+    def analytics_report(self) -> str:
+        s = self.analytics_summary()
+        return (f"[analytics] {s['requests']} queries: "
+                f"{s['shared_hits']} shared subplan hits, "
+                f"{s['deduped']} deduped, {s['batched']} vmapped-batched; "
+                f"TTFR {s['mean_ttfr_ms']:.1f} ms mean "
+                f"(p50 {s['p50_ttfr_ms']:.1f} / p95 {s['p95_ttfr_ms']:.1f})")
+
     def report(self) -> str:
         s = self.summary()
         lines = [

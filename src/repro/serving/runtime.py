@@ -35,6 +35,7 @@ from ..core.executor import plan_and_compile
 from ..core.faults import FaultInjectedError
 from ..core.ir import SystemCatalog
 from ..core.ledger import FlightRecorder, MemoryLedger, default_ledger
+from ..core.mqo import SubplanCache, mqo_run, subdag_keys
 from ..core.resilience import classify
 from ..core.plan_cache import (PlanCache, default_plan_cache,
                                load_plan_cache, save_plan_cache)
@@ -43,7 +44,7 @@ from ..models.lm import CATALOG, LM
 from .admission import AdmissionController, bucket_len
 from .kv_pool import PagedKVPool
 from .metrics import MetricsRegistry, RequestMetrics, ServingMetrics
-from .scheduler import ContinuousBatchScheduler
+from .scheduler import ContinuousBatchScheduler, TenantScheduler
 
 
 @dataclass(frozen=True)
@@ -73,6 +74,45 @@ class ServeResult:
         return self.status in ("ok", "truncated")
 
 
+@dataclass
+class AnalysisRequest:
+    """One analytical query submitted to the multi-query admission loop.
+
+    ``batch_param`` names an input whose value may differ across otherwise
+    identical queries (a PageRank seed set, a top-k query vector): requests
+    sharing a plan fingerprint modulo that slot are coalesced per admission
+    tick into one vmapped planned forward.  ``store_versions`` are the
+    (name, version) pairs of the bound stores — they key the sub-DAG cache
+    entries so appends provably invalidate."""
+
+    rid: object
+    planned: object                  # PlannedFunction
+    inputs: dict
+    params: object = None
+    tenant: object = "default"
+    batch_param: Optional[str] = None
+    store_versions: tuple = ()
+    tied_to: object = None           # ledger owner of the producing store
+    aux: Optional[dict] = None
+
+
+@dataclass
+class AnalysisResult:
+    rid: object
+    value: object = None
+    status: str = "ok"               # ok | error
+    error: Optional[dict] = None
+    shared_hits: int = 0             # cached sub-DAGs reused by this query
+    executed: int = 0                # residual nodes actually run
+    deduped: bool = False            # rode an identical in-flight query
+    batched: bool = False            # ran inside a vmapped batch
+    ttfr_ms: float = 0.0             # submit -> first result
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+
 class AsyncServingRuntime:
     def __init__(self, model: LM, params, *, max_batch: int = 4,
                  max_seq: int = 128, page_size: int = 16,
@@ -90,7 +130,12 @@ class AsyncServingRuntime:
                  faults=None,
                  degrade=None,
                  prefill_retries: int = 2,
-                 decode_fault_cap: int = 8):
+                 decode_fault_cap: int = 8,
+                 subplan_cache: Optional[SubplanCache] = None,
+                 subplan_budget: Optional[int] = None,
+                 tenant_weights: Optional[dict] = None,
+                 analysis_tick: int = 16,
+                 prefill_batch: int = 4):
         self.model = model
         self.cfg = model.cfg
         self.params = params
@@ -149,6 +194,29 @@ class AsyncServingRuntime:
         self._prefill_attempts: dict = {}   # rid -> failed attempts
         self._tick_no = 0
         self._decode_faults = 0             # consecutive faulted ticks
+        # multi-query analytics: a byte-budgeted cache of materialized
+        # sub-DAG intermediates (cross-query CSE), a weighted round-robin
+        # tenant scheduler feeding the admission loop, and single-flight
+        # futures so concurrent identical sub-DAGs compute once
+        if subplan_cache is not None:
+            self.subplans: Optional[SubplanCache] = subplan_cache
+        elif subplan_budget is not None:
+            self.subplans = SubplanCache(
+                subplan_budget, ledger=self.ledger, recorder=self.recorder,
+                registry=self.registry)
+        else:
+            self.subplans = None
+        self.analysis_sched = TenantScheduler(tenant_weights)
+        self.analysis_tick = max(int(analysis_tick), 1)
+        self._analysis_inflight: dict = {}  # root key -> asyncio.Future
+        # batched prefill: up to ``prefill_batch`` same-bucket waiting
+        # requests prefill as ONE vmapped planned forward (1 disables);
+        # deterministic fault replay needs per-request prefill sites, so
+        # injection forces the sequential path
+        self.prefill_batch = 1 if faults is not None \
+            else max(int(prefill_batch), 1)
+        self._prefill_base: dict = {}    # plan_id -> unjitted prefill call
+        self._vjitted_by_plan: dict = {}  # plan_id -> jit(vmap(prefill))
 
     # -- planning ----------------------------------------------------------
     def _now(self) -> float:
@@ -185,6 +253,7 @@ class AsyncServingRuntime:
 
             jitted = jax.jit(_prefill_call)
             self._jitted_by_plan[fwd.plan_id] = jitted
+            self._prefill_base[fwd.plan_id] = _prefill_call
             # tie the jitted wrapper's lifetime to its plan-cache entry:
             # _jitted_by_plan never evicts, so once byte-budget eviction
             # drops the entry this registration shows up in ledger.leaks()
@@ -195,12 +264,26 @@ class AsyncServingRuntime:
         self._prefill_fns[bucket] = (fwd, jitted)
         return fwd, jitted, (time.perf_counter() - t0) * 1e3
 
+    def _vjit_prefill(self, plan_id):
+        """jit(vmap) of a bucket's prefill forward, cached per plan and
+        ledger-tied to the plan-cache entry (same leak signal as the
+        unbatched wrapper)."""
+        vj = self._vjitted_by_plan.get(plan_id)
+        if vj is None:
+            base = self._prefill_base[plan_id]
+            vj = jax.jit(jax.vmap(base, in_axes=(None, 0, 0)))
+            self._vjitted_by_plan[plan_id] = vj
+            self.ledger.register(
+                ("plan_jit_batched", plan_id), nbytes=0,
+                kind="plan_jit", tied_to=("plan_cache", plan_id))
+        return vj
+
     def warmup(self, prompt_lens: Sequence[int]) -> None:
         """Plan + compile every bucket the trace will touch (prefill *and*
         its pool-seed program), and trace the batched decode step, so
         serving-time work is pure execution."""
         for n in sorted({self.bucket_of(n) for n in prompt_lens}):
-            _, jitted, _ = self._plan_prefill(n)
+            fwd, jitted, _ = self._plan_prefill(n)
             outs, _ = jitted(self.params, jnp.zeros((1, n), jnp.int32),
                              jnp.int32(n))
             if self.kv_mode and self.pool.alloc("__warmup__", 1) is not None:
@@ -208,6 +291,19 @@ class AsyncServingRuntime:
                 # into a scratch slot; harmless — any join overwrites it
                 self.pool.seed("__warmup__", outs[1:], n)
                 self.pool.free("__warmup__")
+            if self.kv_mode and self.prefill_batch > 1:
+                # the batched-prefill forward too: serve-time batches pad to
+                # ONE fixed width per bucket, so this is the only vmapped
+                # shape the bucket ever compiles — and warm the per-row KV
+                # slice + seed, which compile their own eager kernels
+                w = min(self.prefill_batch, self.max_batch)
+                outs_b, _ = self._vjit_prefill(fwd.plan_id)(
+                    self.params, jnp.zeros((w, 1, n), jnp.int32),
+                    jnp.full((w,), n, jnp.int32))
+                kv0 = jax.tree.map(lambda x: x[0], outs_b[1:])
+                if self.pool.alloc("__warmup__", 1) is not None:
+                    self.pool.seed("__warmup__", kv0, n)
+                    self.pool.free("__warmup__")
         toks = jnp.zeros((self.max_batch, 1), jnp.int32)
         idxs = jnp.zeros((self.max_batch,), jnp.int32)
         # keep the returned cache: the input buffers were donated, and the
@@ -392,10 +488,35 @@ class AsyncServingRuntime:
         if st.done:                          # gen == 1: prefill was enough
             self._finish(st, "ok")
 
+    def _pop_prefill_batch(self, w) -> list:
+        """Starting from the chosen head ``w``, pop up to ``prefill_batch``
+        same-bucket waiting requests that the decode batch and KV pool can
+        conservatively absorb together.  Returns [(req, enqueued_at), ...]."""
+        batch = [(self.scheduler.pop(w), w.enqueued_at)]
+        if not self.kv_mode or self.prefill_batch <= 1:
+            return batch
+        q = self.scheduler.queues.get(w.bucket)
+        pending_pages = self.pool.pages_for(batch[0][0].prompt_len + 1)
+        while (q and len(batch) < self.prefill_batch
+               and self.scheduler.n_active() + len(batch)
+               < self.scheduler.max_batch
+               and len(self.pool._free_slots) > len(batch)):
+            nxt = q[0]
+            need = self.pool.pages_for(nxt.request.prompt_len + 1)
+            if self.pool.pages_in_use + pending_pages + need > \
+                    self.pool.page_budget:
+                break
+            batch.append((self.scheduler.pop(nxt), nxt.enqueued_at))
+            pending_pages += need
+        return batch
+
     def _try_join(self) -> bool:
         """Fill free decode slots from the wait queues: FIFO within bucket,
         longest-waiting-first across buckets; cold buckets only when the
-        batch has drained enough to afford planning."""
+        batch has drained enough to afford planning.  When several
+        same-bucket requests are waiting, they prefill as ONE vmapped
+        planned forward (satellite of the multi-query work: identical token
+        streams, one dispatch)."""
         joined = False
         while self.scheduler.free_slot() is not None:
             warm = {b for b in self.scheduler.queues if self.is_warm(b)}
@@ -408,13 +529,72 @@ class AsyncServingRuntime:
                 break
             if not self.pool.can_admit(w.request.prompt_len + 1):
                 break                        # memory pressure: keep queueing
-            req = self.scheduler.pop(w)
-            try:
-                self._prefill_and_join(req, w.bucket, w.enqueued_at)
-            except Exception as exc:
-                self._prefill_failure(req, w.bucket, w.enqueued_at, exc)
+            bucket = w.bucket
+            batch = self._pop_prefill_batch(w)
+            if len(batch) == 1:
+                req, enq = batch[0]
+                try:
+                    self._prefill_and_join(req, bucket, enq)
+                except Exception as exc:
+                    self._prefill_failure(req, bucket, enq, exc)
+            else:
+                self._prefill_and_join_many(batch, bucket)
             joined = True
         return joined
+
+    def _prefill_and_join_many(self, batch: list, bucket: int) -> None:
+        """Prefill a same-bucket group as one jitted vmapped forward and
+        join each member; falls back to the sequential per-request path if
+        the batched call fails (nothing was allocated yet)."""
+        try:
+            # one plan fetch per member: the batch serves N requests, and
+            # each keeps its own plan-cache hit + plan_ms accounting (warm
+            # fetches are cache lookups, not re-planning)
+            plan_mss = []
+            for _ in batch:
+                fwd, _, plan_ms = self._plan_prefill(bucket)
+                plan_mss.append(plan_ms)
+            vj = self._vjit_prefill(fwd.plan_id)
+            # pad to the bucket's one warmed width: a short batch wastes a
+            # few pad rows but never triggers a serve-time recompile
+            width = max(min(self.prefill_batch, self.max_batch), len(batch))
+            toks = np.zeros((width, 1, bucket), np.int32)
+            ns = np.ones((width,), np.int32)
+            for i, (req, _) in enumerate(batch):
+                toks[i, 0, :req.prompt_len] = req.prompt
+                ns[i] = req.prompt_len
+            t0 = time.perf_counter()
+            outs, firsts = vj(self.params, jnp.asarray(toks),
+                              jnp.asarray(ns))
+            firsts = np.asarray(firsts)
+            prefill_ms = (time.perf_counter() - t0) * 1e3
+            self.registry.count("lm.batched_prefills", len(batch))
+            self.registry.summary("lm.prefill_batch").observe(len(batch))
+        except Exception:
+            for req, enq in batch:           # degrade to per-request prefill
+                try:
+                    self._prefill_and_join(req, bucket, enq)
+                except Exception as exc:
+                    self._prefill_failure(req, bucket, enq, exc)
+            return
+        for i, (req, enq) in enumerate(batch):
+            rm = RequestMetrics(req.rid, bucket=bucket,
+                                prompt_len=req.prompt_len, gen=req.gen,
+                                submitted_at=enq)
+            rm.plan_ms = plan_mss[i]
+            rm.prefill_ms = prefill_ms / len(batch)
+            self.pool.alloc(req.rid, req.prompt_len + 1)
+            kv_i = jax.tree.map(lambda x, _i=i: x[_i], outs[1:])
+            self.pool.seed(req.rid, kv_i, req.prompt_len)
+            first = int(firsts[i])
+            now = self._now()
+            rm.joined_at = rm.first_token_at = now
+            st = self.scheduler.join(req, pos=req.prompt_len, tok=first,
+                                     first_out=first, now=now)
+            st.rm = rm
+            self.metrics.joins += 1
+            if st.done:
+                self._finish(st, "ok")
 
     def _prefill_failure(self, req: ServeRequest, bucket: int,
                          enqueued_at: float, exc: Exception) -> None:
@@ -592,10 +772,226 @@ class AsyncServingRuntime:
         return {"ledger": self.ledger.snapshot(),
                 "metrics": self.registry.report()}
 
+    # -- multi-query analytics ------------------------------------------------
+    def _analysis_exec(self, req: AnalysisRequest, keys=None):
+        """One analytical query through the cross-query CSE path (subplan
+        cache attached) or plain execution; returns (value, frontier
+        info)."""
+        if self.subplans is not None:
+            out, info = mqo_run(req.planned, req.params, req.inputs,
+                                cache=self.subplans,
+                                versions=req.store_versions,
+                                aux=req.aux, keys=keys, tied_to=req.tied_to)
+        else:
+            out = req.planned(req.params, req.inputs, aux=req.aux)
+            info = {"shared_hits": 0,
+                    "executed": len(req.planned.concrete.nodes)}
+        jax.block_until_ready(out)
+        return out, info
+
+    @staticmethod
+    def _leaf_sig(value) -> tuple:
+        """Shape/dtype signature of a pytree — batchable queries must agree
+        on it so stacking is well-formed."""
+        return tuple((str(getattr(x, "dtype", type(x).__name__)),
+                      tuple(getattr(x, "shape", ())))
+                     for x in jax.tree.leaves(value))
+
+    def _batch_group_key(self, req: AnalysisRequest, keys: dict) -> tuple:
+        """Queries coalesce into one vmapped forward iff they share a plan,
+        the same declared ``batch_param`` slot, the same *objects* for
+        every other input, and the same batch-leaf shape/dtype.  Object
+        identity is conservative (equal-but-distinct arrays miss the
+        batch) but sound, and it is how multi-query workloads actually
+        share bound payloads; the ids stay valid because the requests hold
+        their inputs alive through the tick."""
+        bp = req.batch_param
+        fixed = tuple(sorted(
+            (n, id(v)) for n, v in req.inputs.items() if n != bp))
+        return (getattr(req.planned, "plan_id", id(req.planned)), bp,
+                fixed, self._leaf_sig(req.inputs[bp]),
+                "noparams" if not req.params else id(req.params))
+
+    def _run_batched_group(self, leaders: list):
+        """Execute same-shape queries as ONE vmapped planned forward over
+        their stacked ``batch_param`` leaves; returns per-query values.
+        vmap without jit: every primitive executes batched but *eagerly*,
+        the same dispatch path the unbatched queries take."""
+        bp = leaders[0].batch_param
+        planned = leaders[0].planned
+        fixed = {n: v for n, v in leaders[0].inputs.items() if n != bp}
+        stacked = jax.tree.map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs], axis=0),
+            *[r.inputs[bp] for r in leaders])
+        params = leaders[0].params
+        aux = leaders[0].aux
+
+        def one(pv):
+            return planned(params, {**fixed, bp: pv}, aux=aux)
+
+        outs = jax.vmap(one)(stacked)
+        jax.block_until_ready(outs)
+        vals = [jax.tree.map(lambda x, _i=i: x[_i], outs)
+                for i in range(len(leaders))]
+        self.registry.count("analytics.batched", len(leaders))
+        return vals
+
+    def _root_key(self, req: AnalysisRequest, keys: dict) -> tuple:
+        """The whole-query identity: plan id + the runtime keys of its
+        outputs — two queries with equal root keys compute the same
+        values, whatever their programs looked like."""
+        return (getattr(req.planned, "plan_id", id(req.planned)),
+                tuple(keys.get(o, o) for o in req.planned.concrete.outputs))
+
+    def _settle_analysis(self, req: AnalysisRequest, res: AnalysisResult,
+                         results: dict, t0: float) -> None:
+        res.ttfr_ms = (time.perf_counter() - t0) * 1e3
+        self.registry.summary("analytics.ttfr_ms").observe(res.ttfr_ms)
+        self.registry.count("analytics.requests")
+        results[req.rid] = res
+
+    async def _admit_analysis_tick(self, tick: list, results: dict,
+                                   t0: float) -> None:
+        """One admission tick: key every drained query, dedupe exact twins
+        (intra-tick groups + cross-task in-flight futures), coalesce
+        same-shape queries into vmapped batches, run the rest through the
+        CSE path, and resolve every request with a result."""
+        loop = asyncio.get_running_loop()
+        groups: dict = {}        # root key -> [(req, keys), ...]
+        waiters: list = []       # (req, future of an in-flight twin)
+        for req in tick:
+            keys = subdag_keys(req.planned, req.inputs,
+                               versions=req.store_versions)
+            root = self._root_key(req, keys)
+            fut = self._analysis_inflight.get(root)
+            if fut is not None and root not in groups:
+                waiters.append((req, fut))
+                continue
+            groups.setdefault(root, []).append((req, keys))
+        # same-shape batching among group leaders (>=2 make a batch)
+        singles, shaped = [], {}
+        for root, members in groups.items():
+            leader = members[0][0]
+            if leader.batch_param is not None \
+                    and leader.batch_param in leader.inputs:
+                gk = self._batch_group_key(leader, members[0][1])
+                shaped.setdefault(gk, []).append((root, members))
+            else:
+                singles.append((root, members))
+        vbatches = []
+        for g in shaped.values():
+            if len(g) >= 2:
+                vbatches.append(g)
+            else:
+                singles.extend(g)
+        futs = {}
+        for root, _ in singles:
+            futs[root] = self._analysis_inflight[root] = loop.create_future()
+        for g in vbatches:
+            for root, _ in g:
+                futs[root] = self._analysis_inflight[root] = \
+                    loop.create_future()
+
+        def resolve(root, members, payload, *, batched=False):
+            status, val, info, err = payload
+            fut = futs[root]
+            if not fut.done():
+                fut.set_result(payload)
+            self._analysis_inflight.pop(root, None)
+            for j, (req, _) in enumerate(members):
+                if j > 0:
+                    self.registry.count("analytics.deduped")
+                res = AnalysisResult(
+                    req.rid, val, status, err,
+                    shared_hits=info.get("shared_hits", 0),
+                    executed=info.get("executed", 0),
+                    deduped=j > 0, batched=batched)
+                self._settle_analysis(req, res, results, t0)
+
+        for g in vbatches:
+            leaders = [members[0][0] for _, members in g]
+            try:
+                vals = self._run_batched_group(leaders)
+                for (root, members), val in zip(g, vals):
+                    resolve(root, members,
+                            ("ok", val, {"executed": 1}, None), batched=True)
+            except Exception as exc:
+                # vmap refused the plan (data-dependent shapes, host
+                # callbacks): run each leader through the CSE path instead
+                self.recorder.record("batch_fallback", {
+                    "n": len(g), "error": repr(exc)})
+                singles.extend(g)
+        for root, members in singles:
+            leader, lkeys = members[0]
+            try:
+                val, info = self._analysis_exec(leader, keys=lkeys)
+                resolve(root, members, ("ok", val, info, None))
+            except Exception as exc:
+                err = {"reason": "analysis_failed",
+                       "plan_id": getattr(leader.planned, "plan_id", ""),
+                       "error": repr(exc)}
+                self.recorder.trip("executor_error",
+                                   {**err, **self._trip_context()})
+                resolve(root, members, ("error", None, {}, err))
+            await asyncio.sleep(0)   # let twins land on the future map
+        for req, fut in waiters:
+            status, val, info, err = await fut
+            self.registry.count("analytics.deduped")
+            res = AnalysisResult(req.rid, val, status, err,
+                                 shared_hits=info.get("shared_hits", 0),
+                                 deduped=True)
+            self._settle_analysis(req, res, results, t0)
+
+    async def run_analyses(self, requests: Sequence[AnalysisRequest],
+                           timeout_s: float = 300.0) -> list:
+        """Serve a set of analytical queries through the multi-query
+        admission path: per-tenant weighted round-robin drains up to
+        ``analysis_tick`` queries per tick; each tick dedupes exact twins
+        (single-flight — the first computes, the rest await its future),
+        coalesces same-shape queries into one vmapped forward, and runs
+        the remainder through the subplan-cache CSE pass.  Returns
+        AnalysisResults in input order; every query resolves (errors are
+        structured, a loop timeout resolves stragglers)."""
+        t0 = time.perf_counter()
+        results: dict = {}
+        for r in requests:
+            self.analysis_sched.enqueue(r, r.tenant)
+        while len(results) < len(requests):
+            if time.perf_counter() - t0 > timeout_s:
+                for r in requests:
+                    if r.rid not in results:
+                        self._settle_analysis(r, AnalysisResult(
+                            r.rid, None, "error",
+                            {"reason": "timeout", "timeout_s": timeout_s}),
+                            results, t0)
+                break
+            tick = self.analysis_sched.drain(self.analysis_tick)
+            if not tick:
+                await asyncio.sleep(0.0005)
+                continue
+            await self._admit_analysis_tick(tick, results, t0)
+            await asyncio.sleep(0)
+        self._maybe_snapshot(force=True)
+        return [results[r.rid] for r in requests]
+
+    def serve_analyses(self, requests: Sequence[AnalysisRequest],
+                       timeout_s: float = 300.0) -> list:
+        """Synchronous wrapper around :meth:`run_analyses` (same nesting
+        rule as :meth:`serve`)."""
+        try:
+            asyncio.get_running_loop()
+        except RuntimeError:
+            return asyncio.run(self.run_analyses(requests,
+                                                 timeout_s=timeout_s))
+        raise RuntimeError(
+            "serve_analyses() was called from a running event loop; call "
+            "`await runtime.run_analyses(...)` instead")
+
     def run_analysis(self, planned, params, inputs: dict, *,
                      analyze: bool = False, aux: Optional[dict] = None,
                      deadline_s: Optional[float] = None,
-                     degrade=None):
+                     degrade=None, store_versions: tuple = (),
+                     tied_to=None):
         """Execute an analytical (tri-store) :class:`PlannedFunction`
         through the runtime's shared metrics registry, so LM and
         analytical traffic report into one place: wall time lands in the
@@ -639,6 +1035,15 @@ class AsyncServingRuntime:
                 self.registry.summary("analytics.sync_ms").observe(
                     tr.sync_ms)
                 self.registry.count("analytics.traced")
+            elif self.subplans is not None and planned.faults is None:
+                # cross-query CSE: reuse cached sub-DAG intermediates and
+                # execute only the residual suffix (bitwise-identical — the
+                # reused values are an identical computation's arrays)
+                outs, _info = mqo_run(planned, params, inputs,
+                                      cache=self.subplans,
+                                      versions=store_versions, aux=aux,
+                                      tied_to=tied_to)
+                jax.block_until_ready(outs)
             else:
                 outs = planned(params, inputs, aux=aux)
                 jax.block_until_ready(outs)

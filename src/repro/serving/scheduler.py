@@ -42,6 +42,61 @@ class _Waiting:
     seq: int                         # arrival tiebreaker
 
 
+class TenantScheduler:
+    """Per-tenant weighted round-robin over analytical query queues.
+
+    Smooth WRR (the nginx variant): each pick adds every backlogged
+    tenant's weight to its credit, the tenant with the highest credit
+    wins and pays the total weight back.  Over any window the picks a
+    tenant receives are proportional to its weight, and a tenant with an
+    empty queue accrues nothing — no starvation, no bursts after idle.
+    """
+
+    def __init__(self, weights: Optional[dict] = None,
+                 default_weight: int = 1):
+        self.weights = dict(weights or {})
+        self.default_weight = max(int(default_weight), 1)
+        self.queues: dict = {}       # tenant -> deque of items
+        self._credit: dict = {}      # tenant -> smooth-WRR credit
+        self.picks: dict = {}        # tenant -> granted picks (fairness view)
+
+    def weight_of(self, tenant) -> int:
+        return max(int(self.weights.get(tenant, self.default_weight)), 1)
+
+    def enqueue(self, item, tenant="default") -> None:
+        self.queues.setdefault(tenant, deque()).append(item)
+
+    def depth(self) -> int:
+        return sum(len(q) for q in self.queues.values())
+
+    def pop_next(self):
+        """The next item under smooth WRR, or None when all queues are
+        empty."""
+        backlogged = [t for t, q in self.queues.items() if q]
+        if not backlogged:
+            return None
+        total = 0
+        for t in backlogged:
+            w = self.weight_of(t)
+            self._credit[t] = self._credit.get(t, 0) + w
+            total += w
+        best = max(backlogged, key=lambda t: (self._credit[t], str(t)))
+        self._credit[best] -= total
+        self.picks[best] = self.picks.get(best, 0) + 1
+        return self.queues[best].popleft()
+
+    def drain(self, k: Optional[int] = None) -> list:
+        """Up to ``k`` items (all backlogged items when None) in WRR
+        order — one admission tick's worth of queries."""
+        out = []
+        while k is None or len(out) < k:
+            item = self.pop_next()
+            if item is None:
+                break
+            out.append(item)
+        return out
+
+
 class ContinuousBatchScheduler:
     def __init__(self, max_batch: int):
         if max_batch < 1:

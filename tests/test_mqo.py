@@ -1,0 +1,389 @@
+"""Multi-query optimization: sub-DAG fingerprints, the subplan cache,
+cross-query CSE, single-flight dedup, vmapped query batching, tenant
+fairness, and the concurrent plan-cache counters."""
+import asyncio
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.adil import Analysis
+from repro.core.feedback import SelectivityFeedback
+from repro.core.ir import SystemCatalog, TensorT, standard_catalog, \
+    subdag_fingerprints
+from repro.core.ledger import FlightRecorder, MemoryLedger
+from repro.core.mqo import (SubplanCache, content_key, input_keys_for,
+                            mqo_run, split_at_frontier, subdag_keys)
+from repro.core.plan_cache import PlanCache
+from repro.serving import TenantScheduler
+from repro.stores import ColumnStore, store_engines
+
+SYS = SystemCatalog()
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+
+def _table(rng, rows=64):
+    return ColumnStore({"k": (np.arange(rows) % 16).astype(np.int32),
+                        "v": rng.rand(rows).astype(np.float32)})
+
+
+def _compile_agg(table, name="q", *, feedback=None, extra=0.0):
+    """rel_scan -> group_agg -> col_tensor (+``extra`` marks a variant)."""
+    with Analysis(name, standard_catalog()) as a:
+        t = a.op("rel_scan", a.bind("t", table))
+        g = a.op("rel_group_agg", t, key="k", num_groups=16,
+                 aggs=(("s", "sum", "v"),))
+        vec = a.op("col_tensor", g, col="s", dim="nodes")
+        if extra:
+            vec = a.op("residual_add", vec, vec)
+        a.store(vec)
+    kw = {"engines": store_engines(), "cache": False}
+    if feedback is not None:
+        kw["feedback"] = feedback
+    return a, a.compile(SYS, **kw)
+
+
+# --------------------------------------------------------------------------
+# sub-DAG fingerprint stability (ISSUE satellite)
+# --------------------------------------------------------------------------
+
+def test_subdag_fingerprints_are_stable_across_processes(rng):
+    """Same program, fresh interpreter: every node fingerprint matches —
+    the keys are content, not ids or iteration order."""
+    table = _table(rng)
+    _, fn = _compile_agg(table)
+    fps = fn.staged.subdag_fingerprints()
+    prog = (
+        "import numpy as np\n"
+        "from tests.test_mqo import _table, _compile_agg\n"
+        "rng = np.random.RandomState(7)\n"
+        "_, fn = _compile_agg(_table(rng))\n"
+        "fps = fn.staged.subdag_fingerprints()\n"
+        "print('\\n'.join(f'{k}={v}' for k, v in sorted(fps.items())))\n")
+    out = subprocess.run(
+        [sys.executable, "-c", prog], capture_output=True, text=True,
+        cwd=SRC.parent, env={"PYTHONPATH": f"{SRC}:{SRC.parent}",
+                             "JAX_PLATFORMS": "cpu", "PATH": "/usr/bin:/bin"},
+        check=True)
+    remote = dict(line.split("=", 1)
+                  for line in out.stdout.strip().splitlines())
+    assert remote == {str(k): v for k, v in fps.items()}
+
+
+def test_subdag_keys_miss_on_store_append(rng):
+    """An append bumps the store version; every key under that input
+    changes, so stale intermediates can never be hit."""
+    table = _table(rng)
+    a, fn = _compile_agg(table)
+    k0 = subdag_keys(fn, {"t": table.payload()},
+                     versions=a.store_versions())
+    table.append({"k": np.array([3], np.int32),
+                  "v": np.array([1.0], np.float32)})
+    k1 = subdag_keys(fn, {"t": table.payload()},
+                     versions=(("t", table.version),))
+    assert set(k0) == set(k1)
+    assert all(k0[n] != k1[n] for n in k0)   # version reaches every node
+
+
+def test_subdag_keys_miss_on_feedback_change(rng):
+    """A changed feedback fingerprint changes the staged plan's mqo_salt,
+    which reaches every sub-DAG key — calibration shifts invalidate."""
+    table = _table(rng)
+    fb = SelectivityFeedback()
+    _, f0 = _compile_agg(table, feedback=fb)
+    assert "none" in f0.staged.mqo_salt
+    fb.record(("sel_filter", "v", 64), 10, 64)
+    _, f1 = _compile_agg(table, feedback=fb)
+    assert f0.staged.mqo_salt != f1.staged.mqo_salt
+    ins = {"t": table.payload()}
+    k0 = subdag_keys(f0, ins, versions=(("t", 0),))
+    k1 = subdag_keys(f1, ins, versions=(("t", 0),))
+    assert all(k0[n] != k1[n] for n in k0 if n in k1)
+
+
+def test_subdag_keys_hit_across_different_programs(rng):
+    """Two textually different ADIL programs sharing the scan->agg subtree
+    produce the same keys under it (node ids never enter the hash), so
+    the second query reuses the first one's intermediates."""
+    table = _table(rng)
+    a1, f1 = _compile_agg(table, "prog_one")
+    a2, f2 = _compile_agg(table, "prog_two", extra=1.0)  # extra residual_add
+    ins = {"t": table.payload()}
+    k1 = subdag_keys(f1, ins, versions=a1.store_versions())
+    k2 = subdag_keys(f2, ins, versions=a2.store_versions())
+    shared = set(k1.values()) & set(k2.values())
+    assert len(shared) >= 3              # scan + agg + col_tensor at least
+    cache = SubplanCache(8 << 20, ledger=MemoryLedger())
+    out1, _ = mqo_run(f1, {}, ins, cache=cache,
+                      versions=a1.store_versions())
+    out2, info2 = mqo_run(f2, {}, ins, cache=cache,
+                          versions=a2.store_versions())
+    assert info2["shared_hits"] >= 1
+    ref = f2({}, ins)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out2))
+
+
+def test_mqo_run_bitwise_identical_and_residual_shrinks(rng):
+    table = _table(rng)
+    a, fn = _compile_agg(table)
+    ins = {"t": table.payload()}
+    ref = fn({}, ins)
+    cache = SubplanCache(8 << 20, ledger=MemoryLedger())
+    out1, i1 = mqo_run(fn, {}, ins, cache=cache,
+                       versions=a.store_versions())
+    out2, i2 = mqo_run(fn, {}, ins, cache=cache,
+                       versions=a.store_versions())
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out1))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out2))
+    assert i1["shared_hits"] == 0 and i2["shared_hits"] >= 1
+    assert i2["executed"] < i1["executed"]
+
+
+def test_input_keys_version_beats_content_and_uniq_never_collides():
+    keys = input_keys_for({"a": np.zeros(4), "b": np.zeros(4)},
+                          versions=(("a", 3),))
+    assert keys["a"] == "ver:a:3"
+    assert keys["b"].startswith("sha:")
+    # unhashable/too-large inputs get unique keys: no false sharing
+    big = np.zeros(1 << 23, np.int8)     # over the 4 MB hash cap
+    k1 = input_keys_for({"x": big})["x"]
+    k2 = input_keys_for({"x": big})["x"]
+    assert k1.startswith("uniq:") and k1 != k2
+    assert content_key({"q": np.arange(3)}) == \
+        content_key({"q": np.arange(3)})
+
+
+# --------------------------------------------------------------------------
+# SubplanCache: budget, ledger, invalidation, thrash trip
+# --------------------------------------------------------------------------
+
+def test_subplan_cache_byte_budget_evicts_lru():
+    led = MemoryLedger()
+    cache = SubplanCache(4 * 100, ledger=led)   # room for ~4 arrays
+    vals = {f"k{i}": np.zeros(25, np.float32) for i in range(6)}
+    for k, v in vals.items():
+        assert cache.insert(k, v)
+    assert cache.bytes_in_cache <= cache.byte_budget
+    assert cache.evictions >= 2
+    assert cache.lookup("k0") is None            # LRU victim
+    assert cache.lookup("k5") is not None
+    snap = led.snapshot()
+    assert snap["by_kind"]["subplan"] == cache.bytes_in_cache
+    cache.clear()
+    assert led.snapshot()["by_kind"].get("subplan", 0) == 0
+
+
+def test_subplan_cache_oversize_value_is_skipped():
+    cache = SubplanCache(64, ledger=MemoryLedger())
+    assert not cache.insert("big", np.zeros(1000, np.float32))
+    assert cache.oversize_skips == 1
+    assert len(cache) == 0
+
+
+def test_subplan_cache_note_store_evicts_stale_versions():
+    cache = SubplanCache(1 << 20, ledger=MemoryLedger())
+    cache.insert("old", np.ones(8), stores=(("t", 0),))
+    cache.insert("other", np.ones(8) * 2, stores=(("u", 5),))
+    assert cache.note_store("t", 1) == 1
+    assert cache.lookup("old") is None
+    assert cache.lookup("other") is not None
+    assert cache.version_evictions == 1
+
+
+def test_subplan_cache_thrash_trips_flight_recorder(tmp_path):
+    rec = FlightRecorder(dump_dir=tmp_path)
+    cache = SubplanCache(4 * 100, ledger=MemoryLedger(), recorder=rec,
+                         thrash_window=8, thrash_rate=0.5)
+    cache.note_frontier({"plan_id": "p", "shared_hits": 0, "executed": 9})
+    for i in range(40):                          # way past the budget
+        cache.insert(f"k{i}", np.zeros(25, np.float32))
+    assert cache.thrash_trips >= 1
+    dumps = list(tmp_path.glob("flight_*_subplan_thrash.jsonl"))
+    assert dumps, "thrash trip must dump the flight ring"
+    text = dumps[0].read_text()
+    assert "eviction_rate" in text and "frontiers" in text
+
+
+# --------------------------------------------------------------------------
+# PlanCache counters under concurrency (ISSUE satellite)
+# --------------------------------------------------------------------------
+
+def test_plan_cache_stats_atomic_under_contention(rng):
+    table = _table(rng)
+    pc = PlanCache(ledger=MemoryLedger())
+    _compile_agg(table)  # warm up compile machinery outside the threads
+    n_threads, per_thread = 8, 40
+    errs = []
+
+    def hammer(tid):
+        try:
+            for i in range(per_thread):
+                pid = f"plan_{tid}_{i % 5}"
+                pc.note_fingerprint(pid)
+                if pc.lookup(pid) is None:
+                    pc.insert(pid, ("payload", tid, i))
+                pc.stats()
+        except Exception as exc:          # pragma: no cover
+            errs.append(exc)
+
+    threads = [threading.Thread(target=hammer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    s = pc.stats()
+    total = n_threads * per_thread
+    # every lookup resolved to exactly one of hit/miss — no lost updates
+    assert s["hits"] + s["misses"] == total
+    assert s["misses"] == n_threads * 5          # 5 distinct ids per thread
+    assert s["size"] == n_threads * 5
+
+
+# --------------------------------------------------------------------------
+# TenantScheduler: weighted round-robin fairness
+# --------------------------------------------------------------------------
+
+def test_tenant_scheduler_wrr_is_weight_proportional():
+    sched = TenantScheduler({"gold": 3, "free": 1})
+    for i in range(40):
+        sched.enqueue(("gold", i), "gold")
+        sched.enqueue(("free", i), "free")
+    first = [sched.pop_next()[0] for _ in range(20)]
+    assert first.count("gold") == 15 and first.count("free") == 5
+    # smooth WRR interleaves rather than bursting
+    assert "free" in set(first[:4])
+
+
+def test_tenant_scheduler_idle_tenant_does_not_accrue_credit():
+    sched = TenantScheduler({"a": 1, "b": 1})
+    for i in range(4):
+        sched.enqueue(i, "a")
+    assert [sched.pop_next() for _ in range(4)] == [0, 1, 2, 3]
+    for i in range(4):                     # b arrives late: no stored burst
+        sched.enqueue(("b", i), "b")
+        sched.enqueue(("a", i + 4), "a")
+    picks = [sched.pop_next() for _ in range(4)]
+    assert sum(1 for p in picks if p[0] == "b") == 2   # 1:1, no burst
+    assert sched.drain() and sched.depth() == 0
+
+
+# --------------------------------------------------------------------------
+# run_analyses: dedup single-flight + vmapped batching (runtime path)
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def runtime():
+    from repro.configs import get_smoke_config
+    from repro.models import build_model
+    from repro.serving import AsyncServingRuntime
+    cfg = get_smoke_config("qwen3-0.6b").replace(dtype="float32")
+    model = build_model(cfg)
+    params, _ = model.init_params(jax.random.key(1))
+    return AsyncServingRuntime(model, params, max_batch=2, max_seq=32,
+                               plan_cache=PlanCache(),
+                               subplan_budget=16 << 20,
+                               tenant_weights={"gold": 3, "free": 1})
+
+
+def test_run_analyses_single_flights_identical_queries(rng, runtime):
+    from repro.serving import AnalysisRequest
+    table = _table(rng)
+    a, fn = _compile_agg(table, "dedup_q")
+    ins = {"t": table.payload()}
+    ref = fn({}, ins)
+    reqs = [AnalysisRequest(rid=i, planned=fn, inputs=ins, params={},
+                            tenant="gold" if i % 2 else "free",
+                            store_versions=a.store_versions())
+            for i in range(6)]
+    res = runtime.serve_analyses(reqs)
+    assert [r.rid for r in res] == list(range(6))
+    assert all(r.ok for r in res)
+    for r in res:
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(r.value))
+    assert sum(1 for r in res if r.deduped) == 5   # one leader computed
+    assert runtime.registry.count("analytics.deduped", 0) >= 5
+
+
+def test_run_analyses_batches_same_shape_queries(rng, runtime):
+    """Queries identical modulo the declared ``batch_param`` leaf coalesce
+    into ONE vmapped forward with bitwise-identical per-query results."""
+    from repro.serving import AnalysisRequest
+    table = _table(rng)
+    with Analysis("param_q", standard_catalog()) as a:
+        t = a.op("rel_scan", a.bind("t", table))
+        g = a.op("rel_group_agg", t, key="k", num_groups=16,
+                 aggs=(("s", "sum", "v"),))
+        vec = a.op("col_tensor", g, col="s", dim="nodes")
+        seed = a.input("seed", TensorT((16,), "float32", ("nodes",)))
+        a.store(a.op("residual_add", vec, seed))
+    fn = a.compile(SYS, engines=store_engines(), cache=False)
+    ins0 = {"t": table.payload()}
+    seeds = [jnp.asarray(rng.rand(16).astype(np.float32))
+             for _ in range(4)]
+    iso = [fn({}, {**ins0, "seed": s}) for s in seeds]
+    reqs = [AnalysisRequest(rid=f"b{i}", planned=fn,
+                            inputs={**ins0, "seed": s}, params={},
+                            batch_param="seed",
+                            store_versions=a.store_versions())
+            for i, s in enumerate(seeds)]
+    res = runtime.serve_analyses(reqs)
+    assert all(r.ok and r.batched for r in res)
+    for r, ref in zip(res, iso):
+        np.testing.assert_array_equal(np.asarray(ref), np.asarray(r.value))
+    assert runtime.registry.count("analytics.batched", 0) >= 4
+
+
+def test_run_analyses_concurrent_tasks_share_inflight_futures(rng, runtime):
+    """Two concurrently running run_analyses calls over the same query
+    single-flight through the in-flight future map."""
+    from repro.serving import AnalysisRequest
+    table = _table(rng)
+    a, fn = _compile_agg(table, "xtask_q")
+    ins = {"t": table.payload()}
+    sv = a.store_versions()
+
+    async def both():
+        r1 = runtime.run_analyses(
+            [AnalysisRequest(rid="t1", planned=fn, inputs=ins, params={},
+                             store_versions=sv)])
+        r2 = runtime.run_analyses(
+            [AnalysisRequest(rid="t2", planned=fn, inputs=ins, params={},
+                             store_versions=sv)])
+        return await asyncio.gather(r1, r2)
+
+    (a_res,), (b_res,) = asyncio.run(both())
+    assert a_res.ok and b_res.ok
+    np.testing.assert_array_equal(np.asarray(a_res.value),
+                                  np.asarray(b_res.value))
+
+
+def test_run_analysis_routes_through_subplan_cache(rng, runtime):
+    """The single-query entry point reuses cached sub-DAGs too (and stays
+    bitwise-identical to plain execution)."""
+    table = _table(rng)
+    a, fn = _compile_agg(table, "single_q")
+    ins = {"t": table.payload()}
+    ref = fn({}, ins)
+    hits0 = runtime.subplans.hits
+    r1 = runtime.run_analysis(fn, {}, ins,
+                              store_versions=a.store_versions())
+    r2 = runtime.run_analysis(fn, {}, ins,
+                              store_versions=a.store_versions())
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(r1))
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(r2))
+    assert runtime.subplans.hits > hits0
+
+
+def test_analytics_summary_reports_the_mqo_counters(runtime):
+    s = runtime.metrics.analytics_summary()
+    assert s["requests"] >= 1
+    assert "shared_hits" in s and "batched" in s and "deduped" in s
+    assert "p95_ttfr_ms" in s
+    assert "shared subplan hits" in runtime.metrics.analytics_report()

@@ -298,6 +298,38 @@ def test_runtime_matches_sequential_and_never_replans(rng):
     assert occ["slots_used"] == 0 and occ["pages_used"] == 0
 
 
+def test_batched_prefill_identical_token_streams(rng):
+    """Same-bucket waiting requests prefill as ONE vmapped planned forward
+    (multi-query satellite): token streams must be identical to the
+    sequential per-request prefill path."""
+    cfg, model, params = smoke_model()
+    lens = [7, 6, 5, 8]                       # one bucket (8) for all four
+    mk = lambda: [                                            # noqa: E731
+        ServeRequest(i, tuple(rng2.randint(0, cfg.vocab, n).tolist()), 6)
+        for i, n in enumerate(lens)]
+    rng2 = np.random.RandomState(3)
+    reqs_b = mk()
+    rng2 = np.random.RandomState(3)
+    reqs_s = mk()
+
+    rt_b = AsyncServingRuntime(model, params, max_batch=4, max_seq=32,
+                               plan_cache=PlanCache(), prefill_batch=4)
+    rt_b.warmup(lens)
+    res_b = rt_b.serve(reqs_b, timeout_s=120)
+    assert rt_b.registry.count("lm.batched_prefills", 0) >= 2
+
+    rt_s = AsyncServingRuntime(model, params, max_batch=4, max_seq=32,
+                               plan_cache=PlanCache(), prefill_batch=1)
+    rt_s.warmup(lens)
+    res_s = rt_s.serve(reqs_s, timeout_s=120)
+    assert rt_s.registry.count("lm.batched_prefills", 0) == 0
+    for a, b in zip(res_b, res_s):
+        assert a.status == "ok" and a.tokens == b.tokens
+    # pool fully drained after the batched-prefill trace
+    occ = rt_b.pool.occupancy()
+    assert occ["slots_used"] == 0 and occ["pages_used"] == 0
+
+
 def test_runtime_replay_fallback_for_recurrent_family(rng):
     cfg, model, params = smoke_model("rwkv6-3b")
     reqs = [ServeRequest(i, tuple(rng.randint(0, cfg.vocab, n).tolist()), 5)
