@@ -66,34 +66,45 @@ _SKIP_CACHE_IMPLS = frozenset({
 def content_key(value, *, max_bytes: int = _MAX_HASH_BYTES) -> Optional[str]:
     """sha256 over a small argument pytree's leaf bytes (dtype + shape +
     data, dict keys sorted); None when the pytree is too large to hash or
-    contains unhashable leaves."""
+    contains unhashable leaves.  Every leaf is framed with a type tag and
+    a terminator, and containers emit open/close markers, so adjacent
+    values can never run together: ``[1, 2]`` != ``[12]``, ``{}`` !=
+    ``[]``, ``[1.5, 2]`` != ``[1.52]``."""
     h = hashlib.sha256()
     total = 0
 
     def walk(v):
         nonlocal total
         if isinstance(v, dict):
+            h.update(b"{")
             for k in sorted(v):
-                h.update(repr(k).encode())
+                h.update(b"k:" + repr(k).encode() + b"=")
                 if not walk(v[k]):
                     return False
+            h.update(b"}")
             return True
         if isinstance(v, (list, tuple)):
+            h.update(b"[" if isinstance(v, list) else b"(")
             for x in v:
                 if not walk(x):
                     return False
+            h.update(b"]" if isinstance(v, list) else b")")
             return True
         if hasattr(v, "shape") and hasattr(v, "dtype"):
             a = np.asarray(v)
             total += a.nbytes
             if total > max_bytes:
                 return False
-            h.update(str(a.dtype).encode())
-            h.update(repr(a.shape).encode())
+            # dtype + shape frame the raw bytes: their length is fixed
+            # given the header, so no delimiter can be forged by data
+            h.update(b"a:" + str(a.dtype).encode()
+                     + b":" + repr(a.shape).encode() + b":")
             h.update(a.tobytes())
+            h.update(b";")
             return True
         if isinstance(v, (int, float, bool, str, bytes, type(None))):
-            h.update(repr(v).encode())
+            h.update(type(v).__name__.encode()
+                     + b":" + repr(v).encode() + b";")
             return True
         return False
 
@@ -122,6 +133,21 @@ def input_keys_for(inputs: Mapping[str, Any],
         keys[name] = ck if ck is not None else \
             f"uniq:{name}:{next(_uniq)}"
     return keys
+
+
+def params_key(params) -> str:
+    """Runtime identity of a query's parameter pytree.  Physical ops read
+    params through ``ctx.params_for`` (pp-attr bindings), so two queries
+    with equal plans and inputs but different params compute different
+    values — the params identity must reach every sub-DAG key.  Empty
+    params (the analytical common case) map to a constant so param-free
+    queries share freely; non-empty params are content-hashed when small,
+    and params too large to hash get a **unique** key — no sharing, but
+    never a false hit."""
+    if not params:
+        return "noparams"
+    ck = content_key(params)
+    return ck if ck is not None else f"uniq:params:{next(_uniq)}"
 
 
 class SubplanCache:
@@ -299,8 +325,7 @@ class SubplanCache:
 
     def clear(self) -> None:
         with self._lock:
-            for key in self._entries:
-                self.ledger.release(("subplan", key))
+            self.ledger.release_kind("subplan")
             self._entries.clear()
             self._sizes.clear()
             self._stores.clear()
@@ -338,16 +363,19 @@ class SubplanCache:
 
 
 def subdag_keys(planned, inputs: Mapping[str, Any], *,
-                versions: Any = (),
+                versions: Any = (), params: Any = None,
                 input_keys: Optional[Mapping[str, str]] = None) -> dict:
     """Runtime sub-DAG keys for one query: every concrete-plan node's
-    content hash with this call's input identities and the staged plan's
+    content hash with this call's input identities, params identity
+    (:func:`params_key` — ops read params through pp-attr bindings, so
+    params are as much an input as ``inputs``), and the staged plan's
     salt folded in.  ``planned`` is a PlannedFunction (or anything with
     ``concrete`` + optionally ``staged``)."""
     keys = dict(input_keys) if input_keys is not None else \
         input_keys_for(inputs, versions)
     staged = getattr(planned, "staged", None)
     salt = getattr(staged, "mqo_salt", "") if staged is not None else ""
+    salt = f"{salt}|{params_key(params)}"
     return subdag_fingerprints(planned.concrete, leaf_keys=keys, salt=salt)
 
 
@@ -357,26 +385,24 @@ def split_at_frontier(pplan, keys: Mapping[str, str],
     cache-hit nodes.  Returns ``(hits, residual)``: node id -> cached
     value for the frontier, and the (topo-ordered) residual node ids that
     still need executing.  A fully cached plan returns an empty
-    residual."""
+    residual.  The walk uses an explicit stack (like ``run_plan``/``topo``)
+    so plan depth never hits Python's recursion limit."""
     hits: dict = {}
     residual: list = []
     seen: set = set()
-
-    def visit(ref):
+    stack = list(pplan.outputs)
+    while stack:
+        ref = stack.pop()
         if ref in seen or ref not in pplan.nodes:
-            return                      # plan input, or already resolved
+            continue                    # plan input, or already resolved
         seen.add(ref)
         key = keys.get(ref)
         val = cache.lookup(key) if key is not None else None
         if val is not None:
             hits[ref] = val
-            return
-        for i in pplan.nodes[ref].inputs:
-            visit(i)
+            continue
         residual.append(ref)
-
-    for o in pplan.outputs:
-        visit(o)
+        stack.extend(pplan.nodes[ref].inputs)
     order = {n.id: i for i, n in enumerate(pplan.topo())}
     residual.sort(key=order.__getitem__)
     return hits, residual
@@ -401,7 +427,7 @@ def mqo_run(planned, params, inputs: Mapping[str, Any], *,
     pplan = planned.concrete
     if keys is None:
         keys = subdag_keys(planned, inputs, versions=versions,
-                           input_keys=input_keys)
+                           params=params, input_keys=input_keys)
     hits, residual = split_at_frontier(pplan, keys, cache)
     ctx = ExecContext(root=params, scope=params, aux=aux or {},
                       mesh=planned.mesh, rules=planned.rules,
@@ -425,5 +451,5 @@ def mqo_run(planned, params, inputs: Mapping[str, Any], *,
     return (outs if len(outs) > 1 else outs[0]), info
 
 
-__all__ = ["SubplanCache", "content_key", "input_keys_for", "subdag_keys",
-           "split_at_frontier", "mqo_run"]
+__all__ = ["SubplanCache", "content_key", "input_keys_for", "params_key",
+           "subdag_keys", "split_at_frontier", "mqo_run"]

@@ -209,6 +209,11 @@ class AsyncServingRuntime:
         self.analysis_sched = TenantScheduler(tenant_weights)
         self.analysis_tick = max(int(analysis_tick), 1)
         self._analysis_inflight: dict = {}  # root key -> asyncio.Future
+        # id(request) -> (results dict, t0) of the run_analyses call that
+        # owns it: concurrent calls share one tenant scheduler, so a tick
+        # may drain another call's request — settlement routes through the
+        # owning call's sink, never the draining call's
+        self._analysis_sinks: dict = {}
         # batched prefill: up to ``prefill_batch`` same-bucket waiting
         # requests prefill as ONE vmapped planned forward (1 disables);
         # deterministic fault replay needs per-request prefill sites, so
@@ -845,10 +850,14 @@ class AsyncServingRuntime:
 
     def _settle_analysis(self, req: AnalysisRequest, res: AnalysisResult,
                          results: dict, t0: float) -> None:
-        res.ttfr_ms = (time.perf_counter() - t0) * 1e3
+        # route to the owning run_analyses call's results dict (a tick may
+        # have drained a concurrent call's request); fall back to the
+        # draining call's dict for requests with no registered owner
+        sink, st0 = self._analysis_sinks.get(id(req), (results, t0))
+        res.ttfr_ms = (time.perf_counter() - st0) * 1e3
         self.registry.summary("analytics.ttfr_ms").observe(res.ttfr_ms)
         self.registry.count("analytics.requests")
-        results[req.rid] = res
+        sink[req.rid] = res
 
     async def _admit_analysis_tick(self, tick: list, results: dict,
                                    t0: float) -> None:
@@ -861,7 +870,8 @@ class AsyncServingRuntime:
         waiters: list = []       # (req, future of an in-flight twin)
         for req in tick:
             keys = subdag_keys(req.planned, req.inputs,
-                               versions=req.store_versions)
+                               versions=req.store_versions,
+                               params=req.params)
             root = self._root_key(req, keys)
             fut = self._analysis_inflight.get(root)
             if fut is not None and root not in groups:
@@ -954,23 +964,37 @@ class AsyncServingRuntime:
         structured, a loop timeout resolves stragglers)."""
         t0 = time.perf_counter()
         results: dict = {}
+        mine = {id(r) for r in requests}
         for r in requests:
+            self._analysis_sinks[id(r)] = (results, t0)
             self.analysis_sched.enqueue(r, r.tenant)
-        while len(results) < len(requests):
-            if time.perf_counter() - t0 > timeout_s:
-                for r in requests:
-                    if r.rid not in results:
-                        self._settle_analysis(r, AnalysisResult(
-                            r.rid, None, "error",
-                            {"reason": "timeout", "timeout_s": timeout_s}),
-                            results, t0)
-                break
-            tick = self.analysis_sched.drain(self.analysis_tick)
-            if not tick:
-                await asyncio.sleep(0.0005)
-                continue
-            await self._admit_analysis_tick(tick, results, t0)
-            await asyncio.sleep(0)
+        try:
+            # completion is scoped to THIS call's requests: a tick may
+            # settle a concurrent call's drained query into that call's
+            # sink (or pick up extras), so len(results) alone can't gate
+            while any(r.rid not in results for r in requests):
+                if time.perf_counter() - t0 > timeout_s:
+                    # pull this call's undrained stragglers out of the
+                    # shared tenant queues so a later call can't adopt
+                    # them, then resolve them with structured timeouts
+                    self.analysis_sched.purge(lambda item: id(item) in mine)
+                    for r in requests:
+                        if r.rid not in results:
+                            self._settle_analysis(r, AnalysisResult(
+                                r.rid, None, "error",
+                                {"reason": "timeout",
+                                 "timeout_s": timeout_s}),
+                                results, t0)
+                    break
+                tick = self.analysis_sched.drain(self.analysis_tick)
+                if not tick:
+                    await asyncio.sleep(0.0005)
+                    continue
+                await self._admit_analysis_tick(tick, results, t0)
+                await asyncio.sleep(0)
+        finally:
+            for r in requests:
+                self._analysis_sinks.pop(id(r), None)
         self._maybe_snapshot(force=True)
         return [results[r.rid] for r in requests]
 

@@ -85,6 +85,18 @@ class TenantScheduler:
         self.picks[best] = self.picks.get(best, 0) + 1
         return self.queues[best].popleft()
 
+    def purge(self, pred) -> list:
+        """Remove (and return) every queued item matching ``pred``.  A
+        timed-out ``run_analyses`` call purges its own stragglers so a
+        later call draining the shared queues can never adopt them."""
+        removed = []
+        for t, q in self.queues.items():
+            keep = deque()
+            for item in q:
+                (removed if pred(item) else keep).append(item)
+            self.queues[t] = keep
+        return removed
+
     def drain(self, k: Optional[int] = None) -> list:
         """Up to ``k`` items (all backlogged items when None) in WRR
         order — one admission tick's worth of queries."""

@@ -144,6 +144,59 @@ def test_mqo_run_bitwise_identical_and_residual_shrinks(rng):
     assert i2["executed"] < i1["executed"]
 
 
+def test_content_key_framing_never_collides():
+    """Leaves are type-tagged and delimited, containers emit open/close
+    markers — adjacent scalars can't run together into a twin digest."""
+    assert content_key([1, 2]) != content_key([12])
+    assert content_key({}) != content_key([])
+    assert content_key([1.5, 2]) != content_key([1.52])
+    assert content_key((1, 2)) != content_key([1, 2])
+    assert content_key([1, [2]]) != content_key([[1], 2])
+    assert content_key({"a": 1}) != content_key({"a": "1"})
+    assert content_key("1") != content_key(1)
+    assert content_key(1) != content_key(True)
+    assert content_key(None) != content_key([None])
+    assert content_key([np.arange(3)]) != \
+        content_key([np.arange(3).astype(np.int8)])
+
+
+def test_subdag_keys_fold_in_params_identity(rng):
+    """Physical ops read params through pp-attr bindings, so two queries
+    with equal plans/inputs but different params must never share keys
+    (or subplan-cache entries).  Empty params keep the param-free keys."""
+    table = _table(rng)
+    a, fn = _compile_agg(table)
+    ins = {"t": table.payload()}
+    sv = a.store_versions()
+    k0 = subdag_keys(fn, ins, versions=sv, params={"w": 1.0})
+    k1 = subdag_keys(fn, ins, versions=sv, params={"w": 2.0})
+    kn = subdag_keys(fn, ins, versions=sv)
+    assert all(k0[n] != k1[n] for n in k0)
+    assert all(kn[n] != k0[n] for n in kn)
+    assert subdag_keys(fn, ins, versions=sv, params={}) == kn
+    # the CSE pass keys on params too: no cross-params hit
+    cache = SubplanCache(8 << 20, ledger=MemoryLedger())
+    _, i1 = mqo_run(fn, {"w": 1.0}, ins, cache=cache, versions=sv)
+    _, i2 = mqo_run(fn, {"w": 2.0}, ins, cache=cache, versions=sv)
+    assert i1["shared_hits"] == 0 and i2["shared_hits"] == 0
+
+
+def test_split_at_frontier_survives_deep_plans():
+    """The frontier walk is an explicit stack: a chain deeper than
+    Python's recursion limit splits without RecursionError."""
+    from types import SimpleNamespace
+    depth = sys.getrecursionlimit() + 500
+    nodes = {0: SimpleNamespace(id=0, inputs=("in",))}
+    for i in range(1, depth):
+        nodes[i] = SimpleNamespace(id=i, inputs=(i - 1,))
+    pplan = SimpleNamespace(
+        nodes=nodes, outputs=(depth - 1,),
+        topo=lambda: [nodes[i] for i in range(depth)])
+    cache = SubplanCache(1 << 20, ledger=MemoryLedger())
+    hits, residual = split_at_frontier(pplan, {}, cache)
+    assert not hits and residual == list(range(depth))
+
+
 def test_input_keys_version_beats_content_and_uniq_never_collides():
     keys = input_keys_for({"a": np.zeros(4), "b": np.zeros(4)},
                           versions=(("a", 3),))
@@ -362,6 +415,68 @@ def test_run_analyses_concurrent_tasks_share_inflight_futures(rng, runtime):
     assert a_res.ok and b_res.ok
     np.testing.assert_array_equal(np.asarray(a_res.value),
                                   np.asarray(b_res.value))
+
+
+def test_run_analyses_distinct_params_are_not_deduped(rng, runtime):
+    """Same plan + inputs, different params: root keys differ, so neither
+    single-flight dedup nor the in-flight future map may fuse them."""
+    from repro.serving import AnalysisRequest
+    table = _table(rng)
+    a, fn = _compile_agg(table, "params_q")
+    ins = {"t": table.payload()}
+    reqs = [AnalysisRequest(rid=f"p{i}", planned=fn, inputs=ins,
+                            params={"w": float(i)},
+                            store_versions=a.store_versions())
+            for i in range(2)]
+    res = runtime.serve_analyses(reqs)
+    assert all(r.ok for r in res)
+    assert not any(r.deduped for r in res)
+
+
+def test_run_analyses_timeout_purges_stragglers(rng, runtime):
+    """A timed-out call pulls its own queued requests back out of the
+    shared tenant queues (structured timeout errors, nothing lingering)
+    and a later call on the same runtime serves only its own work."""
+    from repro.serving import AnalysisRequest
+    table = _table(rng)
+    a, fn = _compile_agg(table, "timeout_q")
+    ins = {"t": table.payload()}
+    sv = a.store_versions()
+    reqs = [AnalysisRequest(rid=f"to{i}", planned=fn, inputs=ins,
+                            params={}, store_versions=sv)
+            for i in range(3)]
+    res = runtime.serve_analyses(reqs, timeout_s=0.0)
+    assert [r.rid for r in res] == ["to0", "to1", "to2"]
+    assert all(not r.ok and r.error["reason"] == "timeout" for r in res)
+    assert runtime.analysis_sched.depth() == 0
+    res2 = runtime.serve_analyses(
+        [AnalysisRequest(rid="after", planned=fn, inputs=ins, params={},
+                         store_versions=sv)])
+    assert len(res2) == 1 and res2[0].ok
+
+
+def test_run_analyses_does_not_adopt_orphan_stragglers(rng, runtime):
+    """A leftover queue entry from another (dead) caller must not count
+    toward a new call's completion: the loop is scoped to its own rids,
+    so the fresh request still resolves."""
+    from repro.serving import AnalysisRequest
+    table = _table(rng)
+    a, fn = _compile_agg(table, "orphan_q")
+    ins = {"t": table.payload()}
+    sv = a.store_versions()
+    orphan = AnalysisRequest(rid="orphan", planned=fn, inputs=ins,
+                             params={}, tenant="free", store_versions=sv)
+    runtime.analysis_sched.enqueue(orphan, orphan.tenant)
+    old_tick = runtime.analysis_tick
+    runtime.analysis_tick = 1          # one query per tick: the orphan
+    try:                               # settles first, alone in its tick
+        res = runtime.serve_analyses(
+            [AnalysisRequest(rid="fresh", planned=fn, inputs=ins,
+                             params={}, store_versions=sv)])
+    finally:
+        runtime.analysis_tick = old_tick
+    assert [r.rid for r in res] == ["fresh"] and res[0].ok
+    assert runtime.analysis_sched.depth() == 0
 
 
 def test_run_analysis_routes_through_subplan_cache(rng, runtime):
